@@ -1,0 +1,131 @@
+"""Shared benchmark plumbing: tiny federated runs matching the paper's
+experimental axes (sampling schedule x masking mode x rate), scaled to CPU.
+
+Every figure module exposes ``run() -> list[dict]`` rows; ``run.py`` prints
+them as CSV and writes results/benchmarks.json.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ClientConfig, DynamicSampling, FederatedConfig,
+                        FederatedServer, MaskingConfig, StaticSampling)
+from repro.data import (class_gaussian_images, iid_partition_images,
+                        markov_text, partition_text)
+from repro.models import (classifier_accuracy, classifier_loss, init_gru_lm,
+                          init_lenet, init_vgg, gru_lm_loss, lenet_forward,
+                          perplexity, vgg_forward)
+
+NUM_CLIENTS = 8
+IMG_SIZE = 12
+LM_VOCAB = 256
+
+
+@functools.lru_cache()
+def mnist_like(seed: int = 0):
+    d = class_gaussian_images(num_train=NUM_CLIENTS * 128, num_test=512,
+                              image_size=IMG_SIZE, channels=1, noise=0.6,
+                              seed=seed)
+    xs, ys, n = iid_partition_images(d.train_x, d.train_y, NUM_CLIENTS, 16,
+                                     seed=seed)
+    return ((jnp.asarray(xs), jnp.asarray(ys)), n,
+            (jnp.asarray(d.test_x), jnp.asarray(d.test_y)))
+
+
+@functools.lru_cache()
+def cifar_like(seed: int = 0):
+    d = class_gaussian_images(num_train=NUM_CLIENTS * 96, num_test=384,
+                              image_size=16, channels=3, noise=0.6, seed=seed)
+    xs, ys, n = iid_partition_images(d.train_x, d.train_y, NUM_CLIENTS, 16,
+                                     seed=seed)
+    return ((jnp.asarray(xs), jnp.asarray(ys)), n,
+            (jnp.asarray(d.test_x), jnp.asarray(d.test_y)))
+
+
+@functools.lru_cache()
+def wikitext_like(seed: int = 0):
+    d = markov_text(num_train=NUM_CLIENTS * 3200, num_test=4096,
+                    vocab_size=LM_VOCAB, seed=seed)
+    x, y, n = partition_text(d.train_tokens, NUM_CLIENTS, 8, 24, seed=seed)
+    tx = d.test_tokens[: (len(d.test_tokens) - 1) // 24 * 24 + 1]
+    ex = tx[:-1].reshape(-1, 24)[:64]
+    ey = tx[1:].reshape(-1, 24)[:64]
+    return ((jnp.asarray(x), jnp.asarray(y)), n,
+            (jnp.asarray(ex), jnp.asarray(ey)))
+
+
+def make_schedule(kind: str, beta: float = 0.0, rate: float = 1.0):
+    if kind == "dynamic":
+        return DynamicSampling(initial_rate=rate, beta=beta)
+    return StaticSampling(initial_rate=rate)
+
+
+def run_federated(model: str, schedule, masking: MaskingConfig, rounds: int,
+                  lr: float = 0.05, seed: int = 0,
+                  error_feedback: bool = False) -> Dict:
+    """One federated training run; returns summary metrics."""
+    if model == "lenet":
+        batches, n, eval_data = mnist_like(seed)
+        params = init_lenet(jax.random.PRNGKey(seed), IMG_SIZE, 1)
+        loss_fn = classifier_loss(lenet_forward)
+        eval_fn = jax.jit(classifier_accuracy(lenet_forward))
+        metric = "accuracy"
+    elif model == "vgg":
+        batches, n, eval_data = cifar_like(seed)
+        params = init_vgg(jax.random.PRNGKey(seed), 16, 3,
+                          widths=(16, 32, 64))
+        loss_fn = classifier_loss(vgg_forward)
+        eval_fn = jax.jit(classifier_accuracy(vgg_forward))
+        metric = "accuracy"
+    elif model == "gru":
+        batches, n, eval_data = wikitext_like(seed)
+        params = init_gru_lm(jax.random.PRNGKey(seed), LM_VOCAB, 64, 64)
+        loss_fn = gru_lm_loss
+        eval_fn = jax.jit(perplexity)
+        metric = "perplexity"
+    else:
+        raise ValueError(model)
+
+    cfg = FederatedConfig(
+        num_clients=NUM_CLIENTS,
+        client=ClientConfig(local_epochs=1, learning_rate=lr,
+                            masking=masking),
+        error_feedback=error_feedback)
+    server = FederatedServer(loss_fn, schedule, cfg, params, eval_fn=eval_fn)
+    t0 = time.time()
+    server.run(batches, n, rounds, eval_every=rounds, eval_data=eval_data)
+    s = server.summary()
+    return {
+        "metric": metric,
+        "final_eval": s["final_eval"],
+        "final_loss": s["final_loss"],
+        "transport_units": s["transport_units"],
+        "transport_GB": s["transport_GB"],
+        "rounds": rounds,
+        "wall_s": round(time.time() - t0, 2),
+    }
+
+
+def fmt_rows(rows: List[Dict]) -> str:
+    if not rows:
+        return ""
+    keys: List[str] = []
+    for r in rows:                      # union, first-seen order
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    out = [",".join(keys)]
+    for r in rows:
+        vals = []
+        for k in keys:
+            v = r.get(k, "")
+            vals.append(f"{v:.4f}" if isinstance(v, float) else str(v))
+        out.append(",".join(vals))
+    return "\n".join(out)

@@ -1,0 +1,20 @@
+"""Paper Fig. 3: static vs dynamic sampling (beta 0.01 / 0.1) on LeNet —
+accuracy and transport cost after 10 / 30 rounds of federated training."""
+
+from repro.core import MaskingConfig
+
+from benchmarks.common import make_schedule, run_federated
+
+
+def run():
+    rows = []
+    none = MaskingConfig(mode="none")
+    for rounds in (10, 30):
+        for name, sched in [
+                ("static", make_schedule("static")),
+                ("dynamic_b0.01", make_schedule("dynamic", 0.01)),
+                ("dynamic_b0.1", make_schedule("dynamic", 0.1))]:
+            r = run_federated("lenet", sched, none, rounds)
+            rows.append({"figure": "fig3", "sampling": name,
+                         "rounds": rounds, **r})
+    return rows

@@ -1,0 +1,18 @@
+"""Paper Fig. 4: random vs selective masking, masking rate (fraction KEPT)
+0.1..0.9, static sampling, 10 rounds, LeNet."""
+
+from repro.core import MaskingConfig
+
+from benchmarks.common import make_schedule, run_federated
+
+
+def run():
+    rows = []
+    sched = make_schedule("static", rate=1.0)
+    for gamma in (0.1, 0.3, 0.5, 0.7, 0.9):
+        for mode in ("random", "selective"):
+            r = run_federated("lenet", sched,
+                              MaskingConfig(mode=mode, gamma=gamma),
+                              rounds=10)
+            rows.append({"figure": "fig4", "mode": mode, "gamma": gamma, **r})
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Figs. 6-7: VGG on CIFAR-like data.
+
+Fig. 6: random vs selective masking across masking rates, static sampling.
+Fig. 7: effect of the dynamic-sampling decay coefficient under masking."""
+
+from repro.core import MaskingConfig
+
+from benchmarks.common import make_schedule, run_federated
+
+
+def run():
+    rows = []
+    sched = make_schedule("static", rate=1.0)
+    for gamma in (0.1, 0.4, 0.7):                       # fig 6
+        for mode in ("random", "selective"):
+            r = run_federated("vgg", sched,
+                              MaskingConfig(mode=mode, gamma=gamma),
+                              rounds=12, lr=0.25)
+            rows.append({"figure": "fig6", "mode": mode, "gamma": gamma, **r})
+
+    for beta in (0.01, 0.1, 0.5):                       # fig 7
+        for mode in ("random", "selective"):
+            r = run_federated("vgg", make_schedule("dynamic", beta),
+                              MaskingConfig(mode=mode, gamma=0.5),
+                              rounds=12, lr=0.25)
+            rows.append({"figure": "fig7", "mode": mode, "beta": beta,
+                         "gamma": 0.5, **r})
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Figs. 8-9: GRU language model (tied embeddings) on the WikiText-2
+stand-in.
+
+Fig. 8: static vs dynamic sampling under masking (perplexity, lower=better).
+Fig. 9: random vs selective masking across masking rates."""
+
+from repro.core import MaskingConfig
+
+from benchmarks.common import make_schedule, run_federated
+
+
+def run():
+    rows = []
+    for beta in (0.0, 0.1, 0.5):                        # fig 8 (0 = static)
+        sched = make_schedule("dynamic" if beta else "static", beta)
+        for gamma in (0.3, 0.7):
+            r = run_federated("gru", sched,
+                              MaskingConfig(mode="selective", gamma=gamma),
+                              rounds=12, lr=0.25)
+            rows.append({"figure": "fig8",
+                         "sampling": f"beta{beta}" if beta else "static",
+                         "gamma": gamma, **r})
+
+    sched = make_schedule("static", rate=1.0)           # fig 9
+    for gamma in (0.1, 0.3, 0.5, 0.9):
+        for mode in ("random", "selective"):
+            r = run_federated("gru", sched,
+                              MaskingConfig(mode=mode, gamma=gamma),
+                              rounds=12, lr=0.25)
+            rows.append({"figure": "fig9", "mode": mode, "gamma": gamma, **r})
+    return rows

@@ -1,0 +1,44 @@
+"""Masking micro-benchmarks: Pallas kernel pipeline (interpret mode on this
+CPU container; compiled on TPU) vs the pure-jnp bisection vs the exact sort,
+plus the analytic sweep-count accounting that matters on TPU (the kernel
+does 1 histogram + ``iters`` count sweeps + 1 apply = ``iters+2`` HBM passes
+vs ``2*iters+1`` for pure bisection and a full sort for the oracle)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import selective_mask_exact, selective_mask_threshold
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()               # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    for n in (1 << 16, 1 << 20):
+        x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+        gamma = 0.1
+        t_sort = _time(jax.jit(
+            lambda x: selective_mask_exact(x, gamma)), x)
+        t_bisect = _time(jax.jit(
+            lambda x: selective_mask_threshold(x, gamma, 24)), x)
+        t_kernel = _time(
+            lambda x: ops.topk_mask(x, gamma, interpret=True), x)
+        rows.append({
+            "figure": "kernels", "n": n, "gamma": gamma,
+            "sort_us": round(t_sort, 1),
+            "bisect_us": round(t_bisect, 1),
+            "kernel_interpret_us": round(t_kernel, 1),
+            "kernel_hbm_sweeps": 8 + 2,
+            "bisect_hbm_sweeps": 2 * 24 + 1,
+        })
+    return rows

@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md §Roofline tables from results/dryrun*/ JSONs.
+
+  PYTHONPATH=src python -m benchmarks.make_tables [--dir results/dryrun_baseline]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def rows_from(dir_, multi_pod=None, fed=None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(f))
+        if multi_pod is not None and r.get("multi_pod", False) != multi_pod:
+            continue
+        if fed is not None and r.get("fed", False) != fed:
+            continue
+        out.append(r)
+    out.sort(key=lambda r: (r["arch"], r["shape"]))
+    return out
+
+
+def md_table(recs, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | compute s | memory s | collective s "
+             "(raw / bf16-comm) | dominant | useful | HBM GB/dev (fits) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        t = r["roofline"]
+        m = r["memory"]
+        adj = t.get("collective_s_bf16comm")
+        coll = (f"{t['collective_s']:.2f} / {adj:.2f}" if adj is not None
+                else f"{t['collective_s']:.2f}")
+        hbm = (m["argument_bytes"] + m["temp_bytes"]) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']}{' (fed)' if r.get('fed') else ''} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.2f} | {coll} "
+            f"| {t['dominant'].replace('_s', '')} "
+            f"| {t['useful_flop_fraction']:.2f} "
+            f"| {hbm:.1f} ({'Y' if m['fits_hbm'] else 'n'}) |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun_baseline")
+    ap.add_argument("--mp-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    print(md_table(rows_from(args.dir, fed=False),
+                   "Single-pod 16x16 baselines (paper-faithful system)"))
+    mp = rows_from(args.mp_dir, multi_pod=True, fed=False)
+    if mp:
+        print(md_table(mp, "Multi-pod 2x16x16 (proves the pod axis shards; "
+                           "includes perf iterations 1-2)"))
+    fed = rows_from(args.mp_dir, fed=True)
+    if fed:
+        print(md_table(fed, "Federated round (the paper's technique at pod "
+                            "scale)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Roofline reader: aggregates results/dryrun/*.json into the §Roofline
+table (EXPERIMENTS.md).  Pure report — run the dry-run first."""
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs, multi_pod=False, fed=None):
+    rows = []
+    for r in recs:
+        if r.get("multi_pod", False) != multi_pod:
+            continue
+        if fed is not None and r.get("fed", False) != fed:
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "fed": r.get("fed", False),
+            "compute_s": round(t["compute_s"], 4),
+            "memory_s": round(t["memory_s"], 4),
+            "collective_s": round(t["collective_s"], 4),
+            "dominant": t["dominant"].replace("_s", ""),
+            "useful_flops": round(t["useful_flop_fraction"], 3),
+            "hbm_GB_dev": round((r["memory"]["argument_bytes"] +
+                                 r["memory"]["temp_bytes"]) / 1e9, 1),
+            "fits": r["memory"]["fits_hbm"],
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def run():
+    recs = load()
+    rows = []
+    for mp in (False, True):
+        for r in table(recs, multi_pod=mp):
+            rows.append({"figure": "roofline",
+                         "mesh": "2x16x16" if mp else "16x16", **r})
+    return rows
+
+
+def main():
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))
+
+
+if __name__ == "__main__":
+    main()

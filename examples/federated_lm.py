@@ -1,0 +1,88 @@
+"""End-to-end driver: federated training of a (reduced) qwen2-family LM with
+dynamic sampling + selective masking — the paper's technique applied to a
+modern transformer through the pod-scale round (launch/fedtrain), a few
+hundred steps of client SGD in total.
+
+  PYTHONPATH=src python examples/federated_lm.py [--rounds 20] [--clients 8]
+
+This is the "train ~100M-class model for a few hundred steps" example: the
+default reduced qwen2-1.5b (2 layers, d=256) over 8 clients x 25 rounds x
+2 local steps = 400 client SGD steps; pass --full-layers to scale depth up.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core.sampling import DynamicSampling, participation_mask
+from repro.data import markov_text, partition_text
+from repro.launch.fedtrain import FedPodConfig, make_fed_round
+from repro.models import transformer as tr
+from repro.models.transformer import cross_entropy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--gamma", type=float, default=0.2)
+    ap.add_argument("--beta", type=float, default=0.05)
+    ap.add_argument("--lr", type=float, default=0.3)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    C, S = args.clients, args.local_steps
+    fed_cfg = FedPodConfig(num_clients=C, local_steps=S,
+                           learning_rate=args.lr, gamma=args.gamma)
+    schedule = DynamicSampling(initial_rate=1.0, beta=args.beta)
+    fed_round = jax.jit(make_fed_round(cfg, fed_cfg))
+
+    data = markov_text(num_train=C * args.rounds * S * args.batch * args.seq
+                       + args.seq, vocab_size=min(cfg.vocab_size, 512),
+                       seed=0)
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    n_samples = jnp.ones((C,), jnp.float32)
+    key = jax.random.PRNGKey(1)
+
+    # eval batch
+    ev = data.test_tokens[: 16 * args.seq + 1]
+    ev_x = jnp.asarray(ev[:-1].reshape(16, args.seq)) % cfg.vocab_size
+    ev_y = jnp.asarray(ev[1:].reshape(16, args.seq)) % cfg.vocab_size
+
+    @jax.jit
+    def eval_ppl(p):
+        logits, _ = tr.forward(p, cfg, ev_x)
+        return jnp.exp(cross_entropy(logits, ev_y))
+
+    toks = data.train_tokens
+    per_round = C * S * args.batch * args.seq
+    total_transport = 0.0
+    for t in range(1, args.rounds + 1):
+        key, k_part, k_mask = jax.random.split(key, 3)
+        part = participation_mask(k_part, schedule, t, C)
+        w = toks[(t - 1) * per_round: t * per_round + 1]
+        x = (w[:-1].reshape(C, S, args.batch, args.seq) % cfg.vocab_size)
+        y = (w[1:].reshape(C, S, args.batch, args.seq) % cfg.vocab_size)
+        batches = {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+        t0 = time.time()
+        params, m = fed_round(params, batches, n_samples, part, k_mask)
+        total_transport += float(m["num_sampled"]) * fed_cfg.gamma
+        if t % 5 == 0 or t == 1:
+            print(f"round {t:3d}: sampled={int(m['num_sampled'])}/{C} "
+                  f"loss={float(m['mean_loss']):.3f} "
+                  f"eval_ppl={float(eval_ppl(params)):.1f} "
+                  f"transport={total_transport:.1f}u "
+                  f"dt={time.time() - t0:.2f}s", flush=True)
+    print(f"done: total transport {total_transport:.1f} full-model units "
+          f"(dense-static would be {args.rounds * C * 1.0:.0f})")
+
+
+if __name__ == "__main__":
+    main()

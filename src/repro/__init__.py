@@ -1,0 +1,3 @@
+"""repro: communication-efficient federated learning in JAX (Ji et al. 2020)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Pytree checkpointing (npz + json manifest), no external deps."""
+
+from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint, latest_step

@@ -1,0 +1,105 @@
+"""Minimal but real checkpointing: flat-key npz payloads + json manifest.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json (treedef, dtypes, step).
+Atomicity: written to a tmp dir then os.rename'd, so a crash never leaves a
+half-written step visible to ``latest_step``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_SEP = "||"
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = [jax.tree_util.keystr(path) for path, _ in flat]
+    vals = [np.asarray(v) for _, v in flat]
+    return keys, vals, treedef
+
+
+def _to_savable(v: np.ndarray) -> np.ndarray:
+    """npz cannot hold ml_dtypes (bfloat16 etc.); store as a uint view and
+    restore from the manifest dtype."""
+    if v.dtype.kind == "V" or str(v.dtype) in ("bfloat16", "float8_e4m3fn",
+                                               "float8_e5m2"):
+        return v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+    return v
+
+
+def _from_savable(v: np.ndarray, dtype_str: str) -> np.ndarray:
+    if str(v.dtype) != dtype_str:
+        import ml_dtypes
+        return v.view(np.dtype(getattr(ml_dtypes, dtype_str)))
+    return v
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
+                    extra: Optional[dict] = None) -> str:
+    keys, vals, _ = _flatten_with_paths(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"a{i}": _to_savable(v) for i, v in enumerate(vals)})
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "dtypes": [str(v.dtype) for v in vals],
+        "shapes": [list(v.shape) for v in vals],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, like: PyTree,
+                       step: Optional[int] = None) -> Tuple[PyTree, int, dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    vals = [_from_savable(data[f"a{i}"], manifest["dtypes"][i])
+            for i in range(len(manifest["keys"]))]
+
+    keys_like, vals_like, treedef = _flatten_with_paths(like)
+    if keys_like != manifest["keys"]:
+        raise ValueError("checkpoint structure mismatch: "
+                         f"{set(keys_like) ^ set(manifest['keys'])}")
+    for k, a, b in zip(keys_like, vals, vals_like):
+        if tuple(a.shape) != tuple(b.shape):
+            raise ValueError(f"shape mismatch at {k}: {a.shape} vs {b.shape}")
+    restored = jax.tree_util.tree_unflatten(
+        treedef, [v if v.dtype == b.dtype else v.astype(b.dtype)
+                  for v, b in zip(vals, vals_like)])
+    return restored, manifest["step"], manifest.get("extra", {})

@@ -1,0 +1,24 @@
+"""Hymba-1.5B [arXiv:2411.13676] — hybrid-head: parallel attention + Mamba
+(SSM state=16) heads in every layer; SWA in most layers, 3 full-attention.
+Pattern: [full, sliding x15] approximated as 1 full : 15 sliding (32L = 2x16)."""
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+_PATTERN = (LayerSpec(kind="hymba", attn="full"),) + tuple(
+    LayerSpec(kind="hymba", attn="sliding", window=1024) for _ in range(15))
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="arXiv:2411.13676",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32_001,
+    layer_pattern=_PATTERN,
+    ssm_state=16,
+    sub_quadratic=True,     # SSM branch carries long context; 2 full layers seq-sharded
+)

@@ -1,0 +1,22 @@
+"""InternVL2-26B [arXiv:2404.16821] — InternLM2-20B language backbone
+(48L, GQA 48H/8KV); InternViT-6B vision encoder is STUBBED: input_specs()
+feeds 256 projected patch embeddings per image alongside text tokens."""
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16_384,
+    vocab_size=92_553,
+    layer_pattern=(LayerSpec(kind="attn", attn="full"),),
+    rope_theta=1_000_000.0,
+    modality="vision_stub",
+    num_prefix_embeddings=256,   # ViT patch embeddings, precomputed
+)

@@ -1,0 +1,33 @@
+"""Llama-4 Maverick 400B-A17B [hf:meta-llama/Llama-4-Scout-17B-16E family] —
+MoE 128 routed experts top-1 + 1 shared expert on ALTERNATING layers
+(interleave_moe_layer_step=2, dense d_ff=16384 on the others), iRoPE-style
+interleaved chunked(8k)/full attention (3:1), early-fusion multimodal
+(text backbone here).  ~400B total / ~17B active."""
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16_384,            # dense-layer ffn
+    vocab_size=202_048,
+    layer_pattern=(
+        LayerSpec(kind="attn", attn="chunked", window=8192, mlp="moe"),
+        LayerSpec(kind="attn", attn="chunked", window=8192, mlp="dense"),
+        LayerSpec(kind="attn", attn="chunked", window=8192, mlp="moe"),
+        LayerSpec(kind="attn", attn="full", mlp="dense"),
+    ),
+    moe_experts=128,
+    moe_topk=1,
+    moe_shared_experts=1,
+    moe_d_ff=8192,          # per-expert hidden (spec d_ff=8192)
+    moe_shared_d_ff=8192,
+    sub_quadratic=True,     # chunked-attention layers; full layers seq-sharded
+    param_dtype_train="bfloat16",   # 400B: bf16 params + Adafactor on 256 chips
+)

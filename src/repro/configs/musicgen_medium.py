@@ -1,0 +1,24 @@
+"""MusicGen-medium [arXiv:2306.05284] — decoder-only LM over EnCodec tokens,
+4 parallel codebooks (delay pattern handled by the data layer); the EnCodec
+conv codec is STUBBED: input_specs() feeds 4-codebook token grids.
+MHA (24H/24KV), LayerNorm, plain GELU MLP (Audiocraft transformer)."""
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    source="arXiv:2306.05284",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    layer_pattern=(LayerSpec(kind="attn", attn="full"),),
+    gated_mlp=False,
+    act="gelu",
+    norm="layernorm",
+    modality="audio_stub",
+    num_codebooks=4,
+)

@@ -1,0 +1,16 @@
+"""Paper core: dynamic sampling + selective masking for federated learning."""
+
+from repro.core.sampling import (
+    StaticSampling, DynamicSampling, SamplingSchedule,
+    participation_mask, sample_clients, transport_cost,
+)
+from repro.core.masking import (
+    MaskingConfig, random_mask, selective_mask_exact,
+    selective_mask_threshold, mask_pytree,
+)
+from repro.core.client import ClientConfig, client_update, local_sgd
+from repro.core.federated import FederatedConfig, make_federated_round, fedavg_aggregate
+from repro.core.server import FederatedServer, RoundRecord
+from repro.core.compression import (
+    payload_bytes, pytree_payload_bytes, encode_sparse, decode_sparse,
+)

@@ -1,0 +1,141 @@
+"""Sparse payload encoding + byte accounting for masked uploads.
+
+The paper states masked models are "compressed when uploaded" but does not fix
+an encoding.  We implement the two standard ones and meter both:
+
+* **bitmap**   — 1 bit/parameter membership + gamma*P dense values.
+* **coordinate** — gamma*P (index, value) pairs, 4-byte int32 indices.
+
+Bitmap wins whenever gamma > value_bits/ (index_bits) ≈ 1/32 for fp32+int32,
+so the cost model picks the cheaper automatically (``encoding="auto"``).
+This byte accounting feeds the §Roofline collective term for the technique
+(DESIGN.md §3.2) and the transport-cost numbers in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = [
+    "payload_bytes",
+    "pytree_num_params",
+    "pytree_payload_bytes",
+    "encode_sparse",
+    "decode_sparse",
+    "CompressionStats",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionStats:
+    dense_bytes: int
+    sparse_bytes: int
+    encoding: str
+
+    @property
+    def ratio(self) -> float:
+        return self.sparse_bytes / max(self.dense_bytes, 1)
+
+
+def payload_bytes(num_params: int, gamma: float, value_bytes: int = 4,
+                  encoding: str = "auto") -> Tuple[int, str]:
+    """Bytes to ship ``gamma * num_params`` kept values of one tensor."""
+    kept = int(round(gamma * num_params))
+    dense = num_params * value_bytes
+    if gamma >= 1.0:
+        return dense, "dense"
+    bitmap = kept * value_bytes + (num_params + 7) // 8
+    coord = kept * (value_bytes + 4)
+    if encoding == "bitmap":
+        return bitmap, "bitmap"
+    if encoding == "coordinate":
+        return coord, "coordinate"
+    if encoding == "auto":
+        return (bitmap, "bitmap") if bitmap <= coord else (coord, "coordinate")
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+def pytree_num_params(tree: PyTree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def pytree_payload_bytes(tree: PyTree, gamma: float, min_leaf_size: int = 256,
+                         value_bytes: int = 4) -> CompressionStats:
+    """Account a full model upload under per-leaf masking (small leaves dense)."""
+    dense = 0
+    sparse = 0
+    enc = "dense"
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = int(np.prod(leaf.shape))
+        dense += n * value_bytes
+        if n < min_leaf_size or gamma >= 1.0:
+            sparse += n * value_bytes
+        else:
+            b, enc = payload_bytes(n, gamma, value_bytes)
+            sparse += b
+    return CompressionStats(dense, sparse, enc)
+
+
+def encode_sparse(masked: jax.Array, k: int) -> Dict[str, jax.Array]:
+    """Coordinate-encode a masked tensor: the k nonzero (index, value) pairs.
+
+    Static-shape (k fixed); zero-padded if fewer nonzeros survived the
+    threshold.  Used by the simulated client->server transport to prove the
+    payload round-trips; the pod path aggregates masked dense tensors and only
+    *meters* these bytes.
+    """
+    flat = masked.reshape(-1)
+    nz = flat != 0
+    # Stable selection of nonzero positions: sort by (not nz, position).
+    order = jnp.argsort(jnp.where(nz, jnp.arange(flat.size),
+                                  flat.size + jnp.arange(flat.size)))
+    idx = order[:k].astype(jnp.int32)
+    vals = flat[idx] * nz[idx].astype(flat.dtype)
+    return {"indices": idx, "values": vals,
+            "shape": np.asarray(masked.shape, np.int32)}
+
+
+def decode_sparse(payload: Dict[str, jax.Array]) -> jax.Array:
+    shape = tuple(int(s) for s in payload["shape"])
+    size = int(np.prod(shape))
+    out = jnp.zeros((size,), payload["values"].dtype)
+    out = out.at[payload["indices"]].add(payload["values"])
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantised uploads (beyond-paper; composes with selective masking)
+# ---------------------------------------------------------------------------
+def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
+    """Symmetric per-tensor int8 quantisation of a (masked) delta.
+
+    Composes with the paper's masking: zeros stay exactly zero (the scale
+    maps 0 -> 0), so sparsity encoding is unaffected; the value payload
+    drops from 4 to 1 byte per kept entry (bitmap encoding then costs
+    gamma*P + P/8 bytes).
+    """
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_int8(payload: Dict[str, jax.Array]) -> jax.Array:
+    return payload["q"].astype(jnp.float32) * payload["scale"]
+
+
+def quantize_pytree(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(quantize_int8, tree)
+
+
+def dequantize_pytree(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        dequantize_int8, tree,
+        is_leaf=lambda t: isinstance(t, dict) and "q" in t)

@@ -1,0 +1,103 @@
+"""The federated round — simulation (vmap over clients) form.
+
+``make_federated_round`` builds one jit-able function implementing paper
+Alg. 1/3 server loop body + Alg. 2/4 client bodies:
+
+  1. draw the participation mask from the sampling schedule (static/dynamic),
+  2. every registered client runs its local update (vmap) — non-participants
+     are masked out of the aggregation, which keeps shapes static,
+  3. weighted FedAvg (Eq. 2): Θ_{t+1} = Θ_t + Σ_i w_i · upload_i with
+     w_i = mask_i·n_i / Σ mask_j·n_j.
+
+Note on Eq. 1/2: the paper writes an extra 1/m in front of Σ (n_i/n)Θ^i; since
+the n_i/n weights already sum to 1 over the selected set, the extra 1/m would
+shrink the model m-fold.  We take Σ (n_i/n)Θ^i, which matches FedAvg
+(McMahan et al.) and the paper's cited behaviour.
+
+The pod (shard_map) form of the same round lives in
+``repro.launch.fedtrain`` — identical math, collectives instead of vmap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import ClientConfig, client_update
+from repro.core.sampling import SamplingSchedule, participation_mask
+
+PyTree = Any
+
+__all__ = ["FederatedConfig", "make_federated_round", "fedavg_aggregate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedConfig:
+    num_clients: int
+    client: ClientConfig
+    error_feedback: bool = False  # beyond-paper (DGC-style residuals)
+
+
+def fedavg_aggregate(global_params: PyTree, uploads: PyTree,
+                     weights: jnp.ndarray, upload_semantics: str) -> PyTree:
+    """Weighted FedAvg over stacked client uploads (leading client axis)."""
+    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+    norm_w = weights / wsum
+
+    def combine(g, u):
+        contrib = jnp.tensordot(norm_w, u, axes=(0, 0))
+        if upload_semantics == "delta":
+            return (g + contrib).astype(g.dtype)
+        return contrib.astype(g.dtype)  # "zero": average of masked weights
+
+    return jax.tree.map(combine, global_params, uploads)
+
+
+def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
+                         cfg: FederatedConfig):
+    """Returns ``round_fn(params, residuals, client_batches, n_samples, t, key)
+    -> (params, residuals, metrics)``.
+
+    ``client_batches``: pytree with leading (num_clients, num_batches, B, ...)
+    axes.  ``n_samples``: (num_clients,) float per-client dataset sizes for
+    Eq. 2 weighting.  ``residuals``: stacked error-feedback state (zeros when
+    cfg.error_feedback is False).
+    """
+
+    def round_fn(params, residuals, client_batches, n_samples, t, key):
+        sample_key, mask_key = jax.random.split(key)
+        part = participation_mask(sample_key, schedule, t, cfg.num_clients)
+        mask_keys = jax.random.split(mask_key, cfg.num_clients)
+
+        def one_client(batches, k, res):
+            res_arg = res if cfg.error_feedback else None
+            up, new_res, loss = client_update(
+                loss_fn, params, batches, k, cfg.client, res_arg)
+            return up, new_res, loss
+
+        uploads, new_residuals, losses = jax.vmap(one_client)(
+            client_batches, mask_keys, residuals)
+
+        weights = part * n_samples
+        new_params = fedavg_aggregate(params, uploads, weights,
+                                      cfg.client.upload)
+        if cfg.error_feedback:
+            # Non-participants did not really run this round: keep their old
+            # residual; participants reset to the post-mask remainder.
+            new_residuals = jax.tree.map(
+                lambda old, new: jnp.where(
+                    part.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old),
+                residuals, new_residuals)
+        else:
+            new_residuals = residuals
+
+        metrics = {
+            "mean_loss": jnp.sum(losses * part) / jnp.maximum(jnp.sum(part), 1.0),
+            "num_sampled": jnp.sum(part),
+        }
+        return new_params, new_residuals, metrics
+
+    return round_fn

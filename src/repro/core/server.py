@@ -1,0 +1,105 @@
+"""Central-server training loop (paper Alg. 1 / Alg. 3 outer procedure).
+
+``FederatedServer`` owns the global model, runs R communication rounds via the
+jitted round function, meters transport bytes per round (sampling × masking ×
+encoding, see ``repro.core.compression``), and evaluates on a held-out set.
+
+This is the *simulation* driver used by the paper-reproduction benchmarks
+(Figs. 3-9).  The pod-scale driver is ``repro.launch.train``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import pytree_payload_bytes, pytree_num_params
+from repro.core.federated import FederatedConfig, make_federated_round
+from repro.core.sampling import SamplingSchedule
+
+PyTree = Any
+
+__all__ = ["RoundRecord", "FederatedServer"]
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    num_sampled: int
+    mean_loss: float
+    transport_units: float      # full-model-upload units this round (Eq. 6 basis)
+    transport_bytes: int        # metered bytes (values + index overhead)
+    eval_metric: Optional[float] = None
+    wall_s: float = 0.0
+
+
+class FederatedServer:
+    """Owns Θ_t; runs rounds; meters communication."""
+
+    def __init__(self, loss_fn: Callable, schedule: SamplingSchedule,
+                 cfg: FederatedConfig, init_params: PyTree,
+                 eval_fn: Optional[Callable] = None, seed: int = 0):
+        self.cfg = cfg
+        self.schedule = schedule
+        self.params = init_params
+        self.eval_fn = eval_fn
+        self._key = jax.random.PRNGKey(seed)
+        self._round_fn = jax.jit(make_federated_round(loss_fn, schedule, cfg))
+        self._residuals = jax.tree.map(
+            lambda p: jnp.zeros((cfg.num_clients,) + p.shape, p.dtype),
+            init_params)
+        self.history: List[RoundRecord] = []
+        self._num_params = pytree_num_params(init_params)
+
+    def run(self, client_batches: PyTree, n_samples: np.ndarray,
+            rounds: int, eval_every: int = 0,
+            eval_data: Any = None) -> List[RoundRecord]:
+        gamma = self.cfg.client.masking.gamma \
+            if self.cfg.client.masking.mode != "none" else 1.0
+        stats = pytree_payload_bytes(
+            self.params, gamma, self.cfg.client.masking.min_leaf_size)
+        n_samples = jnp.asarray(n_samples, jnp.float32)
+
+        for t in range(1, rounds + 1):
+            t0 = time.perf_counter()
+            self._key, sub = jax.random.split(self._key)
+            self.params, self._residuals, metrics = self._round_fn(
+                self.params, self._residuals, client_batches, n_samples,
+                jnp.asarray(t, jnp.float32), sub)
+            m = float(metrics["num_sampled"])
+            rec = RoundRecord(
+                round=t,
+                num_sampled=int(m),
+                mean_loss=float(metrics["mean_loss"]),
+                transport_units=m * gamma,
+                transport_bytes=int(m) * stats.sparse_bytes,
+                wall_s=time.perf_counter() - t0,
+            )
+            if eval_every and self.eval_fn is not None and (
+                    t % eval_every == 0 or t == rounds):
+                rec.eval_metric = float(self.eval_fn(self.params, eval_data))
+            self.history.append(rec)
+        return self.history
+
+    # ---- reporting ------------------------------------------------------
+    def total_transport_units(self) -> float:
+        return float(sum(r.transport_units for r in self.history))
+
+    def total_transport_bytes(self) -> int:
+        return int(sum(r.transport_bytes for r in self.history))
+
+    def summary(self) -> Dict[str, float]:
+        evals = [r.eval_metric for r in self.history if r.eval_metric is not None]
+        return {
+            "rounds": len(self.history),
+            "final_loss": self.history[-1].mean_loss if self.history else float("nan"),
+            "final_eval": evals[-1] if evals else float("nan"),
+            "transport_units": self.total_transport_units(),
+            "transport_GB": self.total_transport_bytes() / 1e9,
+            "num_params": self._num_params,
+        }

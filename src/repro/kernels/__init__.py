@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (interpret=True on CPU) + jnp oracles:
+
+* topk_mask.py — selective-masking hot-spot (histogram / count / apply)
+* ssm_scan.py  — selective-SSM recurrence, state resident in VMEM
+* wkv6.py      — RWKV6 chunked recurrence, (D,D) state in VMEM
+"""

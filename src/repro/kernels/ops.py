@@ -1,0 +1,136 @@
+"""Jit'd public wrappers around the Pallas masking kernels.
+
+``topk_mask(x, gamma)`` keeps ~k = round(gamma * x.size) largest-|x| entries:
+  1 histogram sweep + ``refine_iters`` count sweeps + 1 apply sweep,
+vs the 24+ full bisection sweeps of the pure-jnp path (see EXPERIMENTS.md
+§Perf for the sweep-count accounting).
+
+On CPU (this container) the kernels run with ``interpret=True``; on TPU they
+compile natively.  ``interpret=None`` auto-detects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import topk_mask as tk
+
+__all__ = ["topk_mask", "masked_count"]
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to_blocks(flat: jax.Array) -> jax.Array:
+    n = flat.shape[0]
+    block = tk.BLOCK_ROWS * tk.LANE
+    padded = ((n + block - 1) // block) * block
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(padded // tk.LANE, tk.LANE)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "iters", "interpret"))
+def topk_mask(x: jax.Array, gamma: float, iters: int = 8,
+              interpret: bool | None = None) -> jax.Array:
+    """Threshold-select the ~gamma fraction of largest-|x| entries of ``x``.
+
+    Padding zeros never survive (the selected threshold is > 0), so arbitrary
+    shapes are supported by flatten/pad/reshape.
+    """
+    interpret = _auto_interpret(interpret)
+    n = x.size
+    k = jnp.asarray(max(1, int(round(gamma * n))), jnp.int32)
+    orig_dtype = x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    x2d = _pad_to_blocks(flat)
+
+    hist = tk.exponent_histogram(x2d, interpret=interpret)
+    tau_lo, tau_hi = tk.select_threshold(hist, k)
+
+    def refine(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        cnt = tk.count_ge(x2d, mid, interpret=interpret)
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    tau_lo, tau_hi = jax.lax.fori_loop(0, iters, refine, (tau_lo, tau_hi))
+    # hi is the conservative endpoint: count(mag >= hi) <= k... <= count(>= lo).
+    # Use lo if hi would under-select badly (ties): pick whichever count is
+    # closer to k without a fresh sweep by reusing the invariant counts.
+    cnt_hi = tk.count_ge(x2d, tau_hi, interpret=interpret)
+    tau = jnp.where(cnt_hi >= 1, tau_hi, tau_lo)
+
+    out2d = tk.apply_threshold(x2d, tau, interpret=interpret)
+    return out2d.reshape(-1)[:n].reshape(x.shape).astype(orig_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_count(x: jax.Array, tau: jax.Array,
+                 interpret: bool | None = None) -> jax.Array:
+    """Number of entries with |x| >= tau (kernel-backed)."""
+    interpret = _auto_interpret(interpret)
+    x2d = _pad_to_blocks(x.reshape(-1).astype(jnp.float32))
+    return tk.count_ge(x2d, jnp.asarray(tau, jnp.float32), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssm_scan(a: jax.Array, bx: jax.Array, c: jax.Array, h0: jax.Array,
+             interpret: bool | None = None):
+    """Selective-SSM recurrence via the Pallas kernel (kernels/ssm_scan.py).
+
+    a, bx: (B, T, d, N) decay / input terms (the layout models/ssm.py uses);
+    c: (B, T, N); h0: (B, d, N).  Returns (y (B, T, d), hT (B, d, N)).
+    Pads T to BLOCK_T (identity steps: a=1, bx=0) and d to the BLOCK_D lane
+    tile; transposes so d rides the 128-wide lane axis.
+    """
+    from repro.kernels import ssm_scan as sk
+    interpret = _auto_interpret(interpret)
+    B, T, d, N = a.shape
+    padT = (-T) % sk.BLOCK_T
+    padD = (-d) % sk.BLOCK_D
+
+    # (B, T, d, N) -> (B, T, N, d) with lane-axis d
+    a_t = jnp.pad(a.transpose(0, 1, 3, 2).astype(jnp.float32),
+                  ((0, 0), (0, padT), (0, 0), (0, padD)),
+                  constant_values=1.0)           # identity decay on padding
+    bx_t = jnp.pad(bx.transpose(0, 1, 3, 2).astype(jnp.float32),
+                   ((0, 0), (0, padT), (0, 0), (0, padD)))
+    c_t = jnp.pad(c.astype(jnp.float32), ((0, 0), (0, padT), (0, 0)))
+    h0_t = jnp.pad(h0.transpose(0, 2, 1).astype(jnp.float32),
+                   ((0, 0), (0, 0), (0, padD)))
+
+    y, hT = sk.ssm_scan_tiled(a_t, bx_t, c_t, h0_t, interpret=interpret)
+    return y[:, :T, :d], hT[:, :, :d].transpose(0, 2, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, s0: jax.Array, interpret: bool | None = None):
+    """RWKV6 wkv recurrence via the Pallas kernel (kernels/wkv6.py).
+
+    r/k/v/logw: (B, T, H, D); u: (H, D); s0: (B, H, D, D).
+    Pads T to the CHUNK tile with identity steps (logw=0, r=k=v=0).
+    Returns (y (B, T, H, D), sT (B, H, D, D)).
+    """
+    from repro.kernels import wkv6 as wk
+    interpret = _auto_interpret(interpret)
+    B, T, H, D = r.shape
+    padT = (-T) % wk.CHUNK
+
+    def padt(x, val=0.0):
+        return jnp.pad(x.astype(jnp.float32),
+                       ((0, 0), (0, padT), (0, 0), (0, 0)),
+                       constant_values=val)
+
+    y, sT = wk.wkv6_tiled(padt(r), padt(k), padt(v), padt(logw),
+                          u.astype(jnp.float32), s0.astype(jnp.float32),
+                          interpret=interpret)
+    return y[:, :T], sT

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the masking kernels.
+
+These define the semantics the Pallas kernels are tested against:
+
+* ``topk_mask_ref``      — exact top-k-by-|x| mask (full sort), the paper's
+  Alg. 4 as written.
+* ``threshold_mask_ref`` — keep entries with |x| >= tau.
+* ``exponent_histogram_ref`` — per-octave magnitude counts, the quantity the
+  histogram kernel accumulates.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NBINS = 128
+EXPO_MIN = -96  # bin j counts magnitudes in [2^(j+EXPO_MIN), 2^(j+EXPO_MIN+1))
+
+
+def topk_mask_ref(x: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Keep the k = max(1, round(gamma*size)) largest-|x| entries (exact)."""
+    flat = x.reshape(-1)
+    k = max(1, int(round(gamma * flat.size)))
+    mag = jnp.abs(flat)
+    thresh = jnp.sort(mag)[flat.size - k]
+    keep = mag >= thresh
+    surplus = jnp.cumsum(keep) > k
+    keep = keep & ~surplus
+    return (flat * keep.astype(flat.dtype)).reshape(x.shape)
+
+
+def threshold_mask_ref(x: jnp.ndarray, tau) -> jnp.ndarray:
+    return x * (jnp.abs(x) >= tau).astype(x.dtype)
+
+
+def count_ge_ref(x: jnp.ndarray, tau) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(x) >= tau).astype(jnp.int32)
+
+
+def exponent_histogram_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """(NBINS,) int32 counts of nonzero |x| per power-of-two bin."""
+    mag = jnp.abs(x.reshape(-1)).astype(jnp.float32)
+    valid = mag > 0
+    e = jnp.floor(jnp.log2(jnp.where(valid, mag, 1.0)))
+    b = jnp.clip(e.astype(jnp.int32) - EXPO_MIN, 0, NBINS - 1)
+    onehot = (b[:, None] == jnp.arange(NBINS)[None, :]) & valid[:, None]
+    return jnp.sum(onehot, axis=0).astype(jnp.int32)
+
+
+def ssm_scan_ref(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
+                 h0: jnp.ndarray):
+    """Oracle for the SSM-scan kernel.  a, bx: (B, T, N, D); c: (B, T, N);
+    h0: (B, N, D).  Returns (y (B, T, D), hT (B, N, D))."""
+    import jax
+
+    def step(h, inp):
+        a_t, bx_t, c_t = inp                      # (B,N,D),(B,N,D),(B,N)
+        h = a_t * h + bx_t
+        y = jnp.einsum("bnd,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.transpose(1, 0, 2, 3).astype(jnp.float32),
+         bx.transpose(1, 0, 2, 3).astype(jnp.float32),
+         c.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2), hT

@@ -1,0 +1,147 @@
+"""Pallas TPU kernels for selective (top-k) masking.
+
+TPU adaptation of the paper's per-layer top-k (DESIGN.md §3.1): instead of a
+global sort we (1) build a per-octave magnitude histogram in one HBM sweep,
+(2) locate the octave containing the k-th largest magnitude, (3) refine the
+threshold with a few count sweeps, (4) apply ``x * (|x| >= tau)``.
+
+All kernels tile the (flattened, padded) input as (BLOCK_ROWS, LANE) fp32
+blocks in VMEM — BLOCK_ROWS=256, LANE=1024 → 1 MiB per block, well under the
+~16 MiB v5e VMEM budget, with the lane dimension a multiple of 128 for the
+VPU.  Reduction outputs map every grid step to the same output block; the TPU
+grid is sequential so ``@pl.when(first)`` init + accumulate is safe (and
+interpret mode preserves the semantics on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import NBINS, EXPO_MIN
+
+BLOCK_ROWS = 256
+LANE = 1024
+
+
+def _grid_blocks(n_rows: int) -> int:
+    return n_rows // BLOCK_ROWS
+
+
+# --------------------------------------------------------------------------
+# Kernel 1: per-octave magnitude histogram (one sweep of HBM).
+# --------------------------------------------------------------------------
+def _hist_kernel(x_ref, hist_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    mag = jnp.abs(x)
+    valid = mag > 0.0
+    e = jnp.floor(jnp.log2(jnp.where(valid, mag, 1.0)))
+    b = jnp.clip(e.astype(jnp.int32) - EXPO_MIN, 0, NBINS - 1)
+
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, NBINS), 1)
+
+    def body(j, _):
+        cnt = jnp.sum((b == j) & valid).astype(jnp.int32)
+        onehot = (bins == j).astype(jnp.int32)
+        hist_ref[...] += cnt * onehot
+        return 0
+
+    jax.lax.fori_loop(0, NBINS, body, 0)
+
+
+def exponent_histogram(x2d: jax.Array, *, interpret: bool) -> jax.Array:
+    """x2d: (R, LANE) fp32, R multiple of BLOCK_ROWS. Returns (NBINS,) int32."""
+    rows = x2d.shape[0]
+    hist = pl.pallas_call(
+        _hist_kernel,
+        grid=(_grid_blocks(rows),),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, NBINS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, NBINS), jnp.int32),
+        interpret=interpret,
+    )(x2d)
+    return hist[0]
+
+
+# --------------------------------------------------------------------------
+# Kernel 2: count of |x| >= tau (one sweep; used by the refine loop).
+# --------------------------------------------------------------------------
+def _count_kernel(x_ref, tau_ref, cnt_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    tau = tau_ref[0, 0]
+    cnt_ref[0, 0] += jnp.sum(jnp.abs(x) >= tau).astype(jnp.int32)
+
+
+def count_ge(x2d: jax.Array, tau: jax.Array, *, interpret: bool) -> jax.Array:
+    rows = x2d.shape[0]
+    cnt = pl.pallas_call(
+        _count_kernel,
+        grid=(_grid_blocks(rows),),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(x2d, tau.reshape(1, 1).astype(jnp.float32))
+    return cnt[0, 0]
+
+
+# --------------------------------------------------------------------------
+# Kernel 3: apply the threshold mask (one sweep, elementwise).
+# --------------------------------------------------------------------------
+def _apply_kernel(x_ref, tau_ref, out_ref):
+    x = x_ref[...]
+    tau = tau_ref[0, 0]
+    keep = (jnp.abs(x.astype(jnp.float32)) >= tau).astype(x.dtype)
+    out_ref[...] = x * keep
+
+
+def apply_threshold(x2d: jax.Array, tau: jax.Array, *, interpret: bool) -> jax.Array:
+    rows = x2d.shape[0]
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(_grid_blocks(rows),),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, tau.reshape(1, 1).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Threshold selection from the histogram + refinement.
+# --------------------------------------------------------------------------
+def select_threshold(hist: jax.Array, k: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Octave bounds [tau_lo, tau_hi) containing the k-th largest magnitude.
+
+    ``count_ge(2^(j+EXPO_MIN))`` = suffix-sum of hist from bin j; the k-th
+    largest lies in the highest bin j* whose suffix count is still >= k.
+    """
+    suffix = jnp.cumsum(hist[::-1])[::-1]  # suffix[j] = count(mag >= 2^(j+EXPO_MIN))
+    jstar = jnp.maximum(jnp.sum(suffix >= k) - 1, 0)
+    tau_lo = jnp.exp2((jstar + EXPO_MIN).astype(jnp.float32))
+    tau_hi = 2.0 * tau_lo
+    # If even the lowest bin has < k entries (k > #nonzero), keep everything
+    # nonzero: threshold below the smallest representable bin.
+    tau_lo = jnp.where(suffix[0] < k, jnp.exp2(float(EXPO_MIN - 1)), tau_lo)
+    return tau_lo, tau_hi

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the RWKV6 (Finch) wkv recurrence.
+
+Chunked-parallel wkv6 with the (D, D) per-head state resident in VMEM —
+the same design as kernels/ssm_scan.py but with MXU work: each T-chunk does
+three (C x D)(D x D)/(C x C) matmuls against log-domain cumulative decays
+(the models/rwkv.py math, one chunk per grid step):
+
+    cum_t   = sum_{s<=t} logw_s
+    q'_t    = r_t * exp(cum_{t-1})
+    y       = q' S + tril_strict(q' (k e^{-cum})^T) v + (r.u.k) v
+    S'      = diag(e^{cum_C}) S + (k e^{cum_C - cum})^T v
+
+Grid: (B, H, T/CHUNK), sequential in T; state carried in a VMEM scratch.
+Validated in interpret mode against the step-by-step oracle and against
+``models/rwkv.wkv6_chunked`` in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                 y_ref, sT_ref, s_scr):
+    """Blocks: r/k/v/lw (1, CHUNK, 1, D); u (1, D); s0/sT (1, 1, D, D);
+    y (1, CHUNK, 1, D); scratch S (D, D) fp32."""
+    jt = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(jt == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0]
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)          # (C, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                   # (D,)
+    S = s_scr[...]
+
+    C = r.shape[0]
+    cum = jnp.cumsum(lw, axis=0)                       # (C, D)
+    cum_prev = cum - lw
+    q_state = r * jnp.exp(cum_prev)
+    y = jnp.dot(q_state, S, preferred_element_type=jnp.float32)
+    k_adj = k * jnp.exp(-cum)
+    A = jnp.dot(q_state, k_adj.T, preferred_element_type=jnp.float32)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(si < ti, A, 0.0)                     # strict lower
+    y = y + jnp.dot(A, v, preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)
+    y = y + diag * v
+    y_ref[0, :, 0, :] = y
+
+    wtot = cum[-1]                                     # (D,)
+    k_carry = k * jnp.exp(wtot[None, :] - cum)
+    S = jnp.exp(wtot)[:, None] * S + jnp.dot(
+        k_carry.T, v, preferred_element_type=jnp.float32)
+    s_scr[...] = S
+
+    @pl.when(jt == n_t - 1)
+    def _emit():
+        sT_ref[0, 0] = S
+
+
+def wkv6_tiled(r, k, v, lw, u, s0, *, interpret: bool):
+    """r/k/v/lw: (B, T, H, D) fp32 with T % CHUNK == 0; u: (H, D);
+    s0: (B, H, D, D).  Returns (y (B, T, H, D), sT (B, H, D, D))."""
+    B, T, H, D = r.shape
+    grid = (B, H, T // CHUNK)
+    io_spec = pl.BlockSpec((1, CHUNK, 1, D), lambda b, h, jt: (b, jt, h, 0))
+    y, sT = pl.pallas_call(
+        _wkv6_kernel,
+        grid=grid,
+        in_specs=[
+            io_spec, io_spec, io_spec, io_spec,
+            pl.BlockSpec((1, D), lambda b, h, jt: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, jt: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            io_spec,
+            pl.BlockSpec((1, 1, D, D), lambda b, h, jt: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u, s0)
+    return y, sT

@@ -1,0 +1,267 @@
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) lowers and
+compiles, and capture the roofline terms (DESIGN.md, EXPERIMENTS.md §Dry-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k [--multi-pod] [--fed] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Writes one JSON per combo with memory_analysis, parsed HLO stats (flops /
+hbm bytes / collective bytes per device), and the derived roofline terms.
+"""
+
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices — set
+# BEFORE any other import; jax locks the device count on first init.
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_arch, get_shape, supports_shape
+from repro.launch import hlo as hlo_lib
+from repro.launch import shardings as sh
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh, num_chips)
+
+HBM_PER_CHIP = 16e9      # v5e
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (roofline denominator: MODEL_FLOPS = 6*N*D train,
+# 2*N*D inference; MoE uses N_active)
+# ---------------------------------------------------------------------------
+def param_counts(cfg) -> dict:
+    specs = steps_lib.params_specs(cfg)
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        p = jax.tree_util.keystr(path)
+        if "moe" in p and ("'wi'" in p or "'wg'" in p or "'wo'" in p):
+            routed += n
+    active = total - routed
+    if cfg.moe_experts:
+        active += routed * cfg.moe_topk / cfg.moe_experts
+    return {"total": total, "routed": routed, "active": int(active)}
+
+
+def model_flops(cfg, shape) -> float:
+    pc = param_counts(cfg)
+    n_active = pc["active"]
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+# ---------------------------------------------------------------------------
+# lower + compile one combo
+# ---------------------------------------------------------------------------
+def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                fed: bool = False, fsdp: bool = True, remat: bool = True):
+    """Returns (lowered, compiled, meta)."""
+    cfg = get_arch(arch_id)
+    shape = get_shape(shape_name)
+    if not supports_shape(cfg, shape):
+        raise ValueError(f"{arch_id} skips {shape_name} "
+                         "(DESIGN.md §Shape-applicability)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if fed:
+        from repro.launch import fedtrain
+        return fedtrain.lower_fed_round(cfg, shape, mesh)
+
+    hints = steps_lib.mesh_hints(mesh)
+    if shape.mode == "train":
+        pspecs = steps_lib.params_specs(cfg, cfg.param_dtype_train)
+        psh = sh.params_shardings(pspecs, mesh, fsdp=fsdp)
+        step = steps_lib.make_train_step(cfg, remat=remat, hints=hints,
+                                         param_shardings=psh)
+        opt_specs = jax.eval_shape(step.optimizer.init, pspecs)
+        osh = sh.params_shardings_like(opt_specs, psh, mesh)
+        batch = steps_lib.batch_specs(cfg, shape)
+        bsh = sh.batch_shardings(batch, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, sh.replicated({"loss": 0.0, "grad_norm": 0.0}, mesh)),
+                     donate_argnums=(0, 1))
+        with mesh:
+            lowered = fn.lower(pspecs, opt_specs, batch)
+    elif shape.mode == "prefill":
+        pspecs = steps_lib.params_specs(cfg, cfg.param_dtype_serve)
+        psh = sh.params_shardings(pspecs, mesh, fsdp=fsdp)
+        step = steps_lib.make_prefill_step(cfg, hints=hints)
+        batch = steps_lib.batch_specs(cfg, shape)
+        bsh = sh.batch_shardings(batch, mesh)
+        fn = jax.jit(step, in_shardings=(psh, bsh),
+                     out_shardings=sh.batch_shardings(
+                         jax.ShapeDtypeStruct(
+                             (shape.global_batch, cfg.vocab_size), jnp.float32),
+                         mesh))
+        with mesh:
+            lowered = fn.lower(pspecs, batch)
+    else:  # decode
+        pspecs = steps_lib.params_specs(cfg, cfg.param_dtype_serve)
+        psh = sh.params_shardings(pspecs, mesh, fsdp=fsdp)
+        step = steps_lib.make_serve_step(cfg, hints=hints)
+        state = steps_lib.decode_state_specs(cfg, shape)
+        ssh = sh.decode_state_shardings(state, mesh)
+        batch = steps_lib.batch_specs(cfg, shape)
+        bsh = sh.batch_shardings(batch, mesh)
+        fn = jax.jit(step, in_shardings=(psh, ssh, bsh),
+                     out_shardings=(sh.batch_shardings(
+                         jax.eval_shape(lambda: jnp.zeros(
+                             (shape.global_batch, 1, cfg.vocab_size),
+                             jnp.float32)), mesh), ssh),
+                     donate_argnums=(1,))
+        with mesh:
+            lowered = fn.lower(pspecs, state, batch)
+
+    compiled = lowered.compile()
+    return lowered, compiled, {"mesh": mesh}
+
+
+# ---------------------------------------------------------------------------
+# roofline record
+# ---------------------------------------------------------------------------
+def roofline_record(arch_id: str, shape_name: str, compiled, mesh,
+                    *, fed: bool = False) -> dict:
+    cfg = get_arch(arch_id)
+    shape = get_shape(shape_name)
+    chips = num_chips(mesh)
+
+    mem = compiled.memory_analysis()
+    stats = hlo_lib.analyze(compiled.as_text())
+    ca = compiled.cost_analysis() or {}
+
+    t_compute = stats.flops / PEAK_FLOPS_BF16
+    t_memory = stats.hbm_bytes / HBM_BW
+    t_collective = stats.collective_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    t_coll_adj = stats.collective_bytes_bf16comm / ICI_BW
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    pc = param_counts(cfg)
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes +
+                     mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mode": shape.mode,
+        "fed": fed, "chips": chips,
+        "mesh": dict(zip(mesh.axis_names, [int(s) for s in mesh.devices.shape])),
+        "params_total": pc["total"], "params_active": pc["active"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev_bytes,
+            "fits_hbm": bool(per_dev_bytes <= HBM_PER_CHIP),
+        },
+        "per_device": {
+            "hlo_flops": stats.flops,
+            "hbm_bytes": stats.hbm_bytes,
+            "collective_bytes": stats.collective_bytes,
+            "per_collective": stats.per_collective,
+            "collective_count": stats.collective_count,
+        },
+        "xla_cost_analysis": {k: float(v) for k, v in ca.items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed")},
+        "roofline": {
+            **terms,
+            "collective_s_bf16comm": t_coll_adj,
+            "dominant": dominant,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / chips,
+            "useful_flop_fraction": (mf / chips) / max(stats.flops, 1.0),
+        },
+        "top_dots": [[f, n] for f, n in stats.dot_flops_top[:8]],
+    }
+    return rec
+
+
+def run_combo(arch_id: str, shape_name: str, *, multi_pod: bool,
+              fed: bool = False, out_dir: str = "results/dryrun",
+              fsdp: bool = True, remat: bool = True,
+              save_hlo: bool = False) -> dict:
+    t0 = time.time()
+    lowered, compiled, meta = lower_combo(
+        arch_id, shape_name, multi_pod=multi_pod, fed=fed, fsdp=fsdp,
+        remat=remat)
+    rec = roofline_record(arch_id, shape_name, compiled, meta["mesh"],
+                          fed=fed)
+    rec["compile_s"] = time.time() - t0
+    rec["multi_pod"] = multi_pod
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch_id}__{shape_name}__{'mp' if multi_pod else 'sp'}" + \
+        ("__fed" if fed else "")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fed", action="store_true",
+                    help="lower the federated round (paper technique) "
+                         "instead of the standard train step")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                if supports_shape(get_arch(a), get_shape(s)):
+                    combos.append((a, s))
+    else:
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in combos:
+        try:
+            rec = run_combo(a, s, multi_pod=args.multi_pod, fed=args.fed,
+                            out_dir=args.out, fsdp=not args.no_fsdp,
+                            remat=not args.no_remat, save_hlo=args.save_hlo)
+            r = rec["roofline"]
+            print(f"OK  {a:28s} {s:12s} chips={rec['chips']} "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                  f"coll={r['collective_s']:.4f}s dom={r['dominant']} "
+                  f"fits={rec['memory']['fits_hbm']} "
+                  f"compile={rec['compile_s']:.0f}s", flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures.append((a, s, repr(e)))
+            print(f"FAIL {a} {s}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""The paper's federated round at pod scale (DESIGN.md §3.3/§5).
+
+Mapping (cross-silo FL on a TPU pod):
+
+* **Clients = data-axis slices.**  Single pod: the 16-wide "data" axis is the
+  client axis (16 clients, each model-sharded 16-way over "model").
+  Multi-pod: the "pod" axis is the client axis (2 silos), and each client's
+  model shards over ("data","model") = 256 chips — this is how a 72B/400B
+  client fits (a 400B client cannot live on 16 chips; a silo of 256 can).
+* **Upload = masked weighted reduction.**  The paper's TCP upload becomes the
+  cross-client weighted sum; selective masking runs on every client's delta
+  *before* the reduction.  Everything is expressed as jnp over a
+  client-leading axis under ``jax.jit`` — the SPMD partitioner emits the
+  all-reduces over "model" (distributed threshold counts) and the
+  reduce/all-gather over the client axis (the aggregation) that a hand-rolled
+  shard_map would contain.
+* **Distributed threshold top-k.**  The bisection counts are sum-reductions,
+  so they work transparently on model-sharded leaves — each client finds the
+  *global* per-layer threshold of its delta without gathering it.
+
+Participation (dynamic sampling, Alg. 3) enters as a 0/1 weight vector
+computed on the host from the schedule — shapes stay static.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.masking import MaskingConfig
+from repro.launch import shardings as sh
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tr
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FedPodConfig:
+    num_clients: int
+    local_steps: int = 2          # local SGD steps per round (E epochs)
+    learning_rate: float = 0.01
+    gamma: float = 0.1            # fraction of params kept (paper default)
+    masking: str = "selective"    # selective | random | none
+    bisect_iters: int = 16
+    min_leaf_size: int = 256
+
+
+def _threshold_mask(delta: jax.Array, gamma: float, iters: int) -> jax.Array:
+    """Vectorised threshold-bisection top-|delta| mask over the LAST
+    ndim-leading dims; works on (C, G, ...) stacks (per client, per layer —
+    Alg. 4 line 9's per-layer loop).  Pure sums/compares: auto-shardable."""
+    lead = delta.shape[:2] if delta.ndim > 2 else delta.shape[:1]
+    flat = delta.reshape(lead + (-1,)).astype(jnp.float32)
+    n = flat.shape[-1]
+    k = jnp.asarray(max(1, int(round(gamma * n))), jnp.int32)
+    mag = jnp.abs(flat)
+    hi = jnp.max(mag, axis=-1, keepdims=True) + 1e-12
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum(mag >= mid, axis=-1, keepdims=True)
+        lo = jnp.where(count > k, mid, lo)
+        hi = jnp.where(count > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    keep = (mag >= hi).astype(delta.dtype)
+    return (flat.astype(delta.dtype) * keep).reshape(delta.shape)
+
+
+def _random_mask(key: jax.Array, delta: jax.Array, gamma: float) -> jax.Array:
+    keep = (jax.random.uniform(key, delta.shape) < gamma).astype(delta.dtype)
+    return delta * keep
+
+
+def mask_deltas(key: jax.Array, deltas: PyTree, cfg: FedPodConfig) -> PyTree:
+    """deltas: client-stacked pytree (leading C axis per leaf)."""
+    if cfg.masking == "none" or cfg.gamma >= 1.0:
+        return deltas
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, lk in zip(leaves, keys):
+        per_client = leaf.size // leaf.shape[0]
+        if per_client < cfg.min_leaf_size:
+            out.append(leaf)
+        elif cfg.masking == "random":
+            out.append(_random_mask(lk, leaf, cfg.gamma))
+        else:
+            out.append(_threshold_mask(leaf, cfg.gamma, cfg.bisect_iters))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_fed_round(arch: ArchConfig, cfg: FedPodConfig, hints=None) -> Callable:
+    """Returns ``round(params, batches, n_samples, participation, key)``.
+
+    batches: pytree with leading (C, local_steps, ...) axes.
+    """
+    def loss_fn(params, batch):
+        return tr.lm_loss(params, arch, batch, hints=hints)
+
+    def local_update(params, client_batch):
+        def sgd_step(p, b):
+            loss, grads = jax.value_and_grad(loss_fn)(p, b)
+            p = jax.tree.map(
+                lambda x, g: (x - cfg.learning_rate * g).astype(x.dtype),
+                p, grads)
+            return p, loss
+        local, losses = jax.lax.scan(sgd_step, params, client_batch)
+        delta = jax.tree.map(lambda a, b: a - b, local, params)
+        return delta, jnp.mean(losses)
+
+    def fed_round(params, batches, n_samples, participation, key):
+        deltas, losses = jax.vmap(
+            lambda b: local_update(params, b))(batches)
+        masked = mask_deltas(key, deltas, cfg)
+        w = participation * n_samples
+        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        # §Perf hillclimb 3: ship the masked deltas in bf16 — the upload
+        # (cross-client reduction) halves; the paper already quantises
+        # uploads ("compressed when uploaded", §3.2.1), bf16 is milder
+        # than its 1-bit/ternary citations.  Accumulate in f32.
+        agg = jax.tree.map(
+            lambda d: jnp.tensordot(w.astype(jnp.bfloat16),
+                                    d.astype(jnp.bfloat16), axes=(0, 0),
+                                    preferred_element_type=jnp.float32),
+            masked)
+        new_params = jax.tree.map(
+            lambda p, a: (p + a.astype(p.dtype)), params, agg)
+        metrics = {
+            "mean_loss": jnp.sum(losses * participation)
+            / jnp.maximum(jnp.sum(participation), 1.0),
+            "num_sampled": jnp.sum(participation),
+        }
+        return new_params, metrics
+
+    return fed_round
+
+
+# ---------------------------------------------------------------------------
+# dry-run entry (called by launch/dryrun.py with --fed)
+# ---------------------------------------------------------------------------
+def fed_layout(mesh) -> Tuple[str, tuple]:
+    """(client_axis, model_fsdp_axes): single-pod -> clients on 'data';
+    multi-pod -> clients on 'pod', model over ('data','model')."""
+    if "pod" in mesh.axis_names:
+        return "pod", ("data",)
+    return "data", ()
+
+
+def lower_fed_round(arch: ArchConfig, shape: InputShape, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    client_axis, fsdp_axes = fed_layout(mesh)
+    C = mesh.shape[client_axis]
+    fed_cfg = FedPodConfig(num_clients=C)
+
+    # param dtype: fp32 when a client replica fits its silo, else bf16
+    # (noted in EXPERIMENTS.md §Dry-run for the affected archs).
+    silo_chips = mesh.devices.size // C
+    pc = steps_lib.params_specs(arch, "float32")
+    import numpy as np
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(pc))
+    dtype = "float32" if 4 * n_params / silo_chips < 6e9 else "bfloat16"
+
+    pspecs = steps_lib.params_specs(arch, dtype)
+    psh = sh.params_shardings(pspecs, mesh, fsdp=bool(fsdp_axes),
+                              fsdp_axes=fsdp_axes or None)
+
+    B, T = shape.global_batch, shape.seq_len
+    b_local = max(B // C, 1)
+    if arch.modality == "audio_stub" and arch.num_codebooks > 1:
+        tok = jax.ShapeDtypeStruct(
+            (C, fed_cfg.local_steps, b_local, arch.num_codebooks, T), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct(
+            (C, fed_cfg.local_steps, b_local, T), jnp.int32)
+    batches = {"tokens": tok, "labels": tok}
+    if arch.modality == "vision_stub":
+        batches["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (C, fed_cfg.local_steps, b_local, arch.num_prefix_embeddings,
+             arch.d_model), jnp.bfloat16)
+
+    bsh = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(client_axis)), batches)
+    vec_sh = NamedSharding(mesh, P())
+    n_samples = jax.ShapeDtypeStruct((C,), jnp.float32)
+    participation = jax.ShapeDtypeStruct((C,), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    from repro.models.hints import Hints
+    hints = Hints(dp=(), model="model", model_size=int(mesh.shape["model"]))
+    fed_round = make_fed_round(arch, fed_cfg, hints=hints)
+    fn = jax.jit(
+        fed_round,
+        in_shardings=(psh, bsh, vec_sh, vec_sh, vec_sh),
+        out_shardings=(psh, sh.replicated(
+            {"mean_loss": 0.0, "num_sampled": 0.0}, mesh)),
+        donate_argnums=(0,))
+    with mesh:
+        lowered = fn.lower(pspecs, batches, n_samples, participation, key)
+    compiled = lowered.compile()
+    return lowered, compiled, {"mesh": mesh, "fed_cfg": fed_cfg,
+                               "param_dtype": dtype}

@@ -1,0 +1,322 @@
+"""Post-optimization HLO text analyzer for the roofline (DESIGN.md §Roofline).
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis counts a while-loop
+body ONCE, so a scanned 80-layer model under-reports FLOPs by ~80x (verified
+empirically — see EXPERIMENTS.md §Dry-run).  This module parses the
+post-SPMD-partitioning HLO text, propagates ``known_trip_count`` multipliers
+through the call graph (while bodies x n, fusions/calls/conditionals x 1),
+and accumulates:
+
+* ``flops``            — 2 * |output| * contraction size for every dot
+                         (+ convolutions), x multiplier.  Dots are >99% of
+                         model FLOPs for every assigned arch.
+* ``collective_bytes`` — per collective family, bytes moved per device:
+                         all-gather: output bytes; reduce-scatter/all-to-all/
+                         collective-permute: operand bytes; all-reduce:
+                         2 x operand bytes (ring = RS + AG).
+* ``hbm_bytes``        — HBM traffic model: every materialising top-level
+                         instruction (fusion, dot, copy, ...) reads its
+                         operands and writes its output once.
+
+All quantities are PER DEVICE (the post-partitioning module is the
+per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s2": 1, "u2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SKIP_BYTES = ("parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "partition-id", "replica-id", "iota")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALL_ATTRS = (
+    ("body", re.compile(r"body=%?([\w.\-]+)")),
+    ("condition", re.compile(r"condition=%?([\w.\-]+)")),
+    ("calls", re.compile(r"calls=%?([\w.\-]+)")),
+    ("to_apply", re.compile(r"to_apply=%?([\w.\-]+)")),
+    ("branches", re.compile(r"branch_computations=\{([^}]*)\}")),
+)
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(dims) for dt, dims in shapes)
+
+
+def _elems_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    return sum(math.prod(dims) for dt, dims in shapes)
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    line: str                                  # full attribute text
+    out_shapes: List[Tuple[str, List[int]]]
+    operand_names: List[str]
+    called: List[Tuple[str, str]]
+    trip_count: int = 1
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instruction]
+    shapes: Dict[str, List[Tuple[str, List[int]]]]   # symbol table
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    # collective bytes assuming bf16 communication survives on TPU: the CPU
+    # proxy physically upcasts bf16 dot operands to fp32 and "promotes"
+    # bf16 all-reduces (to_apply=%add..._promoted), doubling every model-
+    # path collective.  fp32 collectives in the model region count at half.
+    collective_bytes_bf16comm: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dot_flops_top: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(2), [], {})
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            # computation parameters: "name: f32[...]" pairs
+            for pm in re.finditer(r"([\w.\-]+)\s*:\s*([^,)]+(?:\([^)]*\))?)",
+                                  m.group(3)):
+                cur.shapes[pm.group(1)] = _parse_shapes(pm.group(2))
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im or "=" not in line:
+            continue
+        name, rest = im.group(1), im.group(2)
+        shapes_src = rest.split(", metadata=")[0]
+        opm = re.search(r"\b([a-z][a-z0-9\-]*)\(", shapes_src)
+        if not opm:
+            continue
+        opcode = opm.group(1)
+        head = shapes_src[:opm.start()]
+        args = shapes_src[opm.start() + len(opcode) + 1:]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_names = _OPERAND_RE.findall(args[:end])
+        out_shapes = _parse_shapes(head)
+        called = []
+        for kind, rex in _CALL_ATTRS:
+            cm = rex.search(rest)
+            if cm:
+                if kind == "branches":
+                    for b in cm.group(1).split(","):
+                        called.append(("branch", b.strip().lstrip("%")))
+                else:
+                    called.append((kind, cm.group(1)))
+        trip = 1
+        tm = _TRIP_RE.search(rest)
+        if tm:
+            trip = int(tm.group(1))
+        cur.shapes[name] = out_shapes
+        cur.instrs.append(Instruction(name, opcode, rest, out_shapes,
+                                      operand_names, called, trip))
+    return comps, entry
+
+
+def _dot_flops(instr: Instruction, table: Dict) -> float:
+    if not instr.out_shapes or not instr.operand_names:
+        return 0.0
+    out_elems = _elems_of(instr.out_shapes[:1])
+    dm = re.search(r"lhs_contracting_dims=\{([^}]*)\}", instr.line)
+    if not dm:
+        return 0.0
+    lhs_shapes = table.get(instr.operand_names[0], [])
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    contraction = 1
+    for di in dm.group(1).split(","):
+        if di.strip():
+            idx = int(di)
+            if idx < len(lhs_dims):
+                contraction *= lhs_dims[idx]
+    return 2.0 * out_elems * contraction
+
+
+def _conv_flops(instr: Instruction, table: Dict) -> float:
+    if len(instr.operand_names) < 2 or not instr.out_shapes:
+        return 0.0
+    out_elems = _elems_of(instr.out_shapes[:1])
+    rhs_shapes = table.get(instr.operand_names[1], [])
+    if not rhs_shapes:
+        return 0.0
+    rhs = rhs_shapes[0][1]
+    if not rhs:
+        return 0.0
+    kernel_elems = math.prod(rhs)
+    cout = rhs[-1]
+    return 2.0 * out_elems * kernel_elems / max(cout, 1)
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """Topological accumulation of call-count multipliers (HLO is a DAG)."""
+    edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for cname, comp in comps.items():
+        for instr in comp.instrs:
+            for kind, callee in instr.called:
+                if callee in comps:
+                    factor = instr.trip_count if kind == "body" else 1
+                    edges[cname].append((callee, factor))
+
+    topo: List[str] = []
+    state: Dict[str, int] = {}
+    stack = [(entry, iter(edges.get(entry, ())))]
+    state[entry] = 1
+    while stack:
+        node, it = stack[-1]
+        advanced = False
+        for callee, _ in it:
+            if state.get(callee, 0) == 0:
+                state[callee] = 1
+                stack.append((callee, iter(edges.get(callee, ()))))
+                advanced = True
+                break
+        if not advanced:
+            topo.append(node)
+            state[node] = 2
+            stack.pop()
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for cname in reversed(topo):
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for callee, factor in edges.get(cname, ()):
+            mult[callee] += m * factor
+    return mult
+
+
+def analyze(hlo: str, top_k_dots: int = 12) -> HloStats:
+    comps, entry = parse_computations(hlo)
+    if not entry:
+        raise ValueError("no ENTRY computation found")
+    mult = _multipliers(comps, entry)
+
+    # computations whose instructions are NOT materialised individually
+    # (fusion bodies, reduction lambdas): exclude from the HBM traffic model.
+    # The *calling* fusion instruction in the parent already accounts its
+    # operand/output bytes once.
+    fused: set = set()
+    for comp in comps.values():
+        for instr in comp.instrs:
+            for kind, callee in instr.called:
+                if kind in ("calls", "to_apply"):
+                    fused.add(callee)
+
+    stats = HloStats()
+    per_coll: Dict[str, float] = defaultdict(float)
+    coll_count: Dict[str, int] = defaultdict(int)
+    dots: List[Tuple[float, str]] = []
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        table = comp.shapes
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op == "dot":
+                f = _dot_flops(instr, table) * m
+                stats.flops += f
+                dots.append((f, f"{cname}/{instr.name}"))
+            elif op.startswith("convolution"):
+                stats.flops += _conv_flops(instr, table) * m
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                operand_b = sum(_bytes_of(table.get(n, []))
+                                for n in instr.operand_names)
+                out_b = _bytes_of(instr.out_shapes)
+                if base == "all-gather":
+                    b = out_b
+                elif base == "all-reduce":
+                    b = 2 * operand_b
+                else:
+                    b = operand_b
+                stats.collective_bytes += b * m
+                # TPU-adjusted: halve f32 model-path collectives (the CPU
+                # emitter upcast them from bf16); optimizer-state reductions
+                # (norm/update op_names) stay full-width.
+                f32_only = all(
+                    sh and all(dt == "f32" for dt, _ in sh)
+                    for sh in (table.get(n) for n in instr.operand_names)
+                    if sh is not None) and bool(instr.operand_names)
+                opt_path = any(t in instr.line for t in
+                               ("clip_by_global_norm", "adafactor", "adam",
+                                "_opt_update"))
+                factor = 0.5 if (f32_only and not opt_path) else 1.0
+                stats.collective_bytes_bf16comm += b * m * factor
+                per_coll[base] += b * m
+                coll_count[base] += int(m)
+            if (cname not in fused and op
+                    and not any(op.startswith(s) for s in _SKIP_BYTES)):
+                rb = sum(_bytes_of(table.get(n, []))
+                         for n in instr.operand_names)
+                stats.hbm_bytes += (rb + _bytes_of(instr.out_shapes)) * m
+
+    dots.sort(key=lambda t: -t[0])
+    stats.dot_flops_top = dots[:top_k_dots]
+    stats.per_collective = dict(per_coll)
+    stats.collective_count = dict(coll_count)
+    return stats

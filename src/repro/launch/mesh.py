@@ -1,0 +1,36 @@
+"""Production meshes (DESIGN.md §5).
+
+Target: TPU v5e.  Single pod = 16x16 = 256 chips, axes ("data", "model").
+Multi-pod = 2 pods = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries only data parallelism (DCN-friendly: one gradient/params
+reduction per step crosses pods).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import and only then builds the mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants used by the roofline (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per-chip effective)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch/FSDP axes: everything except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def num_chips(mesh) -> int:
+    return int(mesh.devices.size)

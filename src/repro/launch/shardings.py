@@ -1,0 +1,192 @@
+"""Sharding rules: map every param / batch / cache leaf to a PartitionSpec.
+
+Strategy (DESIGN.md §5):
+
+* **Params (standard training)** — 2D "FSDP x TP": the contraction-side
+  dimension shards over the data axes (ZeRO-style), the output-side feature
+  dimension over "model" (tensor parallel: heads / ff / experts / vocab).
+  Divisibility is checked per leaf; non-divisible dims fall back to
+  replicated (e.g. hymba's 25-head q projection keeps d=1600 on model via
+  the 1600/16=100 column split instead).
+* **Params (federated round)** — model-axis sharding ONLY: each client (a
+  data-axis slice) holds the full model (paper semantics); see
+  launch/fedtrain.py.
+* **Batch** — leading dim over all data axes (("pod","data") multi-pod).
+* **Decode caches** — batch over data axes when divisible, cache sequence
+  dim over "model" (KV head counts are not generally divisible by 16;
+  sequence always is).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+PyTree = Any
+
+
+def _div(n: int, mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0
+
+
+def _maybe(mesh, shape, *spec):
+    """PartitionSpec with per-dim divisibility fallback to None."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        out.append(axes if _div(dim, mesh, axes) else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+_COL = ("wq", "wk", "wv", "wi", "wg", "w_in", "ww1", "lm_head", "ck",
+        "shared_wi", "shared_wg")          # (d_in, features): TP on features
+_ROW = ("wo", "w_out", "ww2", "cv", "proj", "shared_wo", "w_dt")
+                                           # (features, d_out): TP on features
+_SQUARE = ("wr",)                          # rwkv d->d
+
+
+def param_spec(path: str, shape, mesh, *, fsdp: bool = True,
+               fsdp_axes=None) -> P:
+    """Sharding spec for one param leaf, keyed on its pytree path."""
+    dp = fsdp_axes if fsdp_axes is not None else data_axes(mesh)
+    fs = dp if fsdp else None              # FSDP axes (or replicate)
+    leaf = re.split(r"[./\[\]']+", path.strip("."))
+    leaf = [s for s in leaf if s][-1]
+
+    if len(shape) == 0 or max(shape) < 1024 and len(shape) == 1:
+        return P()
+    if leaf == "embed":
+        return _maybe(mesh, shape, "model", fs)
+    if leaf == "router":
+        return _maybe(mesh, shape, fs, None)
+    if leaf in ("wi", "wg", "wo") and len(shape) == 3:          # MoE (E,a,b)
+        if _div(shape[0], mesh, "model"):
+            return _maybe(mesh, shape, "model", fs, None)       # expert-parallel
+        return (_maybe(mesh, shape, None, fs, "model") if leaf != "wo"
+                else _maybe(mesh, shape, None, "model", fs))    # ff TP
+    if leaf in _COL or leaf in _SQUARE:
+        return _maybe(mesh, shape, fs, "model")
+    if leaf in _ROW:
+        return _maybe(mesh, shape, "model", fs)
+    if leaf in ("bq", "bk", "bv") and len(shape) == 1:
+        return _maybe(mesh, shape, "model")
+    if leaf in ("w_bcdt",):
+        return _maybe(mesh, shape, "model", None)
+    if leaf in ("log_a", "d_skip", "dt_bias") and shape[0] >= 1024:
+        return _maybe(mesh, shape, "model", *([None] * (len(shape) - 1)))
+    return P()  # norms, mu_*, u, small leaves: replicated
+
+
+def _with_group_axis(spec: P, leaf_ndim: int, stacked_ndim: int) -> P:
+    """Prepend Nones for the leading (num_groups,) stack axes."""
+    pad = stacked_ndim - leaf_ndim
+    return P(*([None] * pad + list(spec) + [None] * (leaf_ndim - len(spec))))
+
+
+def params_shardings(params: PyTree, mesh, *, fsdp: bool = True,
+                     fsdp_axes=None) -> PyTree:
+    """NamedSharding tree matching ``params``.  Layer stacks (leading
+    num_groups axis) get the per-layer rule shifted right by one."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        in_stack = "layers" in pstr
+        base_shape = shape[1:] if in_stack and len(shape) >= 1 else shape
+        spec = param_spec(pstr, base_shape, mesh, fsdp=fsdp,
+                          fsdp_axes=fsdp_axes)
+        if in_stack:
+            spec = _with_group_axis(spec, len(base_shape), len(shape))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache
+# ---------------------------------------------------------------------------
+def batch_shardings(batch: PyTree, mesh) -> PyTree:
+    dp = data_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if _div(leaf.shape[0], mesh, dp):
+            return NamedSharding(mesh, P(dp))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, batch)
+
+
+def decode_state_shardings(state: PyTree, mesh) -> PyTree:
+    """KV caches (G, B, S, KV, D): B over data axes if divisible, S over
+    'model'.  Recurrent states (G, B, ...): B over data, feature over model
+    when divisible."""
+    dp = data_axes(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        if leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        # leading axis is the group stack; batch sits at axis 1
+        if _div(shape[1], mesh, dp):
+            spec[1] = dp
+        if leaf.ndim >= 4:
+            # KVCache (G,B,S,KV,D) or wkv state (G,B,H,D,D) / ssm (G,B,d,N)
+            if _div(shape[2], mesh, "model") and shape[2] >= 64:
+                spec[2] = "model"
+        elif leaf.ndim == 3 and _div(shape[2], mesh, "model") and shape[2] >= 1024:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, state)
+
+
+def replicated(tree: PyTree, mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+
+
+def params_shardings_like(opt_state: PyTree, param_shardings: PyTree,
+                          mesh) -> PyTree:
+    """Optimizer-state shardings: moment trees (mu/nu/velocity) mirror the
+    param shardings; Adafactor's factored moments ("v": {vr, vc}) inherit
+    the matching dims of the param spec; scalars (count) replicate."""
+    def _fac(sh, leaf):
+        if not isinstance(leaf, dict):
+            return sh
+        if "v" in leaf:
+            return {"v": sh}
+        nd = leaf["vr"].ndim + 1
+        spec = tuple(sh.spec) + (None,) * (nd - len(sh.spec))
+        vr = P(*spec[:-1])
+        vc = P(*(spec[:-2] + spec[-1:])) if nd >= 2 else P()
+        return {"vr": NamedSharding(mesh, vr),
+                "vc": NamedSharding(mesh, vc)}
+
+    out = {}
+    for k, v in opt_state.items():
+        if k in ("mu", "nu", "velocity") and v is not None:
+            out[k] = param_shardings
+        elif k == "v" and v is not None:
+            out[k] = jax.tree_util.tree_map(
+                _fac, param_shardings, v,
+                is_leaf=lambda x: isinstance(x, dict) and
+                ("vr" in x or "v" in x))
+        elif v is None:
+            out[k] = None
+        else:
+            out[k] = jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P()), v)
+    return out

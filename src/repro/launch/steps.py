@@ -1,0 +1,146 @@
+"""jit-able step functions + ShapeDtypeStruct input specs for the dry-run.
+
+``input_specs(cfg, shape)`` returns stand-ins for every input of the step the
+shape lowers (train_step for train_4k, forward for prefill, serve_step for
+decode shapes) — weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer as tr
+from repro.optim import (adafactor, adamw, apply_updates,
+                         clip_by_global_norm, sgd)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.mode == "train":
+        if cfg.modality == "audio_stub" and cfg.num_codebooks > 1:
+            toks = jax.ShapeDtypeStruct((B, cfg.num_codebooks, T), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((B, T), i32)
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.modality == "vision_stub":
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeddings, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.mode == "prefill":
+        if cfg.modality == "audio_stub" and cfg.num_codebooks > 1:
+            toks = jax.ShapeDtypeStruct((B, cfg.num_codebooks, T), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((B, T), i32)
+        batch = {"tokens": toks}
+        if cfg.modality == "vision_stub":
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeddings, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: ONE new token against a seq_len KV cache
+    if cfg.modality == "audio_stub" and cfg.num_codebooks > 1:
+        toks = jax.ShapeDtypeStruct((B, cfg.num_codebooks, 1), i32)
+    else:
+        toks = jax.ShapeDtypeStruct((B, 1), i32)
+    return {"tokens": toks}
+
+
+def params_specs(cfg: ArchConfig, dtype_name: Optional[str] = None) -> PyTree:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: tr.init_params(k, cfg, dtype_name),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def decode_state_specs(cfg: ArchConfig, shape: InputShape) -> PyTree:
+    return jax.eval_shape(
+        lambda: tr.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+def mesh_hints(mesh):
+    """Sharding hints (models/hints.py) derived from a mesh; None for the
+    single-device paths."""
+    from repro.models.hints import Hints
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return Hints(dp=dp, model="model", model_size=int(mesh.shape["model"]))
+
+
+def make_train_step(cfg: ArchConfig, *, learning_rate: float = 3e-4,
+                    optimizer: str = "auto", clip_norm: float = 1.0,
+                    remat: bool = True, hints=None,
+                    param_shardings=None) -> Callable:
+    if optimizer == "auto":
+        # factored optimizer for >=70B models: Adam moments alone would
+        # overflow 16 GB/chip on the single-pod mesh (EXPERIMENTS.md)
+        big = cfg.num_layers * cfg.d_model ** 2 > 3e10 or \
+            cfg.moe_experts >= 64
+        optimizer = "adafactor" if big else "adamw"
+    opt = {"adamw": adamw, "adafactor": adafactor,
+           "sgd": sgd}[optimizer](learning_rate)
+
+    cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+           "float16": jnp.float16}[cfg.compute_dtype]
+
+    def loss_fn(params, batch):
+        # fp32 master weights -> one bf16 cast per step: the FSDP
+        # all-gathers then move bf16 (2x fewer collective bytes); grads
+        # flow back to fp32 through the cast (standard mixed precision).
+        # The cast output must be PINNED to the param sharding, otherwise
+        # the partitioner hoists the convert past the all-gather and the
+        # gathers move fp32 again (measured: identical collective bytes).
+        def cast(p, sh=None):
+            if p.dtype != jnp.float32 or p.ndim < 2:
+                return p
+            pc = p.astype(cdt)
+            if sh is not None:
+                pc = jax.lax.with_sharding_constraint(pc, sh)
+            return pc
+        if param_shardings is not None:
+            params_c = jax.tree.map(cast, params, param_shardings)
+        else:
+            params_c = jax.tree.map(cast, params)
+        return tr.lm_loss(params_c, cfg, batch, hints=hints)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    train_step.optimizer = opt
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, hints=None) -> Callable:
+    def prefill(params, batch):
+        logits, _ = tr.forward(params, cfg, batch["tokens"],
+                               batch.get("prefix_embeds"), remat=False,
+                               hints=hints)
+        # return only the last position (what serving needs) to avoid a
+        # (B, T, V) transfer
+        return logits[:, -1].astype(jnp.float32)
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, hints=None) -> Callable:
+    def serve_step(params, state, batch):
+        logits, state = tr.decode_step(params, cfg, state, batch["tokens"],
+                                       hints=hints)
+        return logits, state
+    return serve_step

@@ -1,0 +1,11 @@
+"""Model zoo: generic decoder (all assigned archs) + the paper's models."""
+
+from repro.models.transformer import (
+    init_params, forward, lm_loss, decode_step, init_decode_state,
+    DecodeState, param_count,
+)
+from repro.models.paper_models import (
+    init_lenet, lenet_forward, init_vgg, vgg_forward,
+    init_gru_lm, gru_lm_forward, gru_lm_loss, perplexity,
+    classifier_loss, classifier_accuracy,
+)

@@ -1,0 +1,226 @@
+"""Attention: GQA with RoPE, memory-efficient (flash-style) train/prefill
+path, single-token decode path with full / sliding(ring-buffer) / chunked KV
+caches.
+
+Design notes (DESIGN.md §5):
+
+* Train/prefill never materialises the (T, S) logit matrix for the full
+  sequence.  ``flash_attention`` scans over KV blocks with an online softmax
+  (running max / running sum), so peak memory is O(T · block_kv) per head —
+  this is what lets ``prefill_32k`` lower without a terabyte intermediate.
+* GQA KV heads are broadcast to the full Q-head count *inside* the scan body
+  (one block at a time), so every activation carries the H axis — which the
+  "model" mesh axis shards cleanly (H is a multiple of the axis size for all
+  assigned archs), instead of the awkward (KV, groups) factorisation.
+* Visibility (causal / sliding / chunked) is a predicate over *logical
+  positions*, passed as explicit ``q_pos`` / ``k_pos`` arrays.  The same
+  predicate drives the decode path's ring-buffer masking, so windowed decode
+  needs no special-case attention math.
+* Decode: one token against a cache laid out (B, S, KV, D), computed as a
+  direct KV-grouped einsum (logits are only (B, H, S)); with the cache
+  sequence-sharded (long_500k) the softmax reductions become psums that XLA
+  SPMD inserts automatically.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# masks over logical positions
+# ---------------------------------------------------------------------------
+def visibility(q_pos: jax.Array, k_pos: jax.Array, attn: str,
+               window: int) -> jax.Array:
+    """(Tq, Tk) bool.  k_pos < 0 marks an invalid (empty/padded) slot."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    vis = (k <= q) & (k >= 0)
+    if attn == "sliding" and window > 0:
+        vis &= k > q - window
+    elif attn == "chunked" and window > 0:
+        vis &= (k // window) == (q // window)
+    return vis
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention (train / prefill)
+# ---------------------------------------------------------------------------
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, attn: str = "full", window: int = 0,
+                    softcap_val: float = 0.0, scale: Optional[float] = None,
+                    q_offset: int = 0, block_q: int = 2048,
+                    block_kv: int = 2048, hints=None) -> jax.Array:
+    """Two-level blocked online-softmax attention with a flash (recompute)
+    backward — see models/flash_vjp.py for the algorithm and memory notes.
+
+    q: (B, T, H, D);  k, v: (B, S, KV, D) with H a multiple of KV (GQA).
+    Returns (B, T, H, D).  Causal; query positions are ``q_offset + [0..T)``
+    and key positions ``[0..S)``.
+
+    Sharding modes via ``hints``:
+      * head-sharded (H %% model == 0): classic Megatron attention; Q blocks
+        split the (unsharded) T axis.
+      * sequence-sharded (otherwise):   q/acc keep T on "model"; no Q
+        blocking (per-device T is already small) and K/V gather once.
+    """
+    from repro.models.flash_vjp import flash_core
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+
+    head_sharded = (hints is not None and hints.model_size > 1
+                    and H % hints.model_size == 0)
+    if head_sharded:
+        block_q = min(block_q, T)
+    else:
+        block_q = T                              # seq mode: no Q blocking
+    block_kv = min(block_kv, S)
+
+    nq = -(-T // block_q)
+    nkv = -(-S // block_kv)
+    pad_q = nq * block_q - T
+    pad_kv = nkv * block_kv - S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+
+    out = flash_core(q, k, v, attn, window, softcap_val, float(scale),
+                     q_offset, block_q, block_kv, T, S, hints)
+    return out[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    """k, v: (B, S_cache, KV, D).  ``index``: logical position of next token.
+
+    Full layers: S_cache = max_seq (append-at-index).
+    Sliding/chunked layers: S_cache = window slots (ring buffer).
+    """
+    k: jax.Array
+    v: jax.Array
+    index: jax.Array  # () int32
+
+
+def init_kv_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                  dtype, *, attn: str = "full", window: int = 0) -> KVCache:
+    slots = window if (attn in ("sliding", "chunked") and window) else max_seq
+    slots = min(slots, max_seq)
+    shape = (batch, slots, kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def cache_positions(cache: KVCache, attn: str, window: int) -> jax.Array:
+    """Logical position held by each cache slot *after* the current token
+    (at position cache.index) has been written; empty slots -> -1."""
+    slots = cache.k.shape[1]
+    pos = cache.index                    # position of the token being decoded
+    slot_ids = jnp.arange(slots)
+    if attn in ("sliding", "chunked") and window:
+        # slot s holds the largest p <= pos with p % slots == s
+        logical = pos - ((pos - slot_ids) % slots)
+        return jnp.where(logical >= 0, logical, -1)
+    return jnp.where(slot_ids <= pos, slot_ids, -1)
+
+
+def decode_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                     cache: KVCache, *, attn: str = "full", window: int = 0,
+                     softcap_val: float = 0.0, scale: Optional[float] = None,
+                     hints=None) -> tuple[jax.Array, KVCache]:
+    """One-token attention.  q: (B, 1, H, D); k_new/v_new: (B, 1, KV, D).
+    With ``hints``, logits/cache stay sequence-sharded over "model"."""
+    from repro.models.hints import apply_seq
+    B, _, H, D = q.shape
+    KV = k_new.shape[2]
+    groups = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    slots = cache.k.shape[1]
+    pos = cache.index
+
+    slot = pos % slots   # full cache: pos < slots so this is pos itself
+    k_cache = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+    new_cache = KVCache(k_cache, v_cache, pos + 1)
+
+    k_pos = cache_positions(new_cache._replace(index=pos), attn, window)
+    vis = visibility(pos[None], k_pos, attn, window)[0]          # (S,)
+
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, KV, groups, D)
+    kf = k_cache.transpose(0, 2, 3, 1)                           # (B,KV,D,S)
+    kf = apply_seq(hints, kf, t_axis=3)
+    logits = jnp.einsum("bgqd,bgds->bgqs", qf.astype(kf.dtype), kf,
+                        preferred_element_type=jnp.float32)      # (B,KV,g,S)
+    logits = apply_seq(hints, logits, t_axis=3)
+    if softcap_val > 0.0:
+        logits = softcap_val * jnp.tanh(logits / softcap_val)
+    logits = jnp.where(vis[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    vf = v_cache.transpose(0, 2, 1, 3)                           # (B,KV,S,D)
+    vf = apply_seq(hints, vf, t_axis=2)
+    out = jnp.einsum("bgqs,bgsd->bgqd", p.astype(vf.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, D).astype(q.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+def init_attn_params(key, d_model: int, num_heads: int, num_kv: int,
+                     head_dim: int, qkv_bias: bool, dtype) -> dict:
+    from repro.models.common import dense_init
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv * head_dim), dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv * head_dim,), dtype)
+    return p
+
+
+def project_qkv(params: dict, x: jax.Array, num_heads: int, num_kv: int,
+                head_dim: int, positions: jax.Array, rope_theta: float,
+                compute_dtype) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, T, d) -> q (B,T,H,D), k/v (B,T,KV,D), RoPE applied.
+    ``positions``: (T,) logical positions for RoPE."""
+    B, T, _ = x.shape
+    xc = x.astype(compute_dtype)
+    q = xc @ params["wq"].astype(compute_dtype)
+    k = xc @ params["wk"].astype(compute_dtype)
+    v = xc @ params["wv"].astype(compute_dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    q = q.reshape(B, T, num_heads, head_dim)
+    k = k.reshape(B, T, num_kv, head_dim)
+    v = v.reshape(B, T, num_kv, head_dim)
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def out_proj(params: dict, attn_out: jax.Array, compute_dtype) -> jax.Array:
+    B, T, H, D = attn_out.shape
+    return (attn_out.reshape(B, T, H * D).astype(compute_dtype)
+            @ params["wo"].astype(compute_dtype))

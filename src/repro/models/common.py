@@ -1,0 +1,91 @@
+"""Shared model building blocks: norms, RoPE, init, dtype handling.
+
+Parameters are plain nested dicts of jnp arrays (pytree-native so the
+federated masking in ``repro.core`` applies per-leaf with no adapter layer).
+Every init function takes an explicit PRNG key and dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rmsnorm", "layernorm", "norm_apply", "init_norm",
+    "rope_frequencies", "apply_rope", "softcap",
+    "dense_init", "embed_init",
+]
+
+
+# ---- norms ---------------------------------------------------------------
+def init_norm(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def norm_apply(x: jax.Array, params: dict, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# ---- rotary position embeddings -------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    freqs = rope_frequencies(x.shape[-1], theta)                    # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (..., T, D/2)
+    angles = angles[..., None, :]                                    # (..., T, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---- init ------------------------------------------------------------------
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: float | None = None) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    """std = d^-0.5 keeps tied-head logits O(1) at init (gemma2 rescales
+    the input side by sqrt(d) itself)."""
+    return (d ** -0.5 * jax.random.truncated_normal(
+        key, -2.0, 2.0, (vocab, d), jnp.float32)).astype(dtype)

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN: top-k routing with grouped, capacity-bounded
+dense dispatch (the Mesh-TF / MaxText formulation — fully static shapes, so
+it jits, scans and shards; XLA SPMD inserts the all-to-all when experts are
+sharded over the "model" axis).
+
+Tokens are processed in groups of ``group_size``; each group dispatches to a
+per-expert capacity of ``ceil(group_size * topk / E * capacity_factor)``.
+Overflow tokens are dropped (their combine weight is zero) — the standard
+trade for static shapes; the router aux loss keeps load balanced so drops
+stay rare.
+
+Shared experts (Qwen-MoE, Llama-4) run densely on every token and are fused
+into a single wide FFN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_moe_params(key, d_model: int, num_experts: int, d_ff: int,
+                    shared_d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d_model, num_experts), jnp.float32),
+        "wi": dense_init(ks[1], (num_experts, d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], (num_experts, d_ff, d_model), dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[3], (num_experts, d_model, d_ff), dtype)
+    if shared_d_ff:
+        p["shared_wi"] = dense_init(ks[4], (d_model, shared_d_ff), dtype)
+        p["shared_wo"] = dense_init(ks[5], (shared_d_ff, d_model), dtype)
+        if gated:
+            p["shared_wg"] = dense_init(ks[6], (d_model, shared_d_ff), dtype)
+    return p
+
+
+def _act(x, name):
+    return jax.nn.silu(x) if name == "silu" else jax.nn.gelu(x)
+
+
+def moe_ffn(params: dict, x: jax.Array, *, topk: int, act: str = "silu",
+            gated: bool = True, capacity_factor: float = 1.25,
+            group_size: int = 512, hints=None,
+            real_experts: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (out (B, T, d), aux_loss ()).
+
+    Routing in fp32; expert compute in x.dtype.  With ``hints`` the expert
+    axis of the dispatched activations shards over "model" when the expert
+    count divides it (expert parallelism; the dispatch einsum becomes the
+    all-to-all), otherwise experts stay data-local and the per-expert ffn
+    dim is the tensor-parallel axis (launch/shardings.py picks the matching
+    weight layout).
+    """
+    from repro.models.hints import apply_batch, apply_feature
+    B, T, d = x.shape
+    E = params["router"].shape[1]
+    n_tok = B * T
+    xf = x.reshape(n_tok, d)
+
+    g = min(group_size, n_tok)
+    n_groups = -(-n_tok // g)
+    pad = n_groups * g - n_tok
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xg = apply_batch(hints, xf.reshape(n_groups, g, d))
+
+    logits = (xg.astype(jnp.float32) @ params["router"])        # (G, g, E)
+    if real_experts and real_experts < E:
+        # padded experts (E rounded up for expert-parallel sharding) are
+        # never routable
+        logits = jnp.where(jnp.arange(E) < real_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, topk)          # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                           # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_ids[..., 0], E)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # capacity from the REAL expert count: padding E for sharding must not
+    # shrink per-expert buffers (test_moe_padding_preserves_output...)
+    cap = max(1, int(g * topk / (real_experts or E) * capacity_factor))
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32)     # (G, g, k, E)
+    flat = onehot.reshape(n_groups, g * topk, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) * flat - 1         # (G, g*k, E)
+    pos = jnp.max(pos_in_expert, axis=-1).reshape(n_groups, g, topk)
+    keep = (pos < cap) & (pos >= 0)
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch/combine tensors: (G, g, E, cap) one-hot over (expert, slot).
+    # Built slot-by-slot (k is small) so the (G,g,k,E,cap) intermediate is
+    # never materialised.
+    combine = jnp.zeros((n_groups, g, E, cap), x.dtype)
+    dispatch = jnp.zeros((n_groups, g, E, cap), x.dtype)
+    for s in range(topk):
+        e_oh = jax.nn.one_hot(expert_ids[..., s], E, dtype=x.dtype)
+        c_oh = jax.nn.one_hot(jnp.where(keep[..., s], pos[..., s], cap),
+                              cap + 1, dtype=x.dtype)[..., :-1]
+        d_s = e_oh[..., :, None] * c_oh[..., None, :]            # (G,g,E,cap)
+        dispatch = dispatch + d_s
+        combine = combine + d_s * gate_vals[..., s, None, None].astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg.astype(x.dtype))
+    xe = apply_feature(hints, xe, 1)            # expert-parallel if E divides
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"].astype(x.dtype))
+    if gated:
+        gate_h = jnp.einsum("gecd,edf->gecf", xe,
+                            params["wg"].astype(x.dtype))
+        h = _act(h, act) * gate_h
+    else:
+        h = _act(h, act)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(x.dtype))
+    ye = apply_feature(hints, ye, 1)
+    y = apply_batch(hints, jnp.einsum("gtec,gecd->gtd", combine, ye))
+
+    y = y.reshape(n_groups * g, d)[:n_tok]
+
+    if "shared_wi" in params:
+        hs = xf[:n_tok].astype(x.dtype) @ params["shared_wi"].astype(x.dtype)
+        if gated:
+            hs = _act(hs, act) * (xf[:n_tok].astype(x.dtype)
+                                  @ params["shared_wg"].astype(x.dtype))
+        else:
+            hs = _act(hs, act)
+        y = y + hs @ params["shared_wo"].astype(x.dtype)
+
+    return y.reshape(B, T, d).astype(x.dtype), aux.astype(jnp.float32)

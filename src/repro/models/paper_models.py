@@ -1,0 +1,188 @@
+"""The paper's client models (§5.1.3): LeNet (MNIST), VGG (CIFAR-10), and a
+GRU language model with tied embeddings (WikiText-2).
+
+Pure-JAX functional implementations over plain dict pytrees so the federated
+core (masking per leaf, FedAvg) applies without adapters.  ``*_loss`` take
+``(params, batch)`` with ``batch = (x, y)`` — the signature the federated
+round expects.
+
+Shapes are parameterised so the benchmarks can match the synthetic data
+(14x14 stand-in MNIST; 16x16x3 stand-in CIFAR) while the real dimensions
+remain available.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# conv helpers
+# ---------------------------------------------------------------------------
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    w = fan_in ** -0.5 * jax.random.truncated_normal(
+        key, -2.0, 2.0, (kh, kw, cin, cout), jnp.float32)
+    return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+
+def _conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x, size=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, size, size, 1),
+        "VALID")
+
+
+def _avgpool_all(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# LeNet (paper §5.2, MNIST)
+# ---------------------------------------------------------------------------
+def init_lenet(key, image_size: int = 28, channels: int = 1,
+               num_classes: int = 10) -> dict:
+    ks = jax.random.split(key, 5)
+    # two conv+pool stages then two dense layers (LeNet-5 shape)
+    s = image_size // 4
+    return {
+        "conv1": _conv_init(ks[0], 5, 5, channels, 6),
+        "conv2": _conv_init(ks[1], 5, 5, 6, 16),
+        "fc1": {"w": dense_init(ks[2], (s * s * 16, 120), jnp.float32),
+                "b": jnp.zeros((120,), jnp.float32)},
+        "fc2": {"w": dense_init(ks[3], (120, 84), jnp.float32),
+                "b": jnp.zeros((84,), jnp.float32)},
+        "out": {"w": dense_init(ks[4], (84, num_classes), jnp.float32),
+                "b": jnp.zeros((num_classes,), jnp.float32)},
+    }
+
+
+def lenet_forward(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(_conv(params["conv1"], x))
+    h = _maxpool(h)
+    h = jax.nn.relu(_conv(params["conv2"], h))
+    h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG (paper §5.2.4, CIFAR-10).  Width-scalable; width=1.0 ~ VGG-16-lite.
+# ---------------------------------------------------------------------------
+def init_vgg(key, image_size: int = 32, channels: int = 3,
+             num_classes: int = 10,
+             widths: Sequence[int] = (32, 64, 128, 128)) -> dict:
+    ks = jax.random.split(key, len(widths) * 2 + 2)
+    p = {}
+    cin = channels
+    for i, w in enumerate(widths):
+        p[f"conv{i}a"] = _conv_init(ks[2 * i], 3, 3, cin, w)
+        p[f"conv{i}b"] = _conv_init(ks[2 * i + 1], 3, 3, w, w)
+        cin = w
+    p["fc"] = {"w": dense_init(ks[-2], (cin, 256), jnp.float32),
+               "b": jnp.zeros((256,), jnp.float32)}
+    p["out"] = {"w": dense_init(ks[-1], (256, num_classes), jnp.float32),
+                "b": jnp.zeros((num_classes,), jnp.float32)}
+    return p
+
+
+def vgg_forward(params: dict, x: jax.Array) -> jax.Array:
+    h = x
+    i = 0
+    while f"conv{i}a" in params:
+        h = jax.nn.relu(_conv(params[f"conv{i}a"], h))
+        h = jax.nn.relu(_conv(params[f"conv{i}b"], h))
+        if min(h.shape[1], h.shape[2]) >= 2:
+            h = _maxpool(h)
+        i += 1
+    h = _avgpool_all(h)
+    h = jax.nn.relu(h @ params["fc"]["w"] + params["fc"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def classifier_loss(forward_fn):
+    def loss(params, batch):
+        x, y = batch
+        logits = forward_fn(params, x)
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=1))
+    return loss
+
+
+def classifier_accuracy(forward_fn):
+    def acc(params, batch):
+        x, y = batch
+        return jnp.mean(jnp.argmax(forward_fn(params, x), -1) == y)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# GRU language model, tied embeddings (paper §5.3)
+# ---------------------------------------------------------------------------
+def init_gru_lm(key, vocab: int, d_embed: int = 128, d_hidden: int = 128,
+                tied: bool = True) -> dict:
+    ks = jax.random.split(key, 8)
+    d = d_hidden
+    p = {
+        "embed": (d_embed ** -0.5 * jax.random.normal(
+            ks[0], (vocab, d_embed))).astype(jnp.float32),
+        # GRU: update z, reset r, candidate n
+        "wz": dense_init(ks[1], (d_embed + d, d), jnp.float32),
+        "wr": dense_init(ks[2], (d_embed + d, d), jnp.float32),
+        "wn": dense_init(ks[3], (d_embed + d, d), jnp.float32),
+        "bz": jnp.zeros((d,), jnp.float32),
+        "br": jnp.zeros((d,), jnp.float32),
+        "bn": jnp.zeros((d,), jnp.float32),
+        "proj": dense_init(ks[4], (d, d_embed), jnp.float32),
+    }
+    if not tied:
+        p["head"] = dense_init(ks[5], (d_embed, vocab), jnp.float32)
+    return p
+
+
+def gru_lm_forward(params: dict, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, T) -> logits (B, T, V)."""
+    B, T = tokens.shape
+    d = params["bz"].shape[0]
+    e = params["embed"][tokens]                      # (B, T, de)
+
+    def step(h, xt):
+        hx = jnp.concatenate([xt, h], axis=-1)
+        z = jax.nn.sigmoid(hx @ params["wz"] + params["bz"])
+        r = jax.nn.sigmoid(hx @ params["wr"] + params["br"])
+        hxr = jnp.concatenate([xt, r * h], axis=-1)
+        n = jnp.tanh(hxr @ params["wn"] + params["bn"])
+        h = (1 - z) * n + z * h
+        return h, h
+
+    h0 = jnp.zeros((B, d), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, e.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                       # (B, T, d)
+    out = hs @ params["proj"]
+    if "head" in params:
+        return out @ params["head"]
+    return out @ params["embed"].T                   # tied
+
+
+def gru_lm_loss(params: dict, batch) -> jax.Array:
+    x, y = batch
+    logits = gru_lm_forward(params, x)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, y[..., None], axis=-1))
+
+
+def perplexity(params: dict, batch) -> jax.Array:
+    return jnp.exp(gru_lm_loss(params, batch))

@@ -1,0 +1,109 @@
+"""Selective SSM (Mamba-style) branch for the Hymba hybrid heads
+[arXiv:2411.13676].
+
+Recurrence (per channel c, state dim n):
+
+    h_t = exp(dt_t * A_c) * h_{t-1} + dt_t * B_t[n] * x_t[c]
+    y_t[c] = sum_n C_t[n] * h_t[c, n] + D_c * x_t[c]
+
+with data-dependent B_t, C_t, dt_t (selective scan).  On TPU the linear
+recurrence is evaluated with ``jax.lax.associative_scan`` inside time chunks
+(a ``lax.scan`` over chunks bounds the transient (B, C, d, N) tensors),
+which maps onto the VPU as a log-depth tree instead of a T-step serial loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+SSM_CHUNK = 512
+
+
+def init_ssm_params(key, d_model: int, d_inner: int, state: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    dt_rank = max(8, d_inner // 16)
+    # A initialised to -[1..N] per channel (S4D-real), stored as log(-A)
+    a0 = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32)[None],
+                  (d_inner, 1))
+    return {
+        "w_in": dense_init(ks[0], (d_model, 2 * d_inner), dtype),   # x and gate
+        "w_bcdt": dense_init(ks[1], (d_inner, 2 * state + dt_rank), dtype),
+        "w_dt": dense_init(ks[2], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.full((d_inner,), -2.0, dtype),   # softplus(-2) ~ 0.13
+        "log_a": jnp.log(a0).astype(dtype),
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[3], (d_inner, d_model), dtype),
+    }
+
+
+def _selective_terms(params, xz):
+    """Shared by scan/step: returns (x, z, a (decay), bx (input), C)."""
+    d_inner = params["d_skip"].shape[0]
+    state = params["log_a"].shape[1]
+    f32 = jnp.float32
+    x, z = jnp.split(xz, 2, axis=-1)                    # (..., d_inner) each
+    bcdt = x.astype(f32) @ params["w_bcdt"].astype(f32)
+    Bm, Cm, dt_lr = (bcdt[..., :state], bcdt[..., state:2 * state],
+                     bcdt[..., 2 * state:])
+    dt = jax.nn.softplus(dt_lr @ params["w_dt"].astype(f32) +
+                         params["dt_bias"].astype(f32))  # (..., d_inner)
+    A = -jnp.exp(params["log_a"].astype(f32))           # (d_inner, N)
+    a = jnp.exp(dt[..., None] * A[None])                # (..., d_inner, N)
+    bx = (dt * x.astype(f32))[..., None] * Bm[..., None, :]  # (..., d, N)
+    return x, z, a, bx, Cm
+
+
+def ssm_forward(params: dict, xz: jax.Array, h0: jax.Array, hints=None):
+    """xz: (B, T, 2*d_inner) pre-projected; h0: (B, d_inner, N).
+    Returns (y (B, T, d_inner-projected to d via w_out outside), h_T)."""
+    from repro.models.hints import apply_feature
+    B, T, _ = xz.shape
+    xz = apply_feature(hints, xz, 2)
+    x, z, a, bx, Cm = _selective_terms(params, xz)      # a,bx: (B,T,d,N)
+    a = apply_feature(hints, a, 2)
+    bx = apply_feature(hints, bx, 2)
+
+    chunk = min(SSM_CHUNK, T)
+    while T % chunk:
+        chunk //= 2
+    n = T // chunk
+
+    def body(h, blk):
+        ab, bxb, cb = blk                               # (B, chunk, d, N) / C
+        # prepend carry as a pseudo-step: h_t = a_t h_{t-1} + bx_t
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        a_all, b_all = jax.lax.associative_scan(
+            combine, (ab, bxb), axis=1)
+        h_seq = a_all * h[:, None] + b_all              # (B, chunk, d, N)
+        # contract with C HERE: stacking h_seq across chunks would
+        # materialise a (B, T, d, N) = N x activation-sized tensor
+        # (§Perf hillclimb 2: 6.7 GB/layer on hymba prefill_32k).
+        y_blk = jnp.einsum("btdn,btn->btd", h_seq, cb)
+        return h_seq[:, -1], y_blk
+
+    a_c = a.reshape(B, n, chunk, *a.shape[2:]).transpose(1, 0, 2, 3, 4)
+    bx_c = bx.reshape(B, n, chunk, *bx.shape[2:]).transpose(1, 0, 2, 3, 4)
+    c_c = Cm.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    hT, y_blocks = jax.lax.scan(body, h0.astype(jnp.float32),
+                                (a_c, bx_c, c_c))
+    y = y_blocks.transpose(1, 0, 2, 3).reshape(B, T, -1)
+
+    y = y + params["d_skip"].astype(jnp.float32) * x.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(xz.dtype), hT
+
+
+def ssm_step(params: dict, xz: jax.Array, h: jax.Array):
+    """Decode: xz (B, 1, 2*d_inner), h (B, d_inner, N)."""
+    x, z, a, bx, Cm = _selective_terms(params, xz[:, 0])
+    h = a * h + bx                                      # (B, d, N)
+    y = jnp.einsum("bdn,bn->bd", h, Cm)
+    y = y + params["d_skip"].astype(jnp.float32) * x.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y[:, None].astype(xz.dtype), h

@@ -1,0 +1,7 @@
+"""Optimizers (pure JAX, optax-style (init, update) pairs)."""
+
+from repro.optim.optimizers import (
+    Optimizer, sgd, adam, adamw, adafactor, apply_updates,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine

@@ -1,0 +1,155 @@
+"""SGD / Adam / AdamW implemented directly in JAX.
+
+The federated clients use plain SGD (paper Alg. 2/4 line 8); the pod-scale
+training driver defaults to AdamW.  Interface mirrors optax:
+``opt.init(params) -> state``, ``opt.update(grads, state, params) ->
+(updates, state)``; apply with :func:`apply_updates`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]
+
+
+def _lr_at(lr: Schedule, count: jnp.ndarray) -> jnp.ndarray:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(learning_rate: Schedule, momentum: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        vel = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"count": jnp.zeros((), jnp.int32), "velocity": vel}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        lr = _lr_at(learning_rate, count)
+        if momentum:
+            vel = jax.tree.map(lambda v, g: momentum * v + g,
+                               state["velocity"], grads)
+            if nesterov:
+                step = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+            else:
+                step = vel
+        else:
+            vel, step = None, grads
+        updates = jax.tree.map(lambda s: -lr * s, step)
+        return updates, {"count": count, "velocity": vel}
+
+    return Optimizer(init, update)
+
+
+def adam(learning_rate: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        lr = _lr_at(learning_rate, count)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+
+        def step(m, n, p):
+            upd = (m * mu_hat_scale) / (jnp.sqrt(n * nu_hat_scale) + eps)
+            if weight_decay and p is not None:
+                upd = upd + weight_decay * p
+            return -lr * upd
+
+        if weight_decay:
+            updates = jax.tree.map(step, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, n: step(m, n, None), mu, nu)
+        return updates, {"count": count, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    return adam(learning_rate, b1, b2, eps, weight_decay)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                         for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adafactor(learning_rate: Schedule, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0) -> Optimizer:
+    """Adafactor (Shazeer & Stern, 2018) with factored second moments and no
+    first moment: O(n+m) optimizer state for an (n, m) matrix instead of
+    Adam's 2nm.  This is what lets the 400B llama4 config train on a single
+    256-chip pod (16 GB HBM/chip); see EXPERIMENTS.md §Dry-run."""
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"count": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(leaf, params,
+                                  is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** -decay
+        lr = _lr_at(learning_rate, count)
+
+        def leaf(g, v):
+            g2 = jnp.square(g.astype(jnp.float32)) + eps
+            if g.ndim >= 2:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                keepdims=True)[..., None],
+                                       eps))
+                upd = g.astype(jnp.float32) * jax.lax.rsqrt(denom + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                upd = g.astype(jnp.float32) * jax.lax.rsqrt(nv["v"] + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * upd, nv
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        outs = [leaf(g, v) for g, v in zip(flat_g, flat_v)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return updates, {"count": count, "v": new_v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def fn(count):
+        frac = jnp.clip(count.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return init_value * ((1 - alpha) * cos + alpha)
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, decay_steps: int,
+                  floor: float = 0.0):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((c - warmup_steps) / jnp.maximum(decay_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return fn

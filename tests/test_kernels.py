@@ -1,0 +1,183 @@
+"""Pallas kernel validation (interpret=True on CPU) vs the pure-jnp oracle,
+sweeping shapes and dtypes per the spec."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import topk_mask as tk
+
+
+SHAPES = [(256,), (1000,), (128, 128), (300, 77), (8, 8, 65)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, dtype, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_exponent_histogram_kernel(shape, dtype):
+    x = _rand(shape, dtype, seed=1)
+    x2d = ops._pad_to_blocks(x.reshape(-1).astype(jnp.float32))
+    got = tk.exponent_histogram(x2d, interpret=True)
+    want = ref.exponent_histogram_ref(x.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("tau", [0.0, 0.5, 1.5])
+def test_count_kernel(shape, tau):
+    x = _rand(shape, jnp.float32, seed=2)
+    x2d = ops._pad_to_blocks(x.reshape(-1))
+    got = tk.count_ge(x2d, jnp.asarray(tau + 1e-9), interpret=True)
+    want = ref.count_ge_ref(x, tau + 1e-9)
+    # padding zeros count when tau == 0; use tau > 0 effectively
+    assert int(got) == int(want)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_apply_threshold_kernel(shape, dtype):
+    x = _rand(shape, dtype, seed=3)
+    flat = x.reshape(-1).astype(jnp.float32)
+    x2d = ops._pad_to_blocks(flat)
+    tau = jnp.asarray(0.7)
+    got = tk.apply_threshold(x2d, tau, interpret=True)
+    want = ref.threshold_mask_ref(x2d, 0.7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("gamma", [0.05, 0.2, 0.5, 0.9])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_topk_mask_kernel_vs_oracle(shape, gamma, dtype):
+    """End-to-end kernel pipeline vs exact-sort oracle.
+
+    For continuous random input the threshold pipeline must (a) keep <= k
+    entries, (b) keep only entries at least as large as everything it
+    drops, (c) agree with the oracle on clearly-separated magnitudes."""
+    x = _rand(shape, dtype, seed=4)
+    out = ops.topk_mask(x, gamma, interpret=True)
+    assert out.shape == x.shape and out.dtype == x.dtype
+
+    n = x.size
+    k = max(1, round(gamma * n))
+    kept_mask = np.asarray(out != 0).reshape(-1)
+    mags = np.abs(np.asarray(x, np.float32)).reshape(-1)
+    assert kept_mask.sum() <= k
+    assert kept_mask.sum() >= max(1, int(0.9 * k) - 2)
+    if kept_mask.any() and (~kept_mask).any():
+        assert mags[kept_mask].min() >= mags[~kept_mask].max() - 1e-6
+
+
+def test_topk_mask_kernel_exact_against_sort_oracle():
+    """With well-separated magnitudes the kernel output must match the
+    oracle exactly."""
+    base = jnp.arange(1, 513, dtype=jnp.float32)          # distinct magnitudes
+    sign = jnp.where(jnp.arange(512) % 2 == 0, 1.0, -1.0)
+    x = (base * sign)[jax.random.permutation(jax.random.PRNGKey(0), 512)]
+    got = ops.topk_mask(x, 0.25, interpret=True)
+    want = ref.topk_mask_ref(x, 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_topk_mask_kernel_preserves_values():
+    x = _rand((2048,), jnp.float32, seed=5)
+    out = ops.topk_mask(x, 0.3, interpret=True)
+    nz = np.asarray(out != 0)
+    np.testing.assert_allclose(np.asarray(out)[nz], np.asarray(x)[nz])
+
+
+def test_masked_count_kernel():
+    x = _rand((4096,), jnp.float32, seed=6)
+    got = ops.masked_count(x, 0.5, interpret=True)
+    assert int(got) == int(jnp.sum(jnp.abs(x) >= 0.5))
+
+
+def test_histogram_threshold_octave_bounds():
+    """select_threshold returns an octave [lo, hi) bracketing the k-th
+    largest magnitude."""
+    x = _rand((8192,), jnp.float32, seed=7)
+    x2d = ops._pad_to_blocks(jnp.abs(x.reshape(-1)))
+    hist = tk.exponent_histogram(x2d, interpret=True)
+    for k in [1, 64, 1024]:
+        lo, hi = tk.select_threshold(hist, jnp.asarray(k))
+        kth = jnp.sort(jnp.abs(x))[x.size - k]
+        assert float(lo) <= float(kth) < float(hi) * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pallas SSM-scan kernel (kernels/ssm_scan.py) — §Perf hillclimb 2 outcome
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 8, 4, 2), (2, 37, 19, 4),
+                                   (2, 300, 33, 16), (1, 256, 256, 8)])
+def test_ssm_scan_kernel_vs_oracle(shape):
+    B, T, d, N = shape
+    key = jax.random.PRNGKey(0)
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, T, d, N)))
+    bx = jax.random.normal(jax.random.fold_in(key, 1), (B, T, d, N))
+    c = jax.random.normal(jax.random.fold_in(key, 2), (B, T, N))
+    h0 = jax.random.normal(jax.random.fold_in(key, 3), (B, d, N))
+    y, hT = ops.ssm_scan(a, bx, c, h0, interpret=True)
+    yr, hTr = ref.ssm_scan_ref(a.transpose(0, 1, 3, 2),
+                               bx.transpose(0, 1, 3, 2), c,
+                               h0.transpose(0, 2, 1))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT),
+                               np.asarray(hTr.transpose(0, 2, 1)), atol=1e-5)
+
+
+def test_ssm_scan_kernel_matches_model_ssm():
+    """End-to-end: the kernel computes the same recurrence the hymba model
+    uses (models/ssm.ssm_forward, pre-gate/skip)."""
+    from repro.models import ssm as ssm_lib
+    key = jax.random.PRNGKey(5)
+    d_model, d_inner, N, B, T = 16, 16, 4, 2, 64
+    params = ssm_lib.init_ssm_params(key, d_model, d_inner, N, jnp.float32)
+    xz = jax.random.normal(jax.random.fold_in(key, 1), (B, T, 2 * d_inner))
+    h0 = jnp.zeros((B, d_inner, N))
+
+    x, z, a, bx, Cm = ssm_lib._selective_terms(params, xz)
+    y_kernel, hT_kernel = ops.ssm_scan(a, bx, Cm, h0, interpret=True)
+
+    # reference path: full model forward minus gate/skip
+    _, hT_model = ssm_lib.ssm_forward(params, xz, h0)
+    np.testing.assert_allclose(np.asarray(hT_kernel), np.asarray(hT_model),
+                               atol=1e-4, rtol=1e-4)
+    # and the y-term before gating: recompute via step loop
+    h = h0
+    ys = []
+    for t in range(T):
+        h = a[:, t] * h + bx[:, t]
+        ys.append(jnp.einsum("bdn,bn->bd", h, Cm[:, t]))
+    np.testing.assert_allclose(np.asarray(y_kernel),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas wkv6 kernel (kernels/wkv6.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("T", [8, 64, 100])
+def test_wkv6_kernel_vs_chunked_and_naive(T):
+    from repro.models import rwkv as rwkv_lib
+    key = jax.random.PRNGKey(11)
+    B, H, D = 2, 3, 8
+    r = jax.random.normal(key, (B, T, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, D))
+    logw = -jnp.exp(jax.random.uniform(
+        jax.random.fold_in(key, 3), (B, T, H, D), minval=-4.0, maxval=1.0))
+    u = 0.1 * jax.random.normal(jax.random.fold_in(key, 4), (H, D))
+    s0 = jax.random.normal(jax.random.fold_in(key, 5), (B, H, D, D))
+
+    y_k, s_k = ops.wkv6(r, k, v, logw, u, s0, interpret=True)
+    y_m, s_m = rwkv_lib.wkv6_chunked(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_m),
+                               atol=2e-3, rtol=2e-3)

@@ -1,0 +1,120 @@
+"""Masking semantics (paper §3.2.1 / §4.2): exact-sort oracle vs the
+TPU-native threshold bisection, plus property tests via hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masking import (MaskingConfig, mask_pytree, random_mask,
+                                selective_mask_exact,
+                                selective_mask_threshold, threshold_for_topk)
+
+
+def test_exact_topk_keeps_k_largest():
+    x = jnp.asarray([0.1, -5.0, 3.0, -0.2, 4.0, 0.05])
+    out = selective_mask_exact(x, gamma=0.5)
+    np.testing.assert_allclose(out, [0.0, -5.0, 3.0, 0.0, 4.0, 0.0])
+
+
+def test_exact_topk_tie_handling():
+    x = jnp.ones((10,))
+    out = selective_mask_exact(x, gamma=0.3)
+    assert int(jnp.sum(out != 0)) == 3
+
+
+@pytest.mark.parametrize("gamma", [0.1, 0.3, 0.5, 0.9])
+def test_threshold_matches_exact_on_distinct_values(gamma):
+    key = jax.random.PRNGKey(42)
+    x = jax.random.normal(key, (4096,))           # ties ~impossible
+    a = selective_mask_exact(x, gamma)
+    b = selective_mask_threshold(x, gamma, iters=40)
+    np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.05, 0.2, 0.5, 0.8]),
+       st.sampled_from([64, 257, 1024, 4096]))
+@settings(max_examples=25, deadline=None)
+def test_threshold_count_within_tolerance(seed, gamma, n):
+    """Property: bisection keeps <= k entries and >= k * (1-eps) for
+    continuous inputs."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    out = selective_mask_threshold(x, gamma, iters=40)
+    k = max(1, round(gamma * n))
+    kept = int(jnp.sum(out != 0))
+    assert kept <= k
+    assert kept >= int(0.95 * k) - 1
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.1, 0.5]))
+@settings(max_examples=10, deadline=None)
+def test_threshold_selects_largest_magnitudes(seed, gamma):
+    """Property: every kept entry's |value| >= every dropped entry's |value|."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+    out = selective_mask_threshold(x, gamma, iters=40)
+    kept = jnp.abs(x)[out != 0]
+    dropped = jnp.abs(x)[out == 0]
+    if kept.size and dropped.size:
+        assert float(kept.min()) >= float(dropped.max())
+
+
+def test_threshold_for_topk_invariant():
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (1000,)))
+    for k in [1, 10, 100, 999]:
+        tau = threshold_for_topk(x, jnp.asarray(k), iters=40)
+        assert int(jnp.sum(x >= tau)) <= k
+
+
+def test_random_mask_exact_count():
+    key = jax.random.PRNGKey(0)
+    x = jnp.ones((1000,))
+    out = random_mask(key, x, gamma=0.3)
+    assert int(jnp.sum(out != 0)) == 300
+
+
+def test_random_mask_unbiased_mean():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (200,))
+    outs = jnp.stack([random_mask(jax.random.fold_in(key, i), x, 0.5)
+                      for i in range(300)])
+    np.testing.assert_allclose(outs.mean(0), 0.5 * x, atol=0.2)
+
+
+def test_mask_pytree_small_leaves_pass_dense():
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (64, 64)),
+            "b": jax.random.normal(key, (8,))}
+    cfg = MaskingConfig(gamma=0.1, mode="selective", min_leaf_size=256)
+    out = mask_pytree(key, tree, cfg)
+    np.testing.assert_allclose(out["b"], tree["b"])   # too small: dense
+    assert int(jnp.sum(out["w"] != 0)) <= round(0.1 * 64 * 64)
+
+
+def test_mask_pytree_mode_none_identity():
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (32, 32))}
+    out = mask_pytree(key, tree, MaskingConfig(gamma=0.5, mode="none"))
+    np.testing.assert_allclose(out["w"], tree["w"])
+
+
+def test_masking_is_jittable_and_vmappable():
+    xs = jax.random.normal(jax.random.PRNGKey(0), (4, 512))
+    f = jax.jit(jax.vmap(lambda x: selective_mask_threshold(x, 0.2)))
+    out = f(xs)
+    assert out.shape == xs.shape
+    for i in range(4):
+        b = selective_mask_threshold(xs[i], 0.2)
+        np.testing.assert_allclose(out[i], b, atol=1e-7)
+
+
+def test_fed_pod_threshold_mask_matches_core():
+    """launch/fedtrain._threshold_mask (client/layer-stacked) agrees with the
+    per-leaf core implementation."""
+    from repro.launch.fedtrain import _threshold_mask
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 2, 257))   # (C, G, n)
+    out = _threshold_mask(x, 0.25, iters=40)
+    for c in range(3):
+        for g in range(2):
+            ref = selective_mask_threshold(x[c, g], 0.25, iters=40)
+            np.testing.assert_allclose(out[c, g], ref, atol=1e-7)

@@ -1,0 +1,230 @@
+"""Substrate tests: compression/byte accounting, checkpointing, optimizers,
+data pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.compression import (decode_sparse, encode_sparse,
+                                    payload_bytes, pytree_payload_bytes)
+from repro.data import (class_gaussian_images, iid_partition_images,
+                        markov_text, noniid_partition_images, partition_text)
+from repro.optim import (adafactor, adam, adamw, apply_updates,
+                         clip_by_global_norm, sgd)
+from repro.optim.schedules import cosine_decay, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+def test_payload_bytes_auto_picks_cheaper():
+    b_small, enc_small = payload_bytes(10_000, 0.01)    # coord wins
+    assert enc_small == "coordinate"
+    b_big, enc_big = payload_bytes(10_000, 0.5)         # bitmap wins
+    assert enc_big == "bitmap"
+    assert b_small == round(0.01 * 10_000) * 8
+    assert b_big == 5000 * 4 + 1250
+
+
+def test_payload_dense_at_gamma_1():
+    b, enc = payload_bytes(1000, 1.0)
+    assert enc == "dense" and b == 4000
+
+
+@given(st.integers(1, 5000), st.sampled_from([0.05, 0.3, 0.9]))
+@settings(max_examples=30, deadline=None)
+def test_payload_never_exceeds_dense(n, gamma):
+    b, _ = payload_bytes(n, gamma)
+    assert b <= n * 4 + (n + 7) // 8
+
+
+def test_sparse_roundtrip():
+    x = jnp.zeros((64,)).at[jnp.asarray([3, 17, 50])].set(
+        jnp.asarray([1.5, -2.0, 0.25])).reshape(8, 8)
+    payload = encode_sparse(x, k=3)
+    back = decode_sparse(payload)
+    np.testing.assert_allclose(back, x)
+
+
+def test_pytree_payload_accounts_small_leaves_dense():
+    tree = {"big": jnp.zeros((1024,)), "small": jnp.zeros((16,))}
+    stats = pytree_payload_bytes(tree, gamma=0.1, min_leaf_size=256)
+    assert stats.dense_bytes == (1024 + 16) * 4
+    expected_sparse = payload_bytes(1024, 0.1)[0] + 16 * 4
+    assert stats.sparse_bytes == expected_sparse
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"note": "hi"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step, extra = restore_checkpoint(str(tmp_path), like)
+    assert step == 7 and extra["note"] == "hi"
+    for a, b in zip(jax.tree_util.tree_leaves(restored),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest_and_shape_mismatch(tmp_path):
+    tree = {"a": jnp.ones((2,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"a": jnp.ones((3,))})
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+def _quad_min(opt, steps=300):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    p = {"w": jnp.zeros(3)}
+    s = opt.init(p)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - target) ** 2))(p)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s
+
+    for _ in range(steps):
+        p, s = step(p, s)
+    return float(jnp.max(jnp.abs(p["w"] - target)))
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adam(0.1), adamw(0.1, weight_decay=0.0),
+                                 adafactor(0.3)])
+def test_optimizers_minimise_quadratic(opt):
+    assert _quad_min(opt) < 0.05
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(0.1)
+    p = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    s = opt.init(p)
+    assert s["v"]["w"]["vr"].shape == (64,)
+    assert s["v"]["w"]["vc"].shape == (32,)
+    assert s["v"]["b"]["v"].shape == (32,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedules():
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cd(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+    wc = warmup_cosine(1.0, 10, 100)
+    assert float(wc(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_synthetic_images_learnable_stats():
+    d = class_gaussian_images(num_train=512, num_test=128, image_size=8,
+                              seed=0)
+    assert d.train_x.shape == (512, 8, 8, 1)
+    assert set(np.unique(d.train_y)) <= set(range(10))
+    # classes differ in mean (separable signal exists)
+    m0 = d.train_x[d.train_y == 0].mean(0)
+    m1 = d.train_x[d.train_y == 1].mean(0)
+    assert np.abs(m0 - m1).max() > 0.3
+
+
+def test_markov_text_nonuniform():
+    d = markov_text(num_train=20_000, num_test=1000, vocab_size=64, seed=0)
+    counts = np.bincount(d.train_tokens, minlength=64)
+    assert counts.max() > 3 * max(counts.min(), 1)   # Zipf-ish, not uniform
+
+
+def test_iid_partition_shapes_and_coverage():
+    d = class_gaussian_images(num_train=640, num_test=64, image_size=8)
+    xs, ys, n = iid_partition_images(d.train_x, d.train_y, 10, 16)
+    assert xs.shape == (10, 4, 16, 8, 8, 1)
+    assert ys.shape == (10, 4, 16)
+    np.testing.assert_array_equal(n, np.full(10, 64.0))
+
+
+def test_noniid_partition_is_label_skewed():
+    d = class_gaussian_images(num_train=2000, num_test=64, image_size=8)
+    xs, ys, _ = noniid_partition_images(d.train_x, d.train_y, 10, 10,
+                                        shards_per_client=2)
+    labels_per_client = [len(np.unique(ys[c])) for c in range(10)]
+    assert np.mean(labels_per_client) <= 4      # pathological skew
+
+
+def test_partition_text_windows():
+    d = markov_text(num_train=10_000, vocab_size=64)
+    x, y, n = partition_text(d.train_tokens, 4, 8, 16)
+    assert x.shape[0] == 4 and x.shape[-1] == 16
+    np.testing.assert_array_equal(x[0, 0, 0, 1:], y[0, 0, 0, :-1])
+
+
+# ---------------------------------------------------------------------------
+# int8 quantised uploads (beyond-paper)
+# ---------------------------------------------------------------------------
+def test_int8_roundtrip_error_bounded():
+    from repro.core.compression import dequantize_int8, quantize_int8
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    back = dequantize_int8(quantize_int8(x))
+    # symmetric int8: max error <= scale/2 = max|x| / 254
+    assert float(jnp.abs(back - x).max()) <= float(jnp.abs(x).max()) / 254 + 1e-9
+
+
+def test_int8_preserves_masked_zeros():
+    from repro.core.compression import dequantize_int8, quantize_int8
+    from repro.core.masking import selective_mask_threshold
+    x = selective_mask_threshold(
+        jax.random.normal(jax.random.PRNGKey(1), (2048,)), 0.1)
+    back = dequantize_int8(quantize_int8(x))
+    np.testing.assert_array_equal(np.asarray(back == 0), np.asarray(x == 0))
+
+
+def test_int8_quantized_federated_round_still_learns():
+    """Masked + int8-quantised uploads keep the federated round convergent."""
+    from repro.core.compression import dequantize_pytree, quantize_pytree
+    from repro.core.masking import MaskingConfig, mask_pytree
+    from repro.models import classifier_loss, init_lenet, lenet_forward
+    from repro.data import class_gaussian_images, iid_partition_images
+    import jax
+
+    data = class_gaussian_images(num_train=256, num_test=64, image_size=8,
+                                 noise=0.5, seed=0)
+    xs, ys, _ = iid_partition_images(data.train_x, data.train_y, 4, 16)
+    loss_fn = classifier_loss(lenet_forward)
+    params = init_lenet(jax.random.PRNGKey(0), 8)
+    key = jax.random.PRNGKey(1)
+
+    losses = []
+    for r in range(6):
+        deltas = []
+        for c in range(4):
+            batch = (jnp.asarray(xs[c, 0]), jnp.asarray(ys[c, 0]))
+            g = jax.grad(loss_fn)(params, batch)
+            delta = jax.tree.map(lambda x: -0.1 * x, g)
+            masked = mask_pytree(jax.random.fold_in(key, r * 4 + c), delta,
+                                 MaskingConfig(mode="selective", gamma=0.3))
+            deltas.append(dequantize_pytree(quantize_pytree(masked)))
+        params = jax.tree.map(
+            lambda p, *ds: p + sum(ds) / len(ds), params, *deltas)
+        losses.append(float(loss_fn(params, (jnp.asarray(xs[0, 0]),
+                                             jnp.asarray(ys[0, 0])))))
+    assert losses[-1] < losses[0]
