@@ -1,9 +1,21 @@
 """Masking micro-benchmarks: Pallas kernel pipeline (interpret mode on this
 CPU container; compiled on TPU) vs the pure-jnp bisection vs the exact sort,
-plus the analytic sweep-count accounting that matters on TPU (the kernel
-does 1 histogram + ``iters`` count sweeps + 1 apply = ``iters+2`` HBM passes
-vs ``2*iters+1`` for pure bisection and a full sort for the oracle)."""
+plus the analytic HBM-sweep accounting that matters on TPU:
 
+* per-array kernel pipeline: 1 histogram + ``iters`` count sweeps + 1 apply
+  = ``iters + 2`` passes (the bracket counts are threaded from the histogram,
+  so there is no post-refine counting sweep), vs ``2*iters + 1`` for pure
+  bisection and a full sort for the oracle;
+* whole-pytree masking: the segmented single-pass subsystem
+  (``ops.topk_mask_pytree``) costs ``refine_sweeps + 2`` sweeps TOTAL —
+  leaf-count independent — vs ``L * (iters + 2)`` for the per-leaf loop.
+
+The whole-pytree rows are also written to ``BENCH_masking.json`` at the repo
+root so the perf trajectory tracks this hot path.
+"""
+
+import json
+import os
 import time
 
 import jax
@@ -12,33 +24,101 @@ import jax.numpy as jnp
 from repro.core.masking import selective_mask_exact, selective_mask_threshold
 from repro.kernels import ops
 
+ITERS = 8
+BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_masking.json")
 
-def _time(fn, *args, reps=3):
-    fn(*args).block_until_ready()               # compile
-    t0 = time.perf_counter()
+
+def _time(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))            # compile
+    best = float("inf")
     for _ in range(reps):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _paper_models_pytree(seed=0):
+    """The paper's actual workload shape: VGG + GRU-LM deltas — dozens of
+    small/odd leaves, the regime where the per-leaf pipeline pads every leaf
+    to a full kernel tile and retraces per distinct shape."""
+    from repro.models import init_gru_lm, init_vgg
+    key = jax.random.PRNGKey(seed)
+    return {"vgg": init_vgg(key, 16, 3, widths=(16, 32, 64)),
+            "gru": init_gru_lm(jax.random.fold_in(key, 1), 256, 64, 64)}
+
+
+def _transformer_pytree(seed=0, layers=12, d=256):
+    """A big-leaf transformer-stack delta (62 leaves, ~10M params)."""
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i in range(layers):
+        for j, s in enumerate([(d, 3 * d), (d, d), (d, 4 * d),
+                               (4 * d, d), (d,)]):
+            tree[f"l{i}_{j}"] = jax.random.normal(
+                jax.random.fold_in(key, i * 10 + j), s)
+    tree["embed"] = jax.random.normal(jax.random.fold_in(key, 999), (1000, d))
+    tree["odd"] = jax.random.normal(jax.random.fold_in(key, 998), (300, 77))
+    return tree
+
+
+def _per_leaf_mask(tree, gamma, min_leaf_size=256):
+    return jax.tree.map(
+        lambda leaf: (leaf if leaf.size < min_leaf_size
+                      else ops.topk_mask(leaf, gamma, iters=ITERS,
+                                         interpret=True)),
+        tree)
 
 
 def run():
     rows = []
+    gamma = 0.1
     for n in (1 << 16, 1 << 20):
         x = jax.random.normal(jax.random.PRNGKey(0), (n,))
-        gamma = 0.1
         t_sort = _time(jax.jit(
             lambda x: selective_mask_exact(x, gamma)), x)
         t_bisect = _time(jax.jit(
             lambda x: selective_mask_threshold(x, gamma, 24)), x)
         t_kernel = _time(
-            lambda x: ops.topk_mask(x, gamma, interpret=True), x)
+            lambda x: ops.topk_mask(x, gamma, iters=ITERS, interpret=True), x)
         rows.append({
             "figure": "kernels", "n": n, "gamma": gamma,
             "sort_us": round(t_sort, 1),
             "bisect_us": round(t_bisect, 1),
             "kernel_interpret_us": round(t_kernel, 1),
-            "kernel_hbm_sweeps": 8 + 2,
+            "kernel_hbm_sweeps": ITERS + 2,
             "bisect_hbm_sweeps": 2 * 24 + 1,
         })
-    return rows
+
+    # ---- whole-pytree masking: per-leaf pipeline vs segmented single-pass
+    mask_rows = []
+    for model, tree in [("paper_vgg_gru", _paper_models_pytree()),
+                        ("transformer_12L", _transformer_pytree())]:
+        leaves = jax.tree_util.tree_leaves(tree)
+        maskable = sum(1 for l in leaves if l.size >= 256)
+        t_per_leaf = _time(lambda t: _per_leaf_mask(t, gamma), tree)
+        t_seg = _time(
+            lambda t: ops.topk_mask_pytree(t, gamma, interpret=True), tree)
+        mask_rows.append({
+            "figure": "masking_pytree", "model": model, "gamma": gamma,
+            "num_leaves": len(leaves), "maskable_leaves": maskable,
+            "num_params": int(sum(l.size for l in leaves)),
+            "per_leaf_us": round(t_per_leaf, 1),
+            "segmented_us": round(t_seg, 1),
+            "speedup": round(t_per_leaf / max(t_seg, 1e-9), 2),
+            "per_leaf_hbm_sweeps": ops.pytree_sweep_count(
+                maskable, segmented=False, iters=ITERS),
+            "segmented_hbm_sweeps": ops.pytree_sweep_count(
+                maskable, segmented=True),
+            "per_leaf_kernel_launches": maskable * (ITERS + 2),
+            "segmented_kernel_launches": ops.DEFAULT_REFINE_SWEEPS + 2,
+        })
+    with open(BENCH_PATH, "w") as f:
+        json.dump(mask_rows, f, indent=1)
+    return rows + mask_rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

@@ -14,6 +14,12 @@ Upload semantics (see DESIGN.md §3 and EXPERIMENTS.md):
 * ``"zero"``: the literal Alg. 4 line 14 — upload ``M ⊗ W_{t+1}`` and let the
   server average the zeroed weights.  Kept as an ablation of the paper's
   exact pseudocode.
+
+Masking cost: with ``cfg.masking.use_kernel`` the whole delta pytree is
+masked through the segmented Pallas subsystem (``ops.topk_mask_pytree``,
+DESIGN.md §3.4) — ~4 HBM sweeps for the entire model instead of the
+per-leaf O(L * iters) loop — which matters because this runs on every
+client every round.
 """
 
 from __future__ import annotations

@@ -15,7 +15,7 @@ This byte accounting feeds the §Roofline collective term for the technique
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +35,16 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class CompressionStats:
+    """``encoding`` is the single encoding used, or "mixed" when leaves chose
+    differently (auto mode routinely mixes bitmap big leaves with dense small
+    ones); ``encoding_bytes`` carries the exact per-encoding byte totals so
+    mixed uploads are metered correctly."""
+
     dense_bytes: int
     sparse_bytes: int
     encoding: str
+    encoding_bytes: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def ratio(self) -> float:
@@ -67,20 +74,32 @@ def pytree_num_params(tree: PyTree) -> int:
 
 
 def pytree_payload_bytes(tree: PyTree, gamma: float, min_leaf_size: int = 256,
-                         value_bytes: int = 4) -> CompressionStats:
-    """Account a full model upload under per-leaf masking (small leaves dense)."""
+                         value_bytes: int = 4,
+                         encoding: str = "auto") -> CompressionStats:
+    """Account a full model upload under per-leaf masking (small leaves dense).
+
+    Byte totals are accumulated PER ENCODING across leaves — an upload that
+    mixes bitmap-encoded big leaves with dense small leaves (the common case)
+    reports the split in ``encoding_bytes`` rather than whatever the last
+    leaf happened to pick.
+    """
     dense = 0
     sparse = 0
-    enc = "dense"
+    per_enc: Dict[str, int] = {}
     for leaf in jax.tree_util.tree_leaves(tree):
         n = int(np.prod(leaf.shape))
         dense += n * value_bytes
         if n < min_leaf_size or gamma >= 1.0:
-            sparse += n * value_bytes
+            b, enc = n * value_bytes, "dense"
         else:
-            b, enc = payload_bytes(n, gamma, value_bytes)
-            sparse += b
-    return CompressionStats(dense, sparse, enc)
+            b, enc = payload_bytes(n, gamma, value_bytes, encoding)
+        sparse += b
+        per_enc[enc] = per_enc.get(enc, 0) + b
+    if len(per_enc) == 1:
+        label = next(iter(per_enc))
+    else:
+        label = "mixed" if per_enc else "dense"
+    return CompressionStats(dense, sparse, label, per_enc)
 
 
 def encode_sparse(masked: jax.Array, k: int) -> Dict[str, jax.Array]:

@@ -63,6 +63,7 @@ class FederatedServer:
             if self.cfg.client.masking.mode != "none" else 1.0
         stats = pytree_payload_bytes(
             self.params, gamma, self.cfg.client.masking.min_leaf_size)
+        self._compression = stats        # per-encoding byte split for summary()
         n_samples = jnp.asarray(n_samples, jnp.float32)
 
         for t in range(1, rounds + 1):
@@ -93,9 +94,9 @@ class FederatedServer:
     def total_transport_bytes(self) -> int:
         return int(sum(r.transport_bytes for r in self.history))
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, Any]:
         evals = [r.eval_metric for r in self.history if r.eval_metric is not None]
-        return {
+        out = {
             "rounds": len(self.history),
             "final_loss": self.history[-1].mean_loss if self.history else float("nan"),
             "final_eval": evals[-1] if evals else float("nan"),
@@ -103,3 +104,10 @@ class FederatedServer:
             "transport_GB": self.total_transport_bytes() / 1e9,
             "num_params": self._num_params,
         }
+        stats = getattr(self, "_compression", None)
+        if stats is not None:
+            # Mixed bitmap/coordinate/dense uploads: report the exact split
+            # (bytes per model upload per encoding), not just the last leaf's.
+            out["upload_encoding"] = stats.encoding
+            out["upload_encoding_bytes"] = dict(stats.encoding_bytes)
+        return out

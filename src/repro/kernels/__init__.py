@@ -1,6 +1,11 @@
 """Pallas TPU kernels (interpret=True on CPU) + jnp oracles:
 
-* topk_mask.py — selective-masking hot-spot (histogram / count / apply)
+* topk_mask.py — per-leaf selective-masking pipeline (histogram / count /
+  apply), the fallback/oracle path
+* packing.py   — whole-pytree leaf packing: one (R, 1024) buffer + static
+  per-row segment-id map (DESIGN.md §3.4)
+* segmented.py — segmented kernels over the packed buffer: whole-model
+  masking in ~4 HBM sweeps, leaf-count independent
 * ssm_scan.py  — selective-SSM recurrence, state resident in VMEM
 * wkv6.py      — RWKV6 chunked recurrence, (D,D) state in VMEM
 """

@@ -1,9 +1,17 @@
 """Jit'd public wrappers around the Pallas masking kernels.
 
 ``topk_mask(x, gamma)`` keeps ~k = round(gamma * x.size) largest-|x| entries:
-  1 histogram sweep + ``refine_iters`` count sweeps + 1 apply sweep,
-vs the 24+ full bisection sweeps of the pure-jnp path (see EXPERIMENTS.md
-§Perf for the sweep-count accounting).
+  1 histogram sweep + ``refine_iters`` count sweeps + 1 apply sweep
+(= iters + 2 total; the histogram suffix-sums seed the bracket counts so the
+final tau choice needs no extra sweep), vs the 24+ full bisection sweeps of
+the pure-jnp path (see EXPERIMENTS.md §Perf for the sweep-count accounting).
+
+``topk_mask_pytree(tree, gamma)`` masks EVERY maskable leaf of a delta pytree
+in a leaf-count-independent number of sweeps (DESIGN.md §3.4):
+  1 segmented histogram + ``refine_sweeps`` multi-candidate count sweeps
+  + 1 fused count/apply sweep  (= 4 for the default config),
+replacing the per-leaf Python loop of O(L * (iters + 2)) sweeps and its
+per-shape ``pallas_call`` retraces.
 
 On CPU (this container) the kernels run with ``interpret=True``; on TPU they
 compile natively.  ``interpret=None`` auto-detects.
@@ -12,13 +20,19 @@ compile natively.  ``interpret=None`` auto-detects.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import packing as pk
+from repro.kernels import segmented as seg
 from repro.kernels import topk_mask as tk
 
-__all__ = ["topk_mask", "masked_count"]
+PyTree = Any
+
+__all__ = ["topk_mask", "topk_mask_pytree", "pytree_sweep_count",
+           "masked_count"]
 
 
 def _auto_interpret(interpret):
@@ -51,25 +65,123 @@ def topk_mask(x: jax.Array, gamma: float, iters: int = 8,
     x2d = _pad_to_blocks(flat)
 
     hist = tk.exponent_histogram(x2d, interpret=interpret)
-    tau_lo, tau_hi = tk.select_threshold(hist, k)
+    tau_lo, tau_hi, _, cnt_hi = tk.select_threshold_counts(hist, k)
 
-    def refine(_, bounds):
-        lo, hi = bounds
+    def refine(_, carry):
+        lo, hi, cnt_hi = carry
         mid = 0.5 * (lo + hi)
         cnt = tk.count_ge(x2d, mid, interpret=interpret)
-        lo = jnp.where(cnt > k, mid, lo)
-        hi = jnp.where(cnt > k, hi, mid)
-        return lo, hi
+        raise_lo = cnt > k
+        lo = jnp.where(raise_lo, mid, lo)
+        hi = jnp.where(raise_lo, hi, mid)
+        cnt_hi = jnp.where(raise_lo, cnt_hi, cnt)  # hi moved -> its count is cnt
+        return lo, hi, cnt_hi
 
-    tau_lo, tau_hi = jax.lax.fori_loop(0, iters, refine, (tau_lo, tau_hi))
-    # hi is the conservative endpoint: count(mag >= hi) <= k... <= count(>= lo).
-    # Use lo if hi would under-select badly (ties): pick whichever count is
-    # closer to k without a fresh sweep by reusing the invariant counts.
-    cnt_hi = tk.count_ge(x2d, tau_hi, interpret=interpret)
+    tau_lo, tau_hi, cnt_hi = jax.lax.fori_loop(
+        0, iters, refine, (tau_lo, tau_hi, cnt_hi))
+    # hi is the conservative endpoint: count(mag >= hi) <= k <= count(>= lo).
+    # Use lo if hi would under-select badly (ties); cnt_hi was threaded
+    # through the refine loop (seeded from the histogram suffix sums), so no
+    # fresh counting sweep is needed here.
     tau = jnp.where(cnt_hi >= 1, tau_hi, tau_lo)
 
     out2d = tk.apply_threshold(x2d, tau, interpret=interpret)
     return out2d.reshape(-1)[:n].reshape(x.shape).astype(orig_dtype)
+
+
+DEFAULT_REFINE_SWEEPS = 2
+DEFAULT_CANDIDATES = 16
+
+
+def pytree_sweep_count(num_leaves: int, *, segmented: bool = True,
+                       iters: int = 8,
+                       refine_sweeps: int = DEFAULT_REFINE_SWEEPS) -> int:
+    """HBM sweeps to selectively mask an L-leaf pytree (analytic accounting).
+
+    Per-leaf pipeline: every leaf pays 1 histogram + ``iters`` counts + 1
+    apply.  Segmented: 1 histogram + ``refine_sweeps`` multi-candidate counts
+    + 1 fused count/apply, independent of L.
+    """
+    if segmented:
+        return 1 + refine_sweeps + 1
+    return num_leaves * (iters + 2)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gamma", "min_leaf_size", "refine_sweeps", "candidates", "interpret",
+    "slab_rows"))
+def topk_mask_pytree(tree: PyTree, gamma: float, *,
+                     min_leaf_size: int = 256,
+                     refine_sweeps: int = DEFAULT_REFINE_SWEEPS,
+                     candidates: int = DEFAULT_CANDIDATES,
+                     interpret: bool | None = None,
+                     slab_rows: int | None = None) -> PyTree:
+    """Whole-model selective masking in ~``refine_sweeps + 2`` HBM sweeps.
+
+    Packs every leaf with >= ``min_leaf_size`` elements into one padded
+    (R, LANE) buffer (kernels/packing.py) and runs the segmented kernels
+    (kernels/segmented.py): one histogram sweep brackets every leaf's k-th
+    magnitude to an octave, each refine sweep evaluates ``candidates``
+    thresholds per leaf (shrinking the bracket (candidates+1)-fold), and one
+    fused sweep applies the final per-leaf taus.  Leaves below
+    ``min_leaf_size`` pass through dense, mirroring ``mask_pytree``.
+
+    All packing metadata is static (shapes/dtypes only) — the function is
+    jit/scan/pjit-safe and traces ONE pallas_call per kernel regardless of
+    how many distinct leaf shapes the model has.
+
+    Accuracy: per leaf, the kept count is <= k and misses at most the
+    entries whose magnitude falls inside the final bracket around the k-th
+    magnitude: the histogram brackets it to a 16x range, the geometric first
+    sweep narrows that to ratio 16^(1/(candidates+1)), and each further
+    linear sweep divides the width by candidates+1 — ~1% of tau for the
+    defaults (C=16, 2 sweeps).  Property-tested against the sort oracle in
+    tests/test_masking.py; magnitudes separated by more than that relative
+    tolerance mask exactly.
+
+    Tie caveat (shared with the per-leaf ``topk_mask`` pipeline): threshold
+    selection cannot split entries of EQUAL magnitude, so when the bracket
+    converges onto a tie plateau at the k-th magnitude, all tied entries are
+    kept (the sort oracle instead drops surplus ties by index).  The <= k
+    bound therefore holds only when the k-th and (k+1)-th magnitudes differ
+    by more than the bracket resolution; degenerate inputs (e.g. a constant
+    leaf) keep every tied entry.
+    """
+    interpret = _auto_interpret(interpret)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    mask_idx = [i for i, l in enumerate(leaves) if l.size >= min_leaf_size]
+    if gamma >= 1.0 or not mask_idx:
+        return tree
+
+    sel = [leaves[i] for i in mask_idx]
+    x2d, spec = pk.pack_leaves(sel)
+    x2d, seg_ids = seg.pad_rows(x2d, jnp.asarray(spec.seg_ids()),
+                                interpret=interpret, slab_rows=slab_rows)
+    k = jnp.asarray([max(1, int(round(gamma * ls.size)))
+                     for ls in spec.leaves], jnp.int32)
+
+    hist = seg.segmented_histogram(x2d, seg_ids, spec.num_segments,
+                                   interpret=interpret, slab_rows=slab_rows)
+    lo, hi, cnt_lo, cnt_hi = seg.select_thresholds(hist, k)
+    for sweep in range(refine_sweeps):
+        # Sweep 0 subdivides the histogram's 16x bracket geometrically;
+        # later sweeps refine the now-narrow bracket linearly.
+        cand = seg.candidate_taus(lo, hi, candidates, geometric=(sweep == 0))
+        counts = seg.segmented_count(x2d, seg_ids, cand, interpret=interpret,
+                                     slab_rows=slab_rows)
+        lo, hi, cnt_lo, cnt_hi = seg.shrink_brackets(
+            lo, hi, cnt_lo, cnt_hi, cand, counts, k)
+
+    # Conservative endpoint per segment; fall back to lo when hi would keep
+    # nothing (counts were threaded through the refine — no extra sweep).
+    tau = jnp.where(cnt_hi >= 1, hi, lo)
+    out2d, _kept = seg.segmented_apply(x2d, seg_ids, tau, interpret=interpret,
+                                       slab_rows=slab_rows)
+
+    masked = pk.unpack_leaves(out2d[:spec.rows], spec)
+    for i, m in zip(mask_idx, masked):
+        leaves[i] = m
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

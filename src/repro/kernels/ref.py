@@ -47,6 +47,14 @@ def exponent_histogram_ref(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(onehot, axis=0).astype(jnp.int32)
 
 
+def group_histogram_ref(x: jnp.ndarray,
+                        octaves_per_bin: int = 4) -> jnp.ndarray:
+    """Coarse magnitude histogram: octave bins grouped ``octaves_per_bin`` at
+    a time — the quantity the segmented histogram kernel accumulates."""
+    h = exponent_histogram_ref(x)
+    return h.reshape(-1, octaves_per_bin).sum(axis=1).astype(jnp.int32)
+
+
 def ssm_scan_ref(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
                  h0: jnp.ndarray):
     """Oracle for the SSM-scan kernel.  a, bx: (B, T, N, D); c: (B, T, N);

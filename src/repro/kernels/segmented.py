@@ -1,0 +1,364 @@
+"""Segmented Pallas kernels: whole-pytree selective masking (DESIGN.md §3.4).
+
+The per-leaf pipeline (``kernels/topk_mask.py``) costs O(L * (iters + 2)) HBM
+sweeps for an L-leaf model.  These kernels operate on the packed buffer from
+``kernels.packing`` — every SEG_LANE-wide row belongs to exactly one segment
+(leaf) — and reduce whole-model masking to a leaf-count-independent number of
+sweeps:
+
+1. ``segmented_histogram``  — (num_segments, SEG_NBINS) magnitude histogram
+   (SEG_NBINS = 32 bins of OCTAVES_PER_BIN = 4 octaves each, same
+   [2^EXPO_MIN, 2^(EXPO_MIN+128)) coverage as the per-leaf kernel's 128
+   per-octave bins) in ONE sweep, emitted in suffix form: bin counts are
+   vectorised as one compare of every element against the iota-built
+   bin-edge ladder + a lane reduction, instead of a fori_loop that rescans
+   the block once per bin.  Bins are 4-octave groups so the compare is 32
+   wide — the first refine sweep's geometric candidates win the resolution
+   back.
+2. ``segmented_count``      — counts |x| >= tau for C candidate taus per
+   segment per sweep, collapsing the bisection refine loop from ``iters``
+   sweeps to 1-2 multi-candidate sweeps (first sweep geometric across the
+   4-octave bracket, later sweeps linear).
+3. ``segmented_apply``      — fused threshold-apply + kept-count in one sweep
+   using the final per-segment taus.
+
+Grid/tiling: each grid step processes a ``(slab_rows, SEG_LANE)`` slab.  The
+per-row segment ids ride along as an (R, 1) int32 input; inside the kernel
+they become a (rows, S) one-hot matrix, and every per-segment gather
+(taus -> rows) and scatter (row stats -> segments) is a matmul against that
+one-hot — MXU work on TPU, no dynamic indexing anywhere.  The TPU grid is
+sequential, so reduction outputs map every step to the same block and use
+``@pl.when(first)`` init + accumulate, like the per-leaf kernels.
+``slab_rows`` trades VMEM residency against grid steps: 512 rows = 2 MiB
+fp32 per slab operand for the compiled TPU path; interpret mode (CPU) uses
+much larger slabs since each interpreter grid step re-stages the full
+operands.
+
+Threshold selection/refinement math (pure jnp on the tiny (S, NBINS) /
+(S, C) stats, no HBM sweeps over the data) lives here too:
+``select_thresholds``, ``candidate_taus`` and ``shrink_brackets``.  Counts at
+both bracket ends are threaded through — the refine and final tau choice
+never issue an extra counting sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import NBINS, EXPO_MIN
+from repro.kernels.packing import SEG_LANE
+
+__all__ = [
+    "SEG_NBINS",
+    "OCTAVES_PER_BIN",
+    "segmented_histogram",
+    "segmented_count",
+    "segmented_apply",
+    "select_thresholds",
+    "candidate_taus",
+    "shrink_brackets",
+    "pad_rows",
+]
+
+# Coarse histogram layout: SEG_NBINS bins of OCTAVES_PER_BIN octaves each,
+# covering the same magnitude range as the per-leaf kernel's NBINS octaves.
+OCTAVES_PER_BIN = 4
+SEG_NBINS = NBINS // OCTAVES_PER_BIN
+
+# Default slab height for the compiled TPU path: (512, 1024) fp32 = 2 MiB.
+SLAB_ROWS = 512
+# Rows per in-kernel chunk: bounds the one-hot transients —
+# (32, SEG_LANE, SEG_NBINS) fp32 = 4 MiB — regardless of slab height.
+CHUNK_ROWS = 32
+
+
+def _seg_onehot(seg: jax.Array, num_segments: int) -> jax.Array:
+    """(rows, 1) int32 segment ids -> (rows, S) fp32 one-hot."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, num_segments), 1)
+    return (seg == iota).astype(jnp.float32)
+
+
+def _bin_ladder() -> jax.Array:
+    """(1, 1, SEG_NBINS) fp32 bin-edge magnitudes 2^(EXPO_MIN + 4j).
+
+    Comparing |x| against the ladder yields the SUFFIX form of the 4-octave
+    exponent histogram (count per bin = adjacent difference) with SEG_NBINS
+    plain compares per element — no log2/floor/one-hot chain — and zeros
+    (incl. padding) fall below every edge, so they never count.
+    """
+    j = jax.lax.broadcasted_iota(jnp.float32, (1, 1, SEG_NBINS), 2)
+    return jnp.exp2(j * OCTAVES_PER_BIN + EXPO_MIN)
+
+
+def _row_bin_hist(x: jax.Array) -> jax.Array:
+    """(rows, SEG_LANE) values -> (rows, SEG_NBINS) fp32 suffix counts:
+    out[r, j] = #{e : |x[r, e]| >= 2^(EXPO_MIN + 4j)}.  fp32 sums are exact
+    (row counts <= SEG_LANE)."""
+    ge = (jnp.abs(x)[:, :, None] >= _bin_ladder()).astype(jnp.float32)
+    return jnp.sum(ge, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Kernel 1: segmented exponent histogram — one sweep for the whole pytree.
+# --------------------------------------------------------------------------
+def _seg_hist_kernel(x_ref, seg_ref, hist_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    rows = x_ref.shape[0]
+    S = hist_ref.shape[0]
+
+    def chunk(c, acc):
+        xc = jax.lax.dynamic_slice_in_dim(
+            x_ref[...], c * CHUNK_ROWS, CHUNK_ROWS, 0).astype(jnp.float32)
+        sc = jax.lax.dynamic_slice_in_dim(
+            seg_ref[...], c * CHUNK_ROWS, CHUNK_ROWS, 0)
+        row_hist = _row_bin_hist(xc)                      # (chunk, SEG_NBINS)
+        seg_hot = _seg_onehot(sc, S)                      # (chunk, S)
+        # scatter rows -> segments: one (S x chunk x SEG_NBINS) matmul
+        return acc + jax.lax.dot_general(
+            seg_hot, row_hist, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, rows // CHUNK_ROWS, chunk,
+                            jnp.zeros(hist_ref.shape, jnp.float32))
+    hist_ref[...] += acc.astype(jnp.int32)
+
+
+def segmented_histogram(x2d: jax.Array, seg_ids: jax.Array,
+                        num_segments: int, *, interpret: bool,
+                        slab_rows: int | None = None) -> jax.Array:
+    """x2d: (R, SEG_LANE) fp32; seg_ids: (R, 1) int32; R % slab_rows == 0.
+
+    Returns (num_segments, SEG_NBINS) int32 per-segment 4-octave-bin
+    histograms in SUFFIX form — out[s, j] = count(|x_s| >= 2^(EXPO_MIN+4j)),
+    per-bin counts being adjacent differences — in one HBM sweep of the
+    packed buffer.  The suffix form is exactly what ``select_thresholds``
+    consumes (bracket counts come for free).
+    """
+    slab = _slab(x2d.shape[0], slab_rows, interpret)
+    return pl.pallas_call(
+        _seg_hist_kernel,
+        grid=(x2d.shape[0] // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, SEG_LANE), lambda i: (i, 0)),
+            pl.BlockSpec((slab, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, SEG_NBINS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, SEG_NBINS), jnp.int32),
+        interpret=interpret,
+    )(x2d, seg_ids)
+
+
+# --------------------------------------------------------------------------
+# Kernel 2: multi-threshold segmented count — C candidates per sweep.
+# --------------------------------------------------------------------------
+def _seg_count_kernel(x_ref, seg_ref, taus_ref, cnt_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    rows = x_ref.shape[0]
+    S, C = taus_ref.shape
+
+    def chunk(c, acc):
+        xc = jax.lax.dynamic_slice_in_dim(
+            x_ref[...], c * CHUNK_ROWS, CHUNK_ROWS, 0).astype(jnp.float32)
+        sc = jax.lax.dynamic_slice_in_dim(
+            seg_ref[...], c * CHUNK_ROWS, CHUNK_ROWS, 0)
+        seg_hot = _seg_onehot(sc, S)                      # (chunk, S)
+        taus_row = seg_hot @ taus_ref[...]                # gather: (chunk, C)
+        ge = (jnp.abs(xc)[:, :, None] >= taus_row[:, None, :]
+              ).astype(jnp.float32)                       # (chunk, LANE, C)
+        row_counts = jnp.sum(ge, axis=1)                  # (chunk, C)
+        return acc + jax.lax.dot_general(
+            seg_hot, row_counts, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, rows // CHUNK_ROWS, chunk,
+                            jnp.zeros(cnt_ref.shape, jnp.float32))
+    cnt_ref[...] += acc.astype(jnp.int32)
+
+
+def segmented_count(x2d: jax.Array, seg_ids: jax.Array,
+                    taus: jax.Array, *, interpret: bool,
+                    slab_rows: int | None = None) -> jax.Array:
+    """Counts of |x| >= tau per segment for ALL C candidate taus in one sweep.
+
+    taus: (num_segments, C) fp32 (must be > 0 so padding zeros never count).
+    Returns (num_segments, C) int32.
+    """
+    slab = _slab(x2d.shape[0], slab_rows, interpret)
+    S, C = taus.shape
+    return pl.pallas_call(
+        _seg_count_kernel,
+        grid=(x2d.shape[0] // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, SEG_LANE), lambda i: (i, 0)),
+            pl.BlockSpec((slab, 1), lambda i: (i, 0)),
+            pl.BlockSpec((S, C), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((S, C), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, C), jnp.int32),
+        interpret=interpret,
+    )(x2d, seg_ids, taus.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Kernel 3: fused per-segment threshold apply + kept-count — one sweep.
+# --------------------------------------------------------------------------
+def _seg_apply_kernel(x_ref, seg_ref, tau_ref, out_ref, cnt_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    S = tau_ref.shape[0]
+    x = x_ref[...]
+    seg_hot = _seg_onehot(seg_ref[...], S)                # (rows, S)
+    tau_row = seg_hot @ tau_ref[...]                      # gather: (rows, 1)
+    keep = jnp.abs(x.astype(jnp.float32)) >= tau_row      # broadcast over lane
+    out_ref[...] = x * keep.astype(x.dtype)
+    row_kept = jnp.sum(keep.astype(jnp.float32), axis=1, keepdims=True)
+    cnt_ref[...] += jax.lax.dot_general(
+        seg_hot, row_kept, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(jnp.int32)
+
+
+def segmented_apply(x2d: jax.Array, seg_ids: jax.Array, taus: jax.Array,
+                    *, interpret: bool,
+                    slab_rows: int | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Apply per-segment thresholds; returns (masked (R, LANE), kept (S, 1))."""
+    slab = _slab(x2d.shape[0], slab_rows, interpret)
+    S = taus.shape[0]
+    return pl.pallas_call(
+        _seg_apply_kernel,
+        grid=(x2d.shape[0] // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, SEG_LANE), lambda i: (i, 0)),
+            pl.BlockSpec((slab, 1), lambda i: (i, 0)),
+            pl.BlockSpec((S, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((slab, SEG_LANE), lambda i: (i, 0)),
+            pl.BlockSpec((S, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x2d, seg_ids, taus.reshape(S, 1).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Slab sizing + row padding.
+# --------------------------------------------------------------------------
+# Interpret mode re-stages the FULL operands once per interpreter grid step,
+# so its wall-clock is ~ grid_steps * buffer_bytes: use one huge slab.  The
+# compiled TPU path is VMEM-bound: default (512, 1024) fp32 = 2 MiB slabs.
+INTERPRET_SLAB_ROWS = 16384
+
+
+def _slab(total_rows: int, slab_rows: int | None, interpret: bool) -> int:
+    if slab_rows is None:
+        slab_rows = INTERPRET_SLAB_ROWS if interpret else SLAB_ROWS
+    # A slab never exceeds the (chunk-rounded) buffer and always divides into
+    # whole CHUNK_ROWS chunks — a user value is rounded DOWN to the chunk
+    # multiple (floor, never below one chunk), else the kernels' chunk loops
+    # would silently skip the slab tail; pad_rows pads to a slab multiple.
+    slab_rows = max(CHUNK_ROWS, slab_rows - slab_rows % CHUNK_ROWS)
+    rounded = -(-total_rows // CHUNK_ROWS) * CHUNK_ROWS
+    return min(slab_rows, rounded)
+
+
+def pad_rows(x2d: jax.Array, seg_ids: jax.Array, *, interpret: bool,
+             slab_rows: int | None = None):
+    """Pad the packed buffer with zero rows to a whole number of slabs.
+
+    Padding rows get segment id 0; all-zero rows contribute to no histogram
+    bin, no count (taus > 0), and mask to zeros — they are invisible.
+    """
+    slab = _slab(max(x2d.shape[0], 1), slab_rows, interpret)
+    pad = (-x2d.shape[0]) % slab
+    if pad == 0:
+        return x2d, seg_ids
+    x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    seg_ids = jnp.pad(seg_ids, ((0, pad), (0, 0)))
+    return x2d, seg_ids
+
+
+# --------------------------------------------------------------------------
+# Threshold selection + multi-candidate bracket refinement (pure jnp; operates
+# on (S, *) statistics only — no sweeps over the packed data).
+# --------------------------------------------------------------------------
+def select_thresholds(suffix: jax.Array, k: jax.Array):
+    """Vectorised magnitude bracketing for every segment at once.
+
+    suffix: (S, SEG_NBINS) int32 suffix-form histogram from
+    ``segmented_histogram`` (suffix[s, j] = count at bin edge j); k: (S,)
+    int32.  Returns ``(lo, hi, cnt_lo, cnt_hi)`` — per-segment 4-octave
+    bounds [lo, hi) containing the k-th largest magnitude plus the EXACT
+    counts at both ends, so refinement starts with known bracket counts and
+    never needs an extra counting sweep.
+    """
+    S = suffix.shape[0]
+    rows = jnp.arange(S)
+    jstar = jnp.maximum(jnp.sum(suffix >= k[:, None], axis=1) - 1, 0)
+    lo = jnp.exp2((jstar * OCTAVES_PER_BIN + EXPO_MIN).astype(jnp.float32))
+    hi = float(2 ** OCTAVES_PER_BIN) * lo
+    suffix_ext = jnp.concatenate(
+        [suffix, jnp.zeros((S, 1), suffix.dtype)], axis=1)
+    cnt_lo = suffix_ext[rows, jstar]
+    cnt_hi = suffix_ext[rows, jstar + 1]
+    # k exceeds the number of nonzeros: keep everything nonzero by dropping
+    # the lower bound below the smallest representable bin.
+    underfull = suffix[:, 0] < k
+    lo = jnp.where(underfull, jnp.exp2(float(EXPO_MIN - 1)), lo)
+    cnt_lo = jnp.where(underfull, suffix[:, 0], cnt_lo)
+    return lo, hi, cnt_lo, cnt_hi
+
+
+def candidate_taus(lo: jax.Array, hi: jax.Array, num: int,
+                   geometric: bool = False) -> jax.Array:
+    """(S, num) interior candidate thresholds of each [lo, hi] bracket.
+
+    ``geometric`` spaces candidates by constant RATIO — right for the first
+    refine over the histogram's 4-octave (16x) bracket, where linear spacing
+    would waste most candidates on the top octave.  Later sweeps over narrow
+    brackets use linear spacing.
+    """
+    frac = (jnp.arange(1, num + 1, dtype=jnp.float32) / (num + 1.0))
+    if geometric:
+        ratio = jnp.exp(frac[None, :] * jnp.log(hi / lo)[:, None])
+        return lo[:, None] * ratio
+    return lo[:, None] + frac[None, :] * (hi - lo)[:, None]
+
+
+def shrink_brackets(lo, hi, cnt_lo, cnt_hi, cand, counts, k):
+    """Tighten every segment's bracket around the k-th magnitude.
+
+    ``cand``/``counts``: (S, C) ascending candidate taus and their counts
+    from one ``segmented_count`` sweep.  Counts are non-increasing along the
+    extended grid [lo, cand..., hi], so the number of entries with count > k
+    locates the tightest bracket; counts at the new ends come for free.
+    """
+    ext_taus = jnp.concatenate([lo[:, None], cand, hi[:, None]], axis=1)
+    ext_cnts = jnp.concatenate(
+        [cnt_lo[:, None], counts, cnt_hi[:, None]], axis=1)
+    C2 = ext_taus.shape[1]
+    num_gt = jnp.sum(ext_cnts > k[:, None], axis=1)
+    lo_idx = jnp.clip(num_gt - 1, 0, C2 - 1)
+    hi_idx = jnp.clip(num_gt, 0, C2 - 1)
+    rows = jnp.arange(ext_taus.shape[0])
+    return (ext_taus[rows, lo_idx], ext_taus[rows, hi_idx],
+            ext_cnts[rows, lo_idx], ext_cnts[rows, hi_idx])

@@ -34,6 +34,33 @@ def _grid_blocks(n_rows: int) -> int:
 # --------------------------------------------------------------------------
 # Kernel 1: per-octave magnitude histogram (one sweep of HBM).
 # --------------------------------------------------------------------------
+# Rows per factored-one-hot chunk: the (HIST_CHUNK_ROWS * LANE, NBINS/8)
+# fp32 one-hot is 64 * 1024 * 16 * 4 B = 4 MiB of VMEM transient.
+HIST_CHUNK_ROWS = 64
+
+
+def _factored_bin_counts(b: jax.Array) -> jax.Array:
+    """(rows, LANE) bin ids (-1 = none) -> (1, NBINS) fp32 counts.
+
+    Factored one-hot: NBINS = QBINS * RBINS, bin = 8q + r.  Two narrow
+    one-hots (16 + 8 compares per element instead of 128) contract into the
+    (QBINS, RBINS) count matrix with one matmul — MXU work on TPU.  fp32
+    accumulation is exact (chunk counts << 2^24).
+    """
+    QBINS, RBINS = NBINS // 8, 8
+    flat = b.reshape(-1, 1)
+    q_iota = jax.lax.broadcasted_iota(jnp.int32, (1, QBINS), 1)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (1, RBINS), 1)
+    # b = -1 yields q = -1: matches no q bin, so zeros never count.
+    q_hot = (jnp.where(flat >= 0, flat // RBINS, -1) == q_iota
+             ).astype(jnp.float32)
+    r_hot = ((flat % RBINS) == r_iota).astype(jnp.float32)
+    counts = jax.lax.dot_general(
+        q_hot, r_hot, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (QBINS, RBINS)
+    return counts.reshape(1, NBINS)
+
+
 def _hist_kernel(x_ref, hist_ref):
     i = pl.program_id(0)
 
@@ -46,16 +73,18 @@ def _hist_kernel(x_ref, hist_ref):
     valid = mag > 0.0
     e = jnp.floor(jnp.log2(jnp.where(valid, mag, 1.0)))
     b = jnp.clip(e.astype(jnp.int32) - EXPO_MIN, 0, NBINS - 1)
+    b = jnp.where(valid, b, -1)                   # zeros match no bin
 
-    bins = jax.lax.broadcasted_iota(jnp.int32, (1, NBINS), 1)
+    # Factored one-hot/iota bin counting, chunked over rows so the one-hot
+    # transients stay in VMEM — instead of rescanning the block once per bin.
+    def chunk(c, acc):
+        bc = jax.lax.dynamic_slice_in_dim(b, c * HIST_CHUNK_ROWS,
+                                          HIST_CHUNK_ROWS, 0)
+        return acc + _factored_bin_counts(bc)
 
-    def body(j, _):
-        cnt = jnp.sum((b == j) & valid).astype(jnp.int32)
-        onehot = (bins == j).astype(jnp.int32)
-        hist_ref[...] += cnt * onehot
-        return 0
-
-    jax.lax.fori_loop(0, NBINS, body, 0)
+    hist_ref[...] += jax.lax.fori_loop(
+        0, BLOCK_ROWS // HIST_CHUNK_ROWS, chunk,
+        jnp.zeros((1, NBINS), jnp.float32)).astype(jnp.int32)
 
 
 def exponent_histogram(x2d: jax.Array, *, interpret: bool) -> jax.Array:
@@ -131,17 +160,31 @@ def apply_threshold(x2d: jax.Array, tau: jax.Array, *, interpret: bool) -> jax.A
 # --------------------------------------------------------------------------
 # Threshold selection from the histogram + refinement.
 # --------------------------------------------------------------------------
-def select_threshold(hist: jax.Array, k: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Octave bounds [tau_lo, tau_hi) containing the k-th largest magnitude.
+def select_threshold_counts(hist: jax.Array, k: jax.Array):
+    """Octave bounds [tau_lo, tau_hi) containing the k-th largest magnitude,
+    plus the exact counts at both bounds.
 
     ``count_ge(2^(j+EXPO_MIN))`` = suffix-sum of hist from bin j; the k-th
     largest lies in the highest bin j* whose suffix count is still >= k.
+    The suffix sums ARE the counts at the octave bounds, so downstream
+    refinement starts with known bracket counts — no extra counting sweep.
     """
     suffix = jnp.cumsum(hist[::-1])[::-1]  # suffix[j] = count(mag >= 2^(j+EXPO_MIN))
     jstar = jnp.maximum(jnp.sum(suffix >= k) - 1, 0)
     tau_lo = jnp.exp2((jstar + EXPO_MIN).astype(jnp.float32))
     tau_hi = 2.0 * tau_lo
+    suffix_ext = jnp.concatenate([suffix, jnp.zeros((1,), suffix.dtype)])
+    cnt_lo = suffix_ext[jstar]
+    cnt_hi = suffix_ext[jstar + 1]
     # If even the lowest bin has < k entries (k > #nonzero), keep everything
     # nonzero: threshold below the smallest representable bin.
-    tau_lo = jnp.where(suffix[0] < k, jnp.exp2(float(EXPO_MIN - 1)), tau_lo)
+    underfull = suffix[0] < k
+    tau_lo = jnp.where(underfull, jnp.exp2(float(EXPO_MIN - 1)), tau_lo)
+    cnt_lo = jnp.where(underfull, suffix[0], cnt_lo)
+    return tau_lo, tau_hi, cnt_lo, cnt_hi
+
+
+def select_threshold(hist: jax.Array, k: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Octave bounds only (see ``select_threshold_counts``)."""
+    tau_lo, tau_hi, _, _ = select_threshold_counts(hist, k)
     return tau_lo, tau_hi

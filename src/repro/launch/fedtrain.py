@@ -48,6 +48,11 @@ class FedPodConfig:
     masking: str = "selective"    # selective | random | none
     bisect_iters: int = 16
     min_leaf_size: int = 256
+    # Route selective masking through the segmented Pallas subsystem
+    # (ops.topk_mask_pytree): ~4 HBM sweeps per client for the WHOLE model
+    # instead of O(L * iters) — off by default because the pure-jnp bisection
+    # below is what the SPMD partitioner auto-shards over "model".
+    use_kernel: bool = False
 
 
 def _threshold_mask(delta: jax.Array, gamma: float, iters: int) -> jax.Array:
@@ -84,6 +89,45 @@ def mask_deltas(key: jax.Array, deltas: PyTree, cfg: FedPodConfig) -> PyTree:
     """deltas: client-stacked pytree (leading C axis per leaf)."""
     if cfg.masking == "none" or cfg.gamma >= 1.0:
         return deltas
+    if cfg.masking == "selective" and cfg.use_kernel:
+        from repro.kernels import ops as kops
+
+        def one_client(tree):
+            # Match _threshold_mask's granularity exactly: leaves big enough
+            # to mask (same per-client min_leaf_size gate) select top-k per
+            # FIRST-axis slice for ndim >= 2 leaves (Alg. 4's per-layer loop
+            # on stacked/layered arrays), per whole leaf for vectors.  Each
+            # slice becomes its own segment of ONE packed sweep set.
+            leaves, treedef = jax.tree_util.tree_flatten(tree)
+            out = list(leaves)
+            segments, layout = [], []
+            for i, leaf in enumerate(leaves):
+                if leaf.size < cfg.min_leaf_size:
+                    continue
+                if leaf.ndim >= 2:
+                    layout.append((i, leaf.shape[0]))
+                    segments.extend(list(leaf))
+                else:
+                    layout.append((i, 0))
+                    segments.append(leaf)
+            if segments:
+                from repro.core.masking import _refine_sweeps_for
+                masked = kops.topk_mask_pytree(
+                    tuple(segments), cfg.gamma, min_leaf_size=0,
+                    refine_sweeps=_refine_sweeps_for(cfg.bisect_iters))
+                pos = 0
+                for i, g in layout:
+                    if g:
+                        out[i] = jnp.stack(masked[pos:pos + g])
+                        pos += g
+                    else:
+                        out[i] = masked[pos]
+                        pos += 1
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        # One segmented whole-model sweep set per client (leaf-count
+        # independent); lax.map keeps a single kernel trace for all clients.
+        return jax.lax.map(one_client, deltas)
     leaves, treedef = jax.tree_util.tree_flatten(deltas)
     keys = jax.random.split(key, len(leaves))
     out = []

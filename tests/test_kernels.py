@@ -99,6 +99,118 @@ def test_masked_count_kernel():
     assert int(got) == int(jnp.sum(jnp.abs(x) >= 0.5))
 
 
+# ---------------------------------------------------------------------------
+# Segmented whole-pytree kernels (kernels/segmented.py + kernels/packing.py)
+# ---------------------------------------------------------------------------
+from repro.kernels import packing as pk
+from repro.kernels import segmented as seg
+
+SEG_SHAPES = [(300, 77), (128, 128), (8, 8, 65), (70000,), (257,)]
+
+
+def _seg_leaves(dtype=jnp.float32):
+    return [_rand(s, dtype, seed=10 + i) for i, s in enumerate(SEG_SHAPES)]
+
+
+def _packed(leaves, slab_rows=None):
+    x2d, spec = pk.pack_leaves(leaves)
+    x2d, seg_ids = seg.pad_rows(x2d, jnp.asarray(spec.seg_ids()),
+                                interpret=True, slab_rows=slab_rows)
+    return x2d, seg_ids, spec
+
+
+def test_packing_roundtrip():
+    leaves = _seg_leaves(jnp.float32) + [_rand((64, 64), jnp.bfloat16, 99)]
+    x2d, spec = pk.pack_leaves(leaves)
+    assert x2d.shape == (spec.total_rows, pk.SEG_LANE)
+    assert spec.seg_ids().shape == (spec.total_rows, 1)
+    back = pk.unpack_leaves(x2d, spec)
+    for a, b in zip(leaves, back):
+        assert b.shape == a.shape and b.dtype == a.dtype
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(a, np.float32))
+
+
+# Exercise both the single-slab interpret default and a small slab that
+# forces multi-step grids (the compiled TPU shape).
+SLABS = [None, 128]
+
+
+@pytest.mark.parametrize("slab", SLABS)
+def test_segmented_histogram_matches_per_leaf_ref(slab):
+    leaves = _seg_leaves()
+    x2d, seg_ids, spec = _packed(leaves, slab)
+    hist = seg.segmented_histogram(x2d, seg_ids, spec.num_segments,
+                                   interpret=True, slab_rows=slab)
+    assert hist.shape == (len(leaves), seg.SEG_NBINS)
+    for s, leaf in enumerate(leaves):
+        bins = ref.group_histogram_ref(leaf, seg.OCTAVES_PER_BIN)
+        want = jnp.cumsum(bins[::-1])[::-1]          # suffix form
+        np.testing.assert_array_equal(np.asarray(hist[s]), np.asarray(want))
+
+
+@pytest.mark.parametrize("slab", SLABS)
+def test_segmented_count_matches_ref_per_candidate(slab):
+    leaves = _seg_leaves()
+    x2d, seg_ids, spec = _packed(leaves, slab)
+    taus = jnp.stack([jnp.asarray([0.25, 0.5, 1.0, 2.0]) * (1 + 0.1 * s)
+                      for s in range(len(leaves))])
+    got = seg.segmented_count(x2d, seg_ids, taus, interpret=True,
+                              slab_rows=slab)
+    for s, leaf in enumerate(leaves):
+        for c in range(taus.shape[1]):
+            assert int(got[s, c]) == int(ref.count_ge_ref(leaf, taus[s, c]))
+
+
+@pytest.mark.parametrize("slab", SLABS)
+def test_segmented_apply_matches_ref_and_counts(slab):
+    leaves = _seg_leaves()
+    x2d, seg_ids, spec = _packed(leaves, slab)
+    taus = jnp.asarray([0.3, 0.7, 1.1, 0.5, 0.9])
+    out2d, kept = seg.segmented_apply(x2d, seg_ids, taus, interpret=True,
+                                      slab_rows=slab)
+    back = pk.unpack_leaves(out2d[:spec.rows], spec)
+    for s, leaf in enumerate(leaves):
+        want = ref.threshold_mask_ref(leaf, float(taus[s]))
+        np.testing.assert_allclose(np.asarray(back[s]), np.asarray(want),
+                                   atol=1e-7)
+        assert int(kept[s, 0]) == int(ref.count_ge_ref(leaf, float(taus[s])))
+
+
+def test_select_thresholds_brackets_every_segment():
+    leaves = _seg_leaves()
+    x2d, seg_ids, spec = _packed(leaves)
+    hist = seg.segmented_histogram(x2d, seg_ids,
+                                   spec.num_segments, interpret=True)
+    k = jnp.asarray([max(1, round(0.1 * l.size)) for l in leaves], jnp.int32)
+    lo, hi, cnt_lo, cnt_hi = seg.select_thresholds(hist, k)
+    for s, leaf in enumerate(leaves):
+        mag = jnp.sort(jnp.abs(leaf.reshape(-1)))
+        kth = float(mag[leaf.size - int(k[s])])
+        assert float(lo[s]) <= kth < float(hi[s]) * (1 + 1e-6)
+        # the threaded counts ARE the exact counts at the bracket ends
+        assert int(cnt_lo[s]) == int(ref.count_ge_ref(leaf, float(lo[s])))
+        assert int(cnt_hi[s]) == int(ref.count_ge_ref(leaf, float(hi[s])))
+
+
+def test_topk_mask_pytree_sweep_budget():
+    """The segmented path must cost a leaf-count-independent <= 4 sweeps."""
+    assert ops.pytree_sweep_count(1, segmented=True) <= 4
+    assert ops.pytree_sweep_count(100, segmented=True) <= 4
+    assert ops.pytree_sweep_count(100, segmented=False) == 100 * 10
+
+
+def test_select_threshold_counts_per_leaf():
+    x = _rand((8192,), jnp.float32, seed=7)
+    x2d = ops._pad_to_blocks(jnp.abs(x.reshape(-1)))
+    hist = tk.exponent_histogram(x2d, interpret=True)
+    for k in [1, 64, 1024]:
+        lo, hi, cnt_lo, cnt_hi = tk.select_threshold_counts(
+            hist, jnp.asarray(k))
+        assert int(cnt_lo) == int(jnp.sum(jnp.abs(x) >= lo))
+        assert int(cnt_hi) == int(jnp.sum(jnp.abs(x) >= hi))
+
+
 def test_histogram_threshold_octave_bounds():
     """select_threshold returns an octave [lo, hi) bracketing the k-th
     largest magnitude."""

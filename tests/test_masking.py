@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 from repro.core.masking import (MaskingConfig, mask_pytree, random_mask,
                                 selective_mask_exact,
@@ -106,6 +106,185 @@ def test_masking_is_jittable_and_vmappable():
     for i in range(4):
         b = selective_mask_threshold(xs[i], 0.2)
         np.testing.assert_allclose(out[i], b, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Segmented whole-pytree masking (ops.topk_mask_pytree, DESIGN.md §3.4)
+# ---------------------------------------------------------------------------
+def _pytree_for(seed, small=True):
+    key = jax.random.PRNGKey(seed)
+    tree = {
+        "odd": jax.random.normal(jax.random.fold_in(key, 0), (300, 77)),
+        "square": jax.random.normal(jax.random.fold_in(key, 1), (128, 128)),
+        "cube": jax.random.normal(jax.random.fold_in(key, 2), (8, 8, 65)),
+        "vec": jax.random.normal(jax.random.fold_in(key, 3), (1000,)),
+    }
+    if small:
+        tree["bias"] = jax.random.normal(jax.random.fold_in(key, 4), (8,))
+    return tree
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.05, 0.2, 0.5, 0.8]))
+@settings(max_examples=8, deadline=None)
+def test_topk_mask_pytree_property_vs_sort_oracle(seed, gamma):
+    """Per leaf: kept <= k, within the documented bracket tolerance of k, and
+    every kept magnitude >= every dropped magnitude (the sort-oracle order).
+    Covers padded/odd-sized leaves and small-dense passthrough."""
+    from repro.kernels import ops
+    tree = _pytree_for(seed)
+    out = ops.topk_mask_pytree(tree, gamma, interpret=True)
+    for name, x in tree.items():
+        o = out[name]
+        assert o.shape == x.shape and o.dtype == x.dtype
+        if x.size < 256:                       # small leaf: dense passthrough
+            np.testing.assert_allclose(np.asarray(o), np.asarray(x))
+            continue
+        k = max(1, round(gamma * x.size))
+        kept = np.asarray(o != 0).reshape(-1)
+        mags = np.abs(np.asarray(x, np.float32)).reshape(-1)
+        assert kept.sum() <= k
+        assert kept.sum() >= int(0.9 * k) - 2
+        if kept.any() and (~kept).any():
+            assert mags[kept].min() >= mags[~kept].max() - 1e-6
+        # surviving values are passed through untouched
+        np.testing.assert_allclose(np.asarray(o).reshape(-1)[kept],
+                                   np.asarray(x).reshape(-1)[kept])
+
+
+def test_topk_mask_pytree_exact_on_separated_magnitudes():
+    """Magnitudes separated by more than the documented ~1% relative
+    tolerance (geometric, ratio 1.05) must match the exact sort oracle
+    (selective_mask_exact) bit-for-bit on every leaf."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(7)
+    tree = {}
+    for i, n in enumerate([512, 300, 257]):
+        base = jnp.power(1.05, jnp.arange(n, dtype=jnp.float32))
+        sign = jnp.where(jnp.arange(n) % 2 == 0, 1.0, -1.0)
+        tree[f"l{i}"] = (base * sign)[
+            jax.random.permutation(jax.random.fold_in(key, i), n)]
+    out = ops.topk_mask_pytree(tree, 0.25, interpret=True)
+    for name, x in tree.items():
+        want = selective_mask_exact(x, 0.25)
+        np.testing.assert_allclose(np.asarray(out[name]), np.asarray(want))
+
+
+def test_topk_mask_pytree_bf16_and_scan_safety():
+    from repro.kernels import ops
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                   (64, 64)).astype(jnp.bfloat16)}
+
+    def body(c, _):
+        return ops.topk_mask_pytree(c, 0.2, interpret=True), None
+
+    out, _ = jax.lax.scan(body, tree, None, length=2)
+    assert out["w"].dtype == jnp.bfloat16
+    assert int(jnp.sum(out["w"] != 0)) <= round(0.2 * 64 * 64)
+
+
+def test_mask_pytree_use_kernel_routes_segmented():
+    """mask_pytree(selective, use_kernel=True) must go through the segmented
+    path and agree with the per-leaf jnp bisection within the bin tolerance."""
+    key = jax.random.PRNGKey(3)
+    tree = _pytree_for(3)
+    cfg_jnp = MaskingConfig(gamma=0.1, mode="selective", use_kernel=False)
+    cfg_seg = MaskingConfig(gamma=0.1, mode="selective", use_kernel=True)
+    a = mask_pytree(key, tree, cfg_jnp)
+    b = mask_pytree(key, tree, cfg_seg)
+    for name in tree:
+        ka = int(jnp.sum(a[name] != 0))
+        kb = int(jnp.sum(b[name] != 0))
+        n = tree[name].size
+        if n < cfg_seg.min_leaf_size:
+            np.testing.assert_allclose(np.asarray(b[name]),
+                                       np.asarray(tree[name]))
+        else:
+            k = max(1, round(0.1 * n))
+            assert abs(ka - kb) <= max(2, int(0.05 * k)), (name, ka, kb)
+
+
+def test_selective_mask_threshold_kernel_route():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4096,))
+    a = selective_mask_exact(x, 0.2)
+    b = selective_mask_threshold(x, 0.2, use_kernel=True)
+    k = round(0.2 * 4096)
+    kept = int(jnp.sum(b != 0))
+    assert kept <= k and kept >= int(0.9 * k) - 2
+    # clearly-kept entries agree with the oracle
+    both = (np.asarray(a != 0) & np.asarray(b != 0))
+    np.testing.assert_allclose(np.asarray(b)[both], np.asarray(a)[both])
+
+
+def test_fed_pod_use_kernel_matches_jnp_path():
+    from repro.launch.fedtrain import FedPodConfig, mask_deltas
+    key = jax.random.PRNGKey(9)
+    deltas = {"w": jax.random.normal(key, (2, 40, 40)),
+              "v": jax.random.normal(jax.random.fold_in(key, 1), (2, 1000))}
+    cfg_a = FedPodConfig(num_clients=2, gamma=0.2, use_kernel=False)
+    cfg_b = FedPodConfig(num_clients=2, gamma=0.2, use_kernel=True)
+    a = mask_deltas(key, deltas, cfg_a)
+    b = mask_deltas(key, deltas, cfg_b)
+    for name in deltas:
+        for c in range(2):
+            n = deltas[name][c].size
+            k = max(1, round(0.2 * n))
+            ka = int(jnp.sum(a[name][c] != 0))
+            kb = int(jnp.sum(b[name][c] != 0))
+            assert kb <= k and kb >= int(0.9 * k) - 2
+            assert abs(ka - kb) <= max(2, int(0.05 * k))
+
+
+def test_fed_pod_use_kernel_keeps_per_layer_granularity():
+    """Alg. 4 masks per LAYER: a stacked (C, G, d) leaf with one quiet layer
+    (uniformly 100x smaller deltas) must still keep ~gamma*d entries of that
+    layer on BOTH paths — whole-leaf top-k would zero it out entirely."""
+    from repro.launch.fedtrain import FedPodConfig, mask_deltas
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (2, 3, 1024))
+    x = x.at[:, 1].multiply(0.01)                        # quiet layer
+    deltas = {"stack": x}
+    gamma = 0.25
+    for use_kernel in (False, True):
+        cfg = FedPodConfig(num_clients=2, gamma=gamma, use_kernel=use_kernel)
+        out = mask_deltas(key, deltas, cfg)["stack"]
+        for c in range(2):
+            for g in range(3):
+                kept = int(jnp.sum(out[c, g] != 0))
+                k = round(gamma * 1024)
+                assert kept <= k
+                assert kept >= int(0.9 * k) - 2, (use_kernel, c, g, kept)
+
+
+def test_topk_mask_pytree_slab_rows_rounding():
+    """A slab_rows that is not a chunk multiple must behave like the rounded
+    value — not silently skip the slab tail (kept count would exceed k)."""
+    from repro.kernels import ops
+    x = {"w": jax.random.normal(jax.random.PRNGKey(1), (70000,))}
+    out = ops.topk_mask_pytree(x, 0.1, interpret=True, slab_rows=40)
+    k = round(0.1 * 70000)
+    kept = int(jnp.sum(out["w"] != 0))
+    assert kept <= k
+    assert kept >= int(0.9 * k) - 2
+
+
+def test_topk_mask_pytree_tie_semantics_documented():
+    """Threshold selection keeps ALL ties at tau (documented caveat): a
+    constant leaf keeps every entry; the oracle would keep exactly k."""
+    from repro.kernels import ops
+    out = ops.topk_mask_pytree({"ones": jnp.ones((1024,))}, 0.1,
+                               interpret=True)
+    assert int(jnp.sum(out["ones"] != 0)) == 1024
+
+
+def test_selective_mask_threshold_kernel_iters_tightens():
+    """iters maps to refine sweeps on the kernel route: more iters must not
+    loosen the kept-count bound."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (4096,))
+    k = round(0.2 * 4096)
+    for iters in (24, 48):
+        out = selective_mask_threshold(x, 0.2, iters=iters, use_kernel=True)
+        kept = int(jnp.sum(out != 0))
+        assert kept <= k and kept >= int(0.95 * k) - 2, (iters, kept)
 
 
 def test_fed_pod_threshold_mask_matches_core():

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core.compression import (decode_sparse, encode_sparse,
@@ -57,6 +57,22 @@ def test_pytree_payload_accounts_small_leaves_dense():
     assert stats.dense_bytes == (1024 + 16) * 4
     expected_sparse = payload_bytes(1024, 0.1)[0] + 16 * 4
     assert stats.sparse_bytes == expected_sparse
+
+
+def test_pytree_payload_reports_per_encoding_split():
+    """Mixed uploads (coordinate big leaves + dense small ones) must report
+    the byte split per encoding, not just the last leaf's choice."""
+    tree = {"big": jnp.zeros((10_000,)), "small": jnp.zeros((16,))}
+    stats = pytree_payload_bytes(tree, gamma=0.01, min_leaf_size=256)
+    assert stats.encoding == "mixed"
+    assert set(stats.encoding_bytes) == {"coordinate", "dense"}
+    assert stats.encoding_bytes["dense"] == 16 * 4
+    assert sum(stats.encoding_bytes.values()) == stats.sparse_bytes
+    # single-encoding tree keeps a concrete label
+    solo = pytree_payload_bytes({"w": jnp.zeros((4096,))}, gamma=0.5,
+                                min_leaf_size=256)
+    assert solo.encoding == "bitmap"
+    assert solo.encoding_bytes == {"bitmap": solo.sparse_bytes}
 
 
 # ---------------------------------------------------------------------------
