@@ -27,6 +27,9 @@ from repro.kernels import ops
 ITERS = 8
 BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
                           "BENCH_masking.json")
+# smoke runs (CI) write here so they never clobber the tracked full-run JSON
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_masking.smoke.json")
 
 
 def _time(fn, *args, reps=5):
@@ -71,17 +74,21 @@ def _per_leaf_mask(tree, gamma, min_leaf_size=256):
         tree)
 
 
-def run():
+def run(smoke: bool = False):
+    """``smoke=True`` (CI): one small size, fewer reps, VGG+GRU tree only —
+    enough to catch pipeline regressions without tying up a runner."""
     rows = []
     gamma = 0.1
-    for n in (1 << 16, 1 << 20):
+    reps = 2 if smoke else 5
+    for n in ((1 << 14,) if smoke else (1 << 16, 1 << 20)):
         x = jax.random.normal(jax.random.PRNGKey(0), (n,))
         t_sort = _time(jax.jit(
-            lambda x: selective_mask_exact(x, gamma)), x)
+            lambda x: selective_mask_exact(x, gamma)), x, reps=reps)
         t_bisect = _time(jax.jit(
-            lambda x: selective_mask_threshold(x, gamma, 24)), x)
+            lambda x: selective_mask_threshold(x, gamma, 24)), x, reps=reps)
         t_kernel = _time(
-            lambda x: ops.topk_mask(x, gamma, iters=ITERS, interpret=True), x)
+            lambda x: ops.topk_mask(x, gamma, iters=ITERS, interpret=True), x,
+            reps=reps)
         rows.append({
             "figure": "kernels", "n": n, "gamma": gamma,
             "sort_us": round(t_sort, 1),
@@ -93,13 +100,16 @@ def run():
 
     # ---- whole-pytree masking: per-leaf pipeline vs segmented single-pass
     mask_rows = []
-    for model, tree in [("paper_vgg_gru", _paper_models_pytree()),
-                        ("transformer_12L", _transformer_pytree())]:
+    models = [("paper_vgg_gru", _paper_models_pytree())]
+    if not smoke:
+        models.append(("transformer_12L", _transformer_pytree()))
+    for model, tree in models:
         leaves = jax.tree_util.tree_leaves(tree)
         maskable = sum(1 for l in leaves if l.size >= 256)
-        t_per_leaf = _time(lambda t: _per_leaf_mask(t, gamma), tree)
+        t_per_leaf = _time(lambda t: _per_leaf_mask(t, gamma), tree, reps=reps)
         t_seg = _time(
-            lambda t: ops.topk_mask_pytree(t, gamma, interpret=True), tree)
+            lambda t: ops.topk_mask_pytree(t, gamma, interpret=True), tree,
+            reps=reps)
         mask_rows.append({
             "figure": "masking_pytree", "model": model, "gamma": gamma,
             "num_leaves": len(leaves), "maskable_leaves": maskable,
@@ -114,11 +124,16 @@ def run():
             "per_leaf_kernel_launches": maskable * (ITERS + 2),
             "segmented_kernel_launches": ops.DEFAULT_REFINE_SWEEPS + 2,
         })
-    with open(BENCH_PATH, "w") as f:
+    with open(SMOKE_PATH if smoke else BENCH_PATH, "w") as f:
         json.dump(mask_rows, f, indent=1)
     return rows + mask_rows
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import fmt_rows
-    print(fmt_rows(run()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps for CI regression gating")
+    print(fmt_rows(run(smoke=ap.parse_args().smoke)))

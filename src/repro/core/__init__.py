@@ -8,8 +8,14 @@ from repro.core.masking import (
     MaskingConfig, random_mask, selective_mask_exact,
     selective_mask_threshold, mask_pytree,
 )
-from repro.core.client import ClientConfig, client_update, local_sgd
-from repro.core.federated import FederatedConfig, make_federated_round, fedavg_aggregate
+from repro.core.client import (
+    ClientConfig, client_update, local_sgd, stacked_client_update,
+    local_update_flops,
+)
+from repro.core.federated import (
+    FederatedConfig, make_federated_round, make_cohort_round,
+    make_cohort_scan, cohort_select, fedavg_aggregate,
+)
 from repro.core.server import FederatedServer, RoundRecord
 from repro.core.compression import (
     payload_bytes, pytree_payload_bytes, encode_sparse, decode_sparse,

@@ -35,7 +35,8 @@ from repro.core.masking import MaskingConfig, mask_pytree
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jnp.ndarray]
 
-__all__ = ["ClientConfig", "local_sgd", "client_update"]
+__all__ = ["ClientConfig", "local_sgd", "client_update",
+           "stacked_client_update", "local_update_flops"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,3 +120,38 @@ def client_update(loss_fn: LossFn, global_params: PyTree, batches: Any,
     else:
         raise ValueError(f"unknown upload semantics {cfg.upload!r}")
     return upload, new_residual, mean_loss
+
+
+def stacked_client_update(loss_fn: LossFn, global_params: PyTree,
+                          stacked_batches: Any, mask_keys: jax.Array,
+                          cfg: ClientConfig, stacked_residuals: PyTree,
+                          error_feedback: bool,
+                          ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+    """``client_update`` vmapped over a leading client axis.
+
+    The axis may be the full registered population (oracle round) or a
+    padded cohort buffer (cohort engine, DESIGN.md §3.5) — the per-client
+    math is identical, which is what the cohort/oracle equivalence tests
+    rely on.  Returns stacked ``(uploads, new_residuals, losses)``.
+    """
+
+    def one_client(batches, k, res):
+        res_arg = res if error_feedback else None
+        return client_update(loss_fn, global_params, batches, k, cfg, res_arg)
+
+    return jax.vmap(one_client)(stacked_batches, mask_keys, stacked_residuals)
+
+
+def local_update_flops(stacked_batches: Any, num_params: int,
+                       cfg: ClientConfig) -> int:
+    """Per-client FLOP proxy for one round: 6 * params * examples seen
+    (fwd 2 + bwd 4 per parameter per example), times local epochs.
+
+    A proxy, not an HLO count (see launch/hlo.py for that): it is meant to
+    make per-round *relative* cost visible in RoundRecord — full-population
+    execution is flat in c(t); the cohort engine decays with it.
+    """
+    leaf = jax.tree_util.tree_leaves(stacked_batches)[0]
+    # leading axes: (clients, num_batches, batch, ...)
+    examples = int(leaf.shape[1]) * int(leaf.shape[2])
+    return 6 * int(num_params) * examples * int(cfg.local_epochs)

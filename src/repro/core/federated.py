@@ -14,6 +14,15 @@ the n_i/n weights already sum to 1 over the selected set, the extra 1/m would
 shrink the model m-fold.  We take Σ (n_i/n)Θ^i, which matches FedAvg
 (McMahan et al.) and the paper's cited behaviour.
 
+Two execution forms of the same round:
+
+* **oracle** (``make_federated_round``): vmap over ALL registered clients,
+  non-participants zero-weighted — simple, flat in c(t);
+* **cohort engine** (``make_cohort_round`` / ``make_cohort_scan``): gather
+  only the sampled m_t clients into a bucketed padded cohort buffer, run
+  client_update over the cohort axis, scatter residuals back (DESIGN.md
+  §3.5) — per-round work decays with c(t).
+
 The pod (shard_map) form of the same round lives in
 ``repro.launch.fedtrain`` — identical math, collectives instead of vmap.
 """
@@ -26,12 +35,13 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.client import ClientConfig, client_update
+from repro.core.client import ClientConfig, stacked_client_update
 from repro.core.sampling import SamplingSchedule, participation_mask
 
 PyTree = Any
 
-__all__ = ["FederatedConfig", "make_federated_round", "fedavg_aggregate"]
+__all__ = ["FederatedConfig", "make_federated_round", "make_cohort_round",
+           "make_cohort_scan", "fedavg_aggregate"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,14 +82,9 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
         part = participation_mask(sample_key, schedule, t, cfg.num_clients)
         mask_keys = jax.random.split(mask_key, cfg.num_clients)
 
-        def one_client(batches, k, res):
-            res_arg = res if cfg.error_feedback else None
-            up, new_res, loss = client_update(
-                loss_fn, params, batches, k, cfg.client, res_arg)
-            return up, new_res, loss
-
-        uploads, new_residuals, losses = jax.vmap(one_client)(
-            client_batches, mask_keys, residuals)
+        uploads, new_residuals, losses = stacked_client_update(
+            loss_fn, params, client_batches, mask_keys, cfg.client,
+            residuals, cfg.error_feedback)
 
         weights = part * n_samples
         new_params = fedavg_aggregate(params, uploads, weights,
@@ -101,3 +106,122 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
         return new_params, new_residuals, metrics
 
     return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Cohort execution engine (DESIGN.md §3.5)
+# ---------------------------------------------------------------------------
+# The oracle above runs EVERY registered client and multiplies
+# non-participants by zero — per-round compute/memory is flat in c(t).  The
+# cohort engine materializes only a padded cohort buffer of static size
+# ``cohort_size`` (a SamplingSchedule.bucket_ladder entry >= m_t): gather the
+# m_t participants' batch shards + error-feedback residuals into the buffer,
+# vmap client_update over the cohort axis only, and scatter residuals back
+# under the participation mask.  Padding slots (cohort rank >= m_t) execute
+# but are masked out of the aggregation — exactly the oracle's zero-weight
+# treatment, restricted to at most bucket-m_t clients instead of M-m_t.
+#
+# Equivalence with the oracle is by construction:
+#   * the participant SET is identical — both rank the same uniform draw
+#     from ``sample_key`` and keep ranks < m_t;
+#   * per-client mask keys are row i of split(mask_key, M) in both paths;
+#   * cohort ids are sorted ascending so the weighted reduction visits
+#     participants in the same client-id order as the oracle (its extra
+#     terms are exact zeros).
+
+
+def cohort_select(sample_key: jax.Array, schedule: SamplingSchedule, t,
+                  num_clients: int, cohort_size: int):
+    """Pick the round's cohort: ``(cohort_ids, valid)`` with ids sorted
+    ascending and ``valid[i] = 1`` iff cohort member i is a true participant
+    (its global rank < m_t).  Identical participant set to
+    :func:`repro.core.sampling.participation_mask` under the same key."""
+    m = schedule.num_clients(t, num_clients)
+    scores = jax.random.uniform(sample_key, (num_clients,))
+    order = jnp.argsort(scores)                  # ids by ascending score
+    ranks = jnp.argsort(order)                   # rank of each client id
+    cohort_ids = jnp.sort(order[:cohort_size])   # participant superset
+    valid = (jnp.take(ranks, cohort_ids) < m).astype(jnp.float32)
+    return cohort_ids, valid
+
+
+def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
+                      cfg: FederatedConfig, cohort_size: int):
+    """Cohort-engine form of ``make_federated_round``: same signature and
+    math, but client_update runs over ``cohort_size`` (static) clients
+    instead of ``cfg.num_clients``.  Requires
+    ``cohort_size >= m_t`` for every round it is dispatched to — the server
+    guarantees this via ``SamplingSchedule.bucket_for``."""
+    if not (0 < cohort_size <= cfg.num_clients):
+        raise ValueError(
+            f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+
+    def round_fn(params, residuals, client_batches, n_samples, t, key):
+        sample_key, mask_key = jax.random.split(key)
+        cohort_ids, valid = cohort_select(
+            sample_key, schedule, t, cfg.num_clients, cohort_size)
+
+        gather = lambda x: jnp.take(x, cohort_ids, axis=0)
+        cohort_batches = jax.tree.map(gather, client_batches)
+        cohort_res = jax.tree.map(gather, residuals)
+        mask_keys = jnp.take(
+            jax.random.split(mask_key, cfg.num_clients), cohort_ids, axis=0)
+
+        uploads, new_res, losses = stacked_client_update(
+            loss_fn, params, cohort_batches, mask_keys, cfg.client,
+            cohort_res, cfg.error_feedback)
+
+        weights = valid * jnp.take(n_samples, cohort_ids)
+        new_params = fedavg_aggregate(params, uploads, weights,
+                                      cfg.client.upload)
+        if cfg.error_feedback:
+            def scatter(old, new, old_cohort):
+                vm = valid.reshape((-1,) + (1,) * (new.ndim - 1))
+                kept = jnp.where(vm > 0, new, old_cohort)
+                return old.at[cohort_ids].set(kept)
+
+            new_residuals = jax.tree.map(
+                scatter, residuals, new_res, cohort_res)
+        else:
+            new_residuals = residuals
+
+        metrics = {
+            "mean_loss": jnp.sum(losses * valid)
+            / jnp.maximum(jnp.sum(valid), 1.0),
+            "num_sampled": jnp.sum(valid),
+        }
+        return new_params, new_residuals, metrics
+
+    return round_fn
+
+
+def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
+                     cfg: FederatedConfig, cohort_size: int):
+    """lax.scan-over-rounds fast path: one dispatch for a whole segment of
+    rounds that share a cohort bucket.
+
+    Returns ``scan_fn(params, residuals, client_batches, n_samples, ts,
+    keys) -> (params, residuals, metrics)`` where ``ts``/``keys`` carry a
+    leading segment-length axis and ``metrics`` leaves are stacked per
+    round.  Bit-identical to calling the single-round function in a Python
+    loop (same round body, scan just removes per-round dispatch)."""
+    if not (0 < cohort_size <= cfg.num_clients):
+        raise ValueError(
+            f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+    if cohort_size == cfg.num_clients:
+        round_fn = make_federated_round(loss_fn, schedule, cfg)
+    else:
+        round_fn = make_cohort_round(loss_fn, schedule, cfg, cohort_size)
+
+    def scan_fn(params, residuals, client_batches, n_samples, ts, keys):
+        def body(carry, tk):
+            p, r = carry
+            t, k = tk
+            p, r, metrics = round_fn(p, r, client_batches, n_samples, t, k)
+            return (p, r), metrics
+
+        (params, residuals), metrics = jax.lax.scan(
+            body, (params, residuals), (ts, keys))
+        return params, residuals, metrics
+
+    return scan_fn

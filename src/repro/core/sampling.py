@@ -41,6 +41,50 @@ class SamplingSchedule:
         floor = min(self.min_clients, num_registered)
         return jnp.clip(m, floor, num_registered)
 
+    # ---- cohort bucketing (DESIGN.md §3.5) ------------------------------
+    # m_t is a pure function of t, so the cohort buffer size for every round
+    # is host-computable before dispatch.  Buffer sizes are drawn from a
+    # small static ladder so the number of distinct compiled round programs
+    # stays O(log M) as c(t) anneals, instead of one per distinct m_t.
+
+    def num_clients_host(self, t: int, num_registered: int) -> int:
+        """Python-int m_t for host-side bucket selection (no tracing)."""
+        rate = float(np.asarray(self.rate(np.float32(t))))
+        m = int(round(rate * num_registered))
+        floor = min(self.min_clients, num_registered)
+        return max(min(m, num_registered), floor)
+
+    def bucket_ladder(self, num_registered: int) -> tuple:
+        """Static set of cohort buffer sizes: powers of two >= min_clients,
+        capped at (and always including) M = num_registered."""
+        floor = max(1, min(self.min_clients, num_registered))
+        b = 1
+        while b < floor:
+            b *= 2
+        ladder = []
+        while b < num_registered:
+            ladder.append(b)
+            b *= 2
+        ladder.append(num_registered)
+        return tuple(ladder)
+
+    def bucket_for(self, m: int, num_registered: int) -> int:
+        """Smallest ladder bucket that fits an m-client cohort."""
+        for b in self.bucket_ladder(num_registered):
+            if b >= m:
+                return b
+        return num_registered
+
+    def round_buckets(self, rounds: int, num_registered: int) -> list:
+        """Per-round (m_t, bucket) for t = 1..rounds — the server's dispatch
+        plan: consecutive equal buckets can share one compiled program and
+        be folded into a single lax.scan segment."""
+        out = []
+        for t in range(1, rounds + 1):
+            m = self.num_clients_host(t, num_registered)
+            out.append((m, self.bucket_for(m, num_registered)))
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class StaticSampling(SamplingSchedule):

@@ -1,8 +1,26 @@
 """Central-server training loop (paper Alg. 1 / Alg. 3 outer procedure).
 
-``FederatedServer`` owns the global model, runs R communication rounds via the
-jitted round function, meters transport bytes per round (sampling × masking ×
-encoding, see ``repro.core.compression``), and evaluates on a held-out set.
+``FederatedServer`` owns the global model, runs R communication rounds,
+meters transport bytes per round (sampling × masking × encoding, see
+``repro.core.compression``), and evaluates on a held-out set.
+
+Two execution engines (DESIGN.md §3.5):
+
+* ``engine="cohort"`` (default): per round, only the sampled cohort is
+  materialized and executed — the cohort buffer size is bucketed to
+  ``SamplingSchedule.bucket_ladder`` so recompiles stay O(log M) as c(t)
+  anneals.  Consecutive rounds sharing a bucket are folded into one
+  ``lax.scan`` dispatch.  Rounds whose bucket is the full population fall
+  through to the oracle program, so full-participation runs are
+  bit-identical to the legacy path.
+* ``engine="full"``: the original full-population vmap (every registered
+  client runs; non-participants are zero-weighted) — kept as the oracle
+  the cohort engine is property-tested against.
+
+Each distinct (bucket, segment-length) program is AOT-compiled once and
+cached; compile time is recorded on the triggering round's
+``RoundRecord.compile_s`` instead of polluting ``wall_s``, so bench JSON
+reflects steady-state per-round cost.
 
 This is the *simulation* driver used by the paper-reproduction benchmarks
 (Figs. 3-9).  The pod-scale driver is ``repro.launch.train``.
@@ -18,8 +36,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.client import local_update_flops
 from repro.core.compression import pytree_payload_bytes, pytree_num_params
-from repro.core.federated import FederatedConfig, make_federated_round
+from repro.core.federated import (FederatedConfig, make_cohort_round,
+                                  make_cohort_scan, make_federated_round)
 from repro.core.sampling import SamplingSchedule
 
 PyTree = Any
@@ -35,7 +55,10 @@ class RoundRecord:
     transport_units: float      # full-model-upload units this round (Eq. 6 basis)
     transport_bytes: int        # metered bytes (values + index overhead)
     eval_metric: Optional[float] = None
-    wall_s: float = 0.0
+    wall_s: float = 0.0         # steady-state execution time (compile excluded)
+    compile_s: float = 0.0      # program build time; nonzero on bucket-change rounds
+    cohort_size: int = 0        # padded cohort buffer actually executed
+    flop_proxy: float = 0.0     # 6·params·examples·epochs·cohort_size (proxy)
 
 
 class FederatedServer:
@@ -43,19 +66,73 @@ class FederatedServer:
 
     def __init__(self, loss_fn: Callable, schedule: SamplingSchedule,
                  cfg: FederatedConfig, init_params: PyTree,
-                 eval_fn: Optional[Callable] = None, seed: int = 0):
+                 eval_fn: Optional[Callable] = None, seed: int = 0,
+                 engine: str = "cohort", scan_rounds: bool = True):
+        if engine not in ("cohort", "full"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.cfg = cfg
         self.schedule = schedule
         self.params = init_params
         self.eval_fn = eval_fn
+        self.engine = engine
+        self.scan_rounds = scan_rounds
+        self._loss_fn = loss_fn
         self._key = jax.random.PRNGKey(seed)
-        self._round_fn = jax.jit(make_federated_round(loss_fn, schedule, cfg))
+        self._compiled: Dict[tuple, Any] = {}   # (bucket, seg_len) -> executable
         self._residuals = jax.tree.map(
             lambda p: jnp.zeros((cfg.num_clients,) + p.shape, p.dtype),
             init_params)
         self.history: List[RoundRecord] = []
         self._num_params = pytree_num_params(init_params)
 
+    # ---- engine dispatch -------------------------------------------------
+    def _round_program(self, bucket: int, seg_len: int):
+        """Build the (bucket, seg_len) round program (uncompiled)."""
+        if seg_len > 1:
+            return make_cohort_scan(
+                self._loss_fn, self.schedule, self.cfg, bucket)
+        if bucket >= self.cfg.num_clients:
+            return make_federated_round(self._loss_fn, self.schedule, self.cfg)
+        return make_cohort_round(
+            self._loss_fn, self.schedule, self.cfg, bucket)
+
+    def _get_compiled(self, bucket: int, seg_len: int, args):
+        """AOT-compile (once) the program for this bucket/segment shape.
+        Returns ``(executable, compile_s)`` — compile_s is 0 on cache hit.
+        The key includes the input avals so a later ``run()`` with
+        differently-shaped data recompiles instead of hitting a stale
+        executable (AOT calls don't retrace the way plain jit does)."""
+        avals = tuple((tuple(leaf.shape), str(leaf.dtype))
+                      for leaf in jax.tree_util.tree_leaves(args))
+        cache_key = (bucket, seg_len, avals)
+        hit = self._compiled.get(cache_key)
+        if hit is not None:
+            return hit, 0.0
+        fn = self._round_program(bucket, seg_len)
+        t0 = time.perf_counter()
+        compiled = jax.jit(fn).lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        self._compiled[cache_key] = compiled
+        return compiled, compile_s
+
+    def _segments(self, rounds: int, eval_rounds) -> List[tuple]:
+        """Split 1..rounds into (bucket, [t...]) segments: consecutive rounds
+        sharing a cohort bucket, broken at eval rounds (the host needs Θ_t
+        there).  engine="full" pins every bucket to the full population."""
+        M = self.cfg.num_clients
+        plan = self.schedule.round_buckets(rounds, M)
+        segments: List[tuple] = []
+        for t, (_m, bucket) in zip(range(1, rounds + 1), plan):
+            b_eff = bucket if self.engine == "cohort" else M
+            if (segments and self.scan_rounds
+                    and segments[-1][0] == b_eff
+                    and (t - 1) not in eval_rounds):
+                segments[-1][1].append(t)
+            else:
+                segments.append((b_eff, [t]))
+        return segments
+
+    # ---- training loop ---------------------------------------------------
     def run(self, client_batches: PyTree, n_samples: np.ndarray,
             rounds: int, eval_every: int = 0,
             eval_data: Any = None) -> List[RoundRecord]:
@@ -65,26 +142,52 @@ class FederatedServer:
             self.params, gamma, self.cfg.client.masking.min_leaf_size)
         self._compression = stats        # per-encoding byte split for summary()
         n_samples = jnp.asarray(n_samples, jnp.float32)
+        flops_per_client = local_update_flops(
+            client_batches, self._num_params, self.cfg.client)
 
-        for t in range(1, rounds + 1):
+        eval_rounds = set()
+        if eval_every and self.eval_fn is not None:
+            eval_rounds = {t for t in range(1, rounds + 1)
+                           if t % eval_every == 0 or t == rounds}
+
+        for bucket, ts in self._segments(rounds, eval_rounds):
+            seg_len = len(ts)
+            subs = []
+            for _ in ts:
+                self._key, sub = jax.random.split(self._key)
+                subs.append(sub)
+            if seg_len > 1:
+                t_arg = jnp.asarray(ts, jnp.float32)
+                key_arg = jnp.stack(subs)
+            else:
+                t_arg = jnp.asarray(ts[0], jnp.float32)
+                key_arg = subs[0]
+            args = (self.params, self._residuals, client_batches, n_samples,
+                    t_arg, key_arg)
+            compiled, compile_s = self._get_compiled(bucket, seg_len, args)
             t0 = time.perf_counter()
-            self._key, sub = jax.random.split(self._key)
-            self.params, self._residuals, metrics = self._round_fn(
-                self.params, self._residuals, client_batches, n_samples,
-                jnp.asarray(t, jnp.float32), sub)
-            m = float(metrics["num_sampled"])
-            rec = RoundRecord(
-                round=t,
-                num_sampled=int(m),
-                mean_loss=float(metrics["mean_loss"]),
-                transport_units=m * gamma,
-                transport_bytes=int(m) * stats.sparse_bytes,
-                wall_s=time.perf_counter() - t0,
-            )
-            if eval_every and self.eval_fn is not None and (
-                    t % eval_every == 0 or t == rounds):
-                rec.eval_metric = float(self.eval_fn(self.params, eval_data))
-            self.history.append(rec)
+            self.params, self._residuals, metrics = compiled(*args)
+            jax.block_until_ready(self.params)
+            wall = time.perf_counter() - t0
+
+            num_sampled = np.atleast_1d(np.asarray(metrics["num_sampled"]))
+            mean_loss = np.atleast_1d(np.asarray(metrics["mean_loss"]))
+            for i, t in enumerate(ts):
+                m = float(num_sampled[i])
+                rec = RoundRecord(
+                    round=t,
+                    num_sampled=int(m),
+                    mean_loss=float(mean_loss[i]),
+                    transport_units=m * gamma,
+                    transport_bytes=int(m) * stats.sparse_bytes,
+                    wall_s=wall / seg_len,
+                    compile_s=compile_s if i == 0 else 0.0,
+                    cohort_size=bucket,
+                    flop_proxy=float(flops_per_client) * bucket,
+                )
+                if t in eval_rounds and t == ts[-1]:
+                    rec.eval_metric = float(self.eval_fn(self.params, eval_data))
+                self.history.append(rec)
         return self.history
 
     # ---- reporting ------------------------------------------------------
@@ -103,6 +206,9 @@ class FederatedServer:
             "transport_units": self.total_transport_units(),
             "transport_GB": self.total_transport_bytes() / 1e9,
             "num_params": self._num_params,
+            "engine": self.engine,
+            "compile_s": float(sum(r.compile_s for r in self.history)),
+            "steady_wall_s": float(sum(r.wall_s for r in self.history)),
         }
         stats = getattr(self, "_compression", None)
         if stats is not None:

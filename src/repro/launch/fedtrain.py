@@ -142,11 +142,12 @@ def mask_deltas(key: jax.Array, deltas: PyTree, cfg: FedPodConfig) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def make_fed_round(arch: ArchConfig, cfg: FedPodConfig, hints=None) -> Callable:
-    """Returns ``round(params, batches, n_samples, participation, key)``.
-
-    batches: pytree with leading (C, local_steps, ...) axes.
-    """
+def _make_local_update(arch: ArchConfig, cfg: FedPodConfig,
+                       hints=None) -> Callable:
+    """E local SGD steps on one client's batch: ``(delta, mean_loss)``.
+    Shared by the full-population and cohort pod rounds — the cohort engine
+    must be a pure execution optimization, so there is exactly one
+    definition of the client-side math."""
     def loss_fn(params, batch):
         return tr.lm_loss(params, arch, batch, hints=hints)
 
@@ -161,27 +162,117 @@ def make_fed_round(arch: ArchConfig, cfg: FedPodConfig, hints=None) -> Callable:
         delta = jax.tree.map(lambda a, b: a - b, local, params)
         return delta, jnp.mean(losses)
 
+    return local_update
+
+
+def _weighted_upload(w: jax.Array, masked: PyTree) -> PyTree:
+    """Client-axis weighted reduction of masked deltas.
+
+    §Perf hillclimb 3: ship the masked deltas in bf16 — the upload
+    (cross-client reduction) halves; the paper already quantises uploads
+    ("compressed when uploaded", §3.2.1), bf16 is milder than its
+    1-bit/ternary citations.  Accumulate in f32."""
+    return jax.tree.map(
+        lambda d: jnp.tensordot(w.astype(jnp.bfloat16),
+                                d.astype(jnp.bfloat16), axes=(0, 0),
+                                preferred_element_type=jnp.float32),
+        masked)
+
+
+def make_fed_round(arch: ArchConfig, cfg: FedPodConfig, hints=None) -> Callable:
+    """Returns ``round(params, batches, n_samples, participation, key)``.
+
+    batches: pytree with leading (C, local_steps, ...) axes.
+    """
+    local_update = _make_local_update(arch, cfg, hints=hints)
+
     def fed_round(params, batches, n_samples, participation, key):
         deltas, losses = jax.vmap(
             lambda b: local_update(params, b))(batches)
         masked = mask_deltas(key, deltas, cfg)
         w = participation * n_samples
         w = w / jnp.maximum(jnp.sum(w), 1e-12)
-        # §Perf hillclimb 3: ship the masked deltas in bf16 — the upload
-        # (cross-client reduction) halves; the paper already quantises
-        # uploads ("compressed when uploaded", §3.2.1), bf16 is milder
-        # than its 1-bit/ternary citations.  Accumulate in f32.
-        agg = jax.tree.map(
-            lambda d: jnp.tensordot(w.astype(jnp.bfloat16),
-                                    d.astype(jnp.bfloat16), axes=(0, 0),
-                                    preferred_element_type=jnp.float32),
-            masked)
+        agg = _weighted_upload(w, masked)
         new_params = jax.tree.map(
             lambda p, a: (p + a.astype(p.dtype)), params, agg)
         metrics = {
             "mean_loss": jnp.sum(losses * participation)
             / jnp.maximum(jnp.sum(participation), 1.0),
             "num_sampled": jnp.sum(participation),
+        }
+        return new_params, metrics
+
+    return fed_round
+
+
+# ---------------------------------------------------------------------------
+# cohort execution engine, pod form (DESIGN.md §3.5)
+# ---------------------------------------------------------------------------
+def make_cohort_fed_round(arch: ArchConfig, cfg: FedPodConfig,
+                          cohort_size: int, mesh, client_axis: str = None,
+                          hints=None) -> Callable:
+    """Cohort-engine form of ``make_fed_round``: instead of running all
+    ``cfg.num_clients`` registered clients and zero-weighting
+    non-participants, gather only the sampled cohort (host-chosen ids,
+    padded to the static ``cohort_size`` bucket) and ``shard_map`` the
+    cohort axis over ``client_axis`` of ``mesh`` — each device runs
+    ``cohort_size // mesh.shape[client_axis]`` clients and the upload is a
+    per-device weighted partial sum followed by one psum.
+
+    Returns ``round(params, batches, n_samples, cohort_ids, valid, key)``
+    where ``batches`` has the full (C, local_steps, ...) registered-client
+    leading axes, ``cohort_ids`` is int32 (cohort_size,) and ``valid`` is
+    the 0/1 participation mask over the cohort (padding slots are 0).
+
+    Masking caveat: ``masking="random"`` draws its keep-masks per shard
+    (``fold_in(key, axis_index)`` over shard-local rows), so its random
+    draws differ from ``make_fed_round``'s full-leaf draws and vary with
+    device count — inherent to drawing inside shard_map.  "selective" is
+    deterministic in the deltas and matches the full round exactly.
+    """
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    client_axis = client_axis or fed_layout(mesh)[0]
+    n_dev = mesh.shape[client_axis]
+    if cohort_size % n_dev != 0:
+        raise ValueError(
+            f"cohort_size {cohort_size} not divisible by mesh axis "
+            f"{client_axis!r} ({n_dev})")
+
+    local_update = _make_local_update(arch, cfg, hints=hints)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(), P(client_axis), P(client_axis), P(client_axis),
+                       P()),
+             out_specs=(P(), P(), P()),
+             check_rep=False)
+    def cohort_shard(params, cohort_batches, w_shard, valid_shard, key):
+        # Each shard: its slice of the cohort end-to-end — local SGD, mask,
+        # weighted partial aggregation — then ONE f32 psum of model size.
+        deltas, losses = jax.vmap(
+            lambda b: local_update(params, b))(cohort_batches)
+        shard_key = jax.random.fold_in(key, jax.lax.axis_index(client_axis))
+        masked = mask_deltas(shard_key, deltas, cfg)
+        agg = jax.lax.psum(_weighted_upload(w_shard, masked), client_axis)
+        loss_sum = jax.lax.psum(jnp.sum(losses * valid_shard), client_axis)
+        valid_sum = jax.lax.psum(jnp.sum(valid_shard), client_axis)
+        return agg, loss_sum, valid_sum
+
+    def fed_round(params, batches, n_samples, cohort_ids, valid, key):
+        cohort_batches = jax.tree.map(
+            lambda x: jnp.take(x, cohort_ids, axis=0), batches)
+        w = valid * jnp.take(n_samples, cohort_ids)
+        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        agg, loss_sum, valid_sum = cohort_shard(
+            params, cohort_batches, w, valid, key)
+        new_params = jax.tree.map(
+            lambda p, a: (p + a.astype(p.dtype)), params, agg)
+        metrics = {
+            "mean_loss": loss_sum / jnp.maximum(valid_sum, 1.0),
+            "num_sampled": valid_sum,
         }
         return new_params, metrics
 

@@ -27,6 +27,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_cohort_mesh(num_devices: int | None = None):
+    """1-D mesh carrying the cohort engine's client axis (DESIGN.md §3.5):
+    each device runs cohort_size / num_devices clients of the padded cohort
+    buffer.  Uses all local devices by default.  Bucket sizes from
+    ``SamplingSchedule.bucket_ladder`` are powers of two *except the top
+    bucket M itself*, so a power-of-two device count divides every bucket
+    below full participation; full-participation rounds on a non-power-of-two
+    M belong on the oracle path (the server dispatches them there)."""
+    import numpy as np
+    devs = jax.devices()
+    if num_devices is not None:
+        devs = devs[:num_devices]
+    return jax.sharding.Mesh(np.asarray(devs), ("clients",))
+
+
 def data_axes(mesh) -> tuple:
     """The batch/FSDP axes: everything except 'model'."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -82,6 +82,48 @@ def test_paper_claim_rounds_for_budget():
     assert r >= 31, r
 
 
+# ---- cohort bucketing API (DESIGN.md §3.5) --------------------------------
+def test_bucket_ladder_powers_of_two_capped_at_m():
+    s = DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2)
+    assert s.bucket_ladder(1024) == (2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+    assert s.bucket_ladder(8) == (2, 4, 8)
+    # non-power-of-two M: ladder still caps at (and includes) M
+    assert s.bucket_ladder(12) == (2, 4, 8, 12)
+    assert s.bucket_ladder(1) == (1,)
+    # min_clients floors the smallest bucket
+    assert DynamicSampling(min_clients=5).bucket_ladder(64)[0] == 8
+
+
+def test_bucket_for_smallest_fitting():
+    s = DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2)
+    assert s.bucket_for(3, 1024) == 4
+    assert s.bucket_for(4, 1024) == 4
+    assert s.bucket_for(5, 1024) == 8
+    assert s.bucket_for(1000, 1024) == 1024
+    assert s.bucket_for(9, 12) == 12
+
+
+@given(st.integers(1, 40), st.sampled_from([0.01, 0.1, 0.5]),
+       st.sampled_from([7, 16, 100]))
+@settings(max_examples=20, deadline=None)
+def test_num_clients_host_matches_traced(t, beta, M):
+    s = DynamicSampling(initial_rate=1.0, beta=beta, min_clients=2)
+    assert s.num_clients_host(t, M) == int(s.num_clients(t, M))
+
+
+def test_round_buckets_cover_and_shrink():
+    M = 64
+    s = DynamicSampling(initial_rate=1.0, beta=0.3, min_clients=2)
+    plan = s.round_buckets(12, M)
+    ladder = set(s.bucket_ladder(M))
+    for m, bucket in plan:
+        assert bucket in ladder and bucket >= m
+    buckets = [b for _, b in plan]
+    assert buckets[0] == M            # round 1 still near-full participation
+    assert buckets[-1] == 2           # annealed to the floor bucket
+    assert all(a >= b for a, b in zip(buckets, buckets[1:]))
+
+
 def test_dynamic_cheaper_than_static_long_run():
     M = 50
     st_ = StaticSampling(initial_rate=1.0)
