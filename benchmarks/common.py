@@ -9,14 +9,14 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (ClientConfig, DynamicSampling, FederatedConfig,
-                        FederatedServer, MaskingConfig, StaticSampling)
+from repro.core import (DynamicSampling, FederatedServer, MaskingConfig,
+                        StaticSampling)
+from repro.core.strategy import FedStrategy
 from repro.data import (class_gaussian_images, iid_partition_images,
                         markov_text, partition_text)
 from repro.models import (classifier_accuracy, classifier_loss, init_gru_lm,
@@ -70,7 +70,17 @@ def make_schedule(kind: str, beta: float = 0.0, rate: float = 1.0):
 def run_federated(model: str, schedule, masking: MaskingConfig, rounds: int,
                   lr: float = 0.05, seed: int = 0,
                   error_feedback: bool = False) -> Dict:
-    """One federated training run; returns summary metrics."""
+    """Legacy-shaped helper: build the equivalent FedStrategy and run it."""
+    strat = FedStrategy.from_components(
+        "bench", schedule, masking,
+        learning_rate=lr, error_feedback=error_feedback)
+    return run_strategy(model, strat, rounds, seed=seed)
+
+
+def run_strategy(model: str, strat: FedStrategy, rounds: int,
+                 seed: int = 0) -> Dict:
+    """One federated training run driven by a FedStrategy; returns summary
+    metrics (transport bytes are the codec's exact wire accounting)."""
     if model == "lenet":
         batches, n, eval_data = mnist_like(seed)
         params = init_lenet(jax.random.PRNGKey(seed), IMG_SIZE, 1)
@@ -93,12 +103,8 @@ def run_federated(model: str, schedule, masking: MaskingConfig, rounds: int,
     else:
         raise ValueError(model)
 
-    cfg = FederatedConfig(
-        num_clients=NUM_CLIENTS,
-        client=ClientConfig(local_epochs=1, learning_rate=lr,
-                            masking=masking),
-        error_feedback=error_feedback)
-    server = FederatedServer(loss_fn, schedule, cfg, params, eval_fn=eval_fn)
+    server = FederatedServer.from_strategy(
+        strat, loss_fn, params, NUM_CLIENTS, eval_fn=eval_fn, seed=seed)
     t0 = time.time()
     server.run(batches, n, rounds, eval_every=rounds, eval_data=eval_data)
     s = server.summary()
@@ -108,8 +114,13 @@ def run_federated(model: str, schedule, masking: MaskingConfig, rounds: int,
         "final_loss": s["final_loss"],
         "transport_units": s["transport_units"],
         "transport_GB": s["transport_GB"],
+        "codec": s["codec"],
+        "client_upload_bytes": s["client_upload_bytes"],
         "rounds": rounds,
         "wall_s": round(time.time() - t0, 2),
+        # steady-state vs compile split (PR 3 metering) for bench JSON
+        "steady_wall_s": round(s["steady_wall_s"], 4),
+        "compile_s": round(s["compile_s"], 2),
     }
 
 

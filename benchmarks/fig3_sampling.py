@@ -21,10 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ClientConfig, DynamicSampling, FederatedConfig,
-                        FederatedServer, MaskingConfig, StaticSampling)
+from repro.core import (DynamicSampling, FederatedServer, StaticSampling,
+                        strategy)
 
-from benchmarks.common import make_schedule, run_federated
+from benchmarks.common import make_schedule, run_strategy
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
                           "BENCH_cohort.json")
@@ -35,13 +35,17 @@ SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
 
 def run():
     rows = []
-    none = MaskingConfig(mode="none")
+    # "fig3" is the beta=0.1 preset; the other schedules are field
+    # overrides of the same strategy record.
+    settings = [
+        ("static", strategy.get("dense-baseline")),
+        ("dynamic_b0.01", strategy.get(
+            "fig3", sampling=make_schedule("dynamic", 0.01))),
+        ("dynamic_b0.1", strategy.get("fig3")),
+    ]
     for rounds in (10, 30):
-        for name, sched in [
-                ("static", make_schedule("static")),
-                ("dynamic_b0.01", make_schedule("dynamic", 0.01)),
-                ("dynamic_b0.1", make_schedule("dynamic", 0.1))]:
-            r = run_federated("lenet", sched, none, rounds)
+        for name, strat in settings:
+            r = run_strategy("lenet", strat, rounds)
             rows.append({"figure": "fig3", "sampling": name,
                          "rounds": rounds, **r})
     return rows
@@ -104,12 +108,9 @@ def run_cohort(Ms=(64, 256, 1024), rounds=8, smoke=False):
         sched = StaticSampling(initial_rate=0.125, min_clients=2)
         walls = {}
         for engine in ("full", "cohort"):
-            cfg = FederatedConfig(
-                num_clients=M,
-                client=ClientConfig(local_epochs=1, learning_rate=0.05,
-                                    masking=MaskingConfig(mode="none")))
-            server = FederatedServer(loss_fn, sched, cfg, params,
-                                     engine=engine)
+            strat = strategy.get("dense-baseline", sampling=sched)
+            server = FederatedServer.from_strategy(strat, loss_fn, params, M,
+                                                   engine=engine)
             server.run(batches, n, rounds)
             row = _steady_rows(server, engine, M)
             walls[engine] = row["steady_wall_ms_per_round"]
@@ -121,11 +122,9 @@ def run_cohort(Ms=(64, 256, 1024), rounds=8, smoke=False):
     M = Ms[-1]
     loss_fn, params, batches, n = _logistic_problem(M)
     sched = DynamicSampling(initial_rate=1.0, beta=0.3, min_clients=2)
-    cfg = FederatedConfig(
-        num_clients=M,
-        client=ClientConfig(local_epochs=1, learning_rate=0.05,
-                            masking=MaskingConfig(mode="none")))
-    server = FederatedServer(loss_fn, sched, cfg, params, engine="cohort")
+    strat = strategy.get("fig3", sampling=sched)
+    server = FederatedServer.from_strategy(strat, loss_fn, params, M,
+                                           engine="cohort")
     server.run(batches, n, rounds if smoke else 2 * rounds)
     for r in server.history:
         rows.append({

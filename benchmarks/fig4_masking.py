@@ -1,18 +1,23 @@
 """Paper Fig. 4: random vs selective masking, masking rate (fraction KEPT)
-0.1..0.9, static sampling, 10 rounds, LeNet."""
+0.1..0.9, static sampling, 10 rounds, LeNet.
 
-from repro.core import MaskingConfig
+Every run is the "fig4" strategy preset with the mask policy overridden —
+``strategy.get`` re-derives the sparse COO codec per gamma, so transport
+columns are exact wire bytes."""
 
-from benchmarks.common import make_schedule, run_federated
+from repro.core import strategy
+from repro.core.strategy import MaskPolicy
+
+from benchmarks.common import run_strategy
 
 
 def run():
     rows = []
-    sched = make_schedule("static", rate=1.0)
     for gamma in (0.1, 0.3, 0.5, 0.7, 0.9):
         for mode in ("random", "selective"):
-            r = run_federated("lenet", sched,
-                              MaskingConfig(mode=mode, gamma=gamma),
-                              rounds=10)
+            policy = (MaskPolicy.random(gamma) if mode == "random"
+                      else MaskPolicy.selective(gamma))
+            r = run_strategy("lenet", strategy.get("fig4", masking=policy),
+                             rounds=10)
             rows.append({"figure": "fig4", "mode": mode, "gamma": gamma, **r})
     return rows

@@ -1,10 +1,31 @@
 """Paper Fig. 5: dynamic sampling + masking combined — initial rates
 {0.5, 1.0} x decay {0.01, 0.1} x {random, selective} @ gamma=0.5, 20 rounds,
-LeNet (the paper's 50-round MNIST chart, scaled)."""
+LeNet (the paper's 50-round MNIST chart, scaled).  Every run is a field
+override of the "fig5" strategy preset.
 
-from repro.core import MaskingConfig
+Also hosts the strategy-preset smoke bench for CI:
 
-from benchmarks.common import make_schedule, run_federated
+  PYTHONPATH=src python -m benchmarks.fig5_combined --smoke
+
+runs every registry preset ("dense-baseline", "fig3", "fig4", "fig5",
+"fig5-int8") on a small federated problem and writes
+``BENCH_strategy.smoke.json`` rows comparing round wall-clock and the
+codec's EXACT per-round wire bytes — the bench-smoke CI job exercises the
+whole strategy surface (registry -> from_strategy -> codec round-trip ->
+byte metering) on every push.
+"""
+
+import argparse
+import json
+import os
+
+from repro.core import strategy
+from repro.core.strategy import MaskPolicy
+
+from benchmarks.common import make_schedule, run_strategy
+
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_strategy.smoke.json")
 
 
 def run():
@@ -12,10 +33,56 @@ def run():
     for rate in (0.5, 1.0):
         for beta in (0.01, 0.1):
             for mode in ("random", "selective"):
-                sched = make_schedule("dynamic", beta, rate)
-                r = run_federated(
-                    "lenet", sched, MaskingConfig(mode=mode, gamma=0.5),
-                    rounds=20)
+                policy = (MaskPolicy.random(0.5) if mode == "random"
+                          else MaskPolicy.selective(0.5))
+                strat = strategy.get(
+                    "fig5", masking=policy,
+                    sampling=make_schedule("dynamic", beta, rate))
+                r = run_strategy("lenet", strat, rounds=20)
                 rows.append({"figure": "fig5", "init_rate": rate,
                              "beta": beta, "mode": mode, **r})
     return rows
+
+
+def run_strategy_smoke(rounds=4):
+    """Tiny-scale comparison of every registered preset: steady wall-clock
+    per round + exact codec wire bytes per round.  Writes
+    BENCH_strategy.smoke.json (CI artifact)."""
+    rows = []
+    for name in strategy.names():
+        strat = strategy.get(name)
+        r = run_strategy("lenet", strat, rounds=rounds)
+        per_round = r["transport_GB"] * 1e9 / rounds
+        rows.append({
+            "figure": "strategy_smoke",
+            "preset": name,
+            "sampling": type(strat.sampling).__name__,
+            "masking": strat.masking.mode,
+            "codec": r["codec"],
+            "rounds": rounds,
+            "client_upload_bytes": r["client_upload_bytes"],
+            "wire_bytes_per_round": round(per_round),
+            "final_loss": r["final_loss"],
+            # steady-state execution only — compile is metered separately
+            # (RoundRecord.compile_s split, PR 3), so the per-preset
+            # comparison is not skewed by first-round AOT compiles.
+            "steady_wall_ms_per_round": round(
+                1e3 * r["steady_wall_s"] / rounds, 3),
+            "compile_s": r["compile_s"],
+        })
+    with open(SMOKE_PATH, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="preset-comparison smoke bench for CI "
+                         "(writes BENCH_strategy.smoke.json)")
+    args = ap.parse_args()
+    if args.smoke:
+        print(fmt_rows(run_strategy_smoke()))
+    else:
+        print(fmt_rows(run()))

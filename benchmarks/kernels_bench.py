@@ -19,7 +19,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.masking import selective_mask_exact, selective_mask_threshold
 from repro.kernels import ops
@@ -105,7 +104,7 @@ def run(smoke: bool = False):
         models.append(("transformer_12L", _transformer_pytree()))
     for model, tree in models:
         leaves = jax.tree_util.tree_leaves(tree)
-        maskable = sum(1 for l in leaves if l.size >= 256)
+        maskable = sum(1 for leaf in leaves if leaf.size >= 256)
         t_per_leaf = _time(lambda t: _per_leaf_mask(t, gamma), tree, reps=reps)
         t_seg = _time(
             lambda t: ops.topk_mask_pytree(t, gamma, interpret=True), tree,
@@ -113,7 +112,7 @@ def run(smoke: bool = False):
         mask_rows.append({
             "figure": "masking_pytree", "model": model, "gamma": gamma,
             "num_leaves": len(leaves), "maskable_leaves": maskable,
-            "num_params": int(sum(l.size for l in leaves)),
+            "num_params": int(sum(leaf.size for leaf in leaves)),
             "per_leaf_us": round(t_per_leaf, 1),
             "segmented_us": round(t_seg, 1),
             "speedup": round(t_per_leaf / max(t_seg, 1e-9), 2),

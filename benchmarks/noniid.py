@@ -6,8 +6,8 @@ survive client drift?"""
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ClientConfig, FederatedConfig, FederatedServer,
-                        MaskingConfig, StaticSampling)
+from repro.core import FederatedServer, MaskingConfig, StaticSampling
+from repro.core.strategy import FedStrategy
 from repro.data import class_gaussian_images, noniid_partition_images
 from repro.models import (classifier_accuracy, classifier_loss, init_lenet,
                           lenet_forward)
@@ -21,15 +21,13 @@ def _run(masking, error_feedback=False, rounds=14, seed=0):
     xs, ys, n = noniid_partition_images(data.train_x, data.train_y,
                                         NUM_CLIENTS, 16,
                                         shards_per_client=2, seed=seed)
-    cfg = FederatedConfig(
-        num_clients=NUM_CLIENTS,
-        client=ClientConfig(local_epochs=1, learning_rate=0.05,
-                            masking=masking),
-        error_feedback=error_feedback)
+    strat = FedStrategy.from_components(
+        "noniid", StaticSampling(initial_rate=1.0), masking,
+        learning_rate=0.05, error_feedback=error_feedback)
     params = init_lenet(jax.random.PRNGKey(seed), IMG)
-    server = FederatedServer(
-        classifier_loss(lenet_forward), StaticSampling(initial_rate=1.0),
-        cfg, params, eval_fn=jax.jit(classifier_accuracy(lenet_forward)))
+    server = FederatedServer.from_strategy(
+        strat, classifier_loss(lenet_forward), params, NUM_CLIENTS,
+        eval_fn=jax.jit(classifier_accuracy(lenet_forward)))
     server.run((jnp.asarray(xs), jnp.asarray(ys)), n, rounds,
                eval_every=rounds,
                eval_data=(jnp.asarray(data.test_x), jnp.asarray(data.test_y)))

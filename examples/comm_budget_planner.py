@@ -8,8 +8,6 @@ model sizes.
 
 import argparse
 
-import jax
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.core.compression import pytree_payload_bytes

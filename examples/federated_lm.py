@@ -17,8 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro.core import strategy
 from repro.core.sampling import DynamicSampling, participation_mask
-from repro.data import markov_text, partition_text
+from repro.core.strategy import MaskPolicy
+from repro.data import markov_text
 from repro.launch.fedtrain import FedPodConfig, make_fed_round
 from repro.models import transformer as tr
 from repro.models.transformer import cross_entropy
@@ -39,9 +41,16 @@ def main():
 
     cfg = get_arch(args.arch).reduced()
     C, S = args.clients, args.local_steps
-    fed_cfg = FedPodConfig(num_clients=C, local_steps=S,
-                           learning_rate=args.lr, gamma=args.gamma)
-    schedule = DynamicSampling(initial_rate=1.0, beta=args.beta)
+    # The pod round collapses to one strategy record: the "fig5" preset
+    # (dynamic sampling + selective masking + sparse COO wire) specialized
+    # to the CLI's beta/gamma/lr.
+    strat = strategy.get(
+        "fig5",
+        sampling=DynamicSampling(initial_rate=1.0, beta=args.beta),
+        masking=MaskPolicy.selective(args.gamma),
+        learning_rate=args.lr)
+    schedule = strat.sampling
+    fed_cfg = FedPodConfig.from_strategy(strat, num_clients=C, local_steps=S)
     fed_round = jax.jit(make_fed_round(cfg, fed_cfg))
 
     data = markov_text(num_train=C * args.rounds * S * args.batch * args.seq

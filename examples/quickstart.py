@@ -1,16 +1,19 @@
-"""Quickstart: the paper's two techniques in ~60 lines.
+"""Quickstart: the paper's two techniques through the strategy API.
 
-Trains LeNet on a synthetic MNIST stand-in under four federated settings
-(static/dynamic sampling x dense/selective-masked uploads) and prints the
-accuracy-vs-transport trade-off the paper is about.
+A federated scenario is ONE object — ``strategy.get(name)`` returns a
+``FedStrategy`` composing the sampling schedule, mask policy, wire codec
+and aggregation rule; ``FederatedServer.from_strategy`` runs it.  This
+trains LeNet on a synthetic MNIST stand-in under four presets and prints
+the accuracy-vs-transport trade-off the paper is about, with transport as
+the codec's EXACT wire bytes.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 
-from repro.core import (ClientConfig, DynamicSampling, FederatedConfig,
-                        FederatedServer, MaskingConfig, StaticSampling)
+from repro.core import FederatedServer, strategy
+from repro.core.strategy import MaskPolicy
 from repro.data import class_gaussian_images, iid_partition_images
 from repro.models import (classifier_accuracy, classifier_loss, init_lenet,
                           lenet_forward)
@@ -29,33 +32,29 @@ def main():
     loss_fn = classifier_loss(lenet_forward)
     eval_fn = jax.jit(classifier_accuracy(lenet_forward))
 
+    # Registry presets + field overrides: the paper's operating point
+    # (Fig. 5) is dynamic sampling AND selective top-k masking combined.
     settings = {
-        "static + dense": (StaticSampling(initial_rate=1.0),
-                           MaskingConfig(mode="none")),
-        "dynamic(b=0.1) + dense": (DynamicSampling(initial_rate=1.0, beta=0.1),
-                                   MaskingConfig(mode="none")),
-        "static + selective(g=0.1)": (StaticSampling(initial_rate=1.0),
-                                      MaskingConfig(mode="selective",
-                                                    gamma=0.1)),
-        "dynamic + selective (paper)": (
-            DynamicSampling(initial_rate=1.0, beta=0.1),
-            MaskingConfig(mode="selective", gamma=0.1)),
+        "dense-baseline (static)": strategy.get("dense-baseline"),
+        "fig3: dynamic sampling": strategy.get("fig3"),
+        "fig4: selective g=0.1": strategy.get("fig4"),
+        "fig5 @ g=0.1 (paper)": strategy.get(
+            "fig5", masking=MaskPolicy.selective(0.1)),
+        "fig5-int8 wire": strategy.get("fig5-int8"),
     }
 
-    print(f"{'setting':32s} {'accuracy':>9s} {'transport':>10s} (full-model units)")
-    for name, (schedule, masking) in settings.items():
+    print(f"{'strategy':26s} {'accuracy':>9s} {'transport':>10s} "
+          f"{'wire MB':>8s}  codec")
+    for name, strat in settings.items():
         params = init_lenet(jax.random.PRNGKey(0), IMG)
-        cfg = FederatedConfig(
-            num_clients=NUM_CLIENTS,
-            client=ClientConfig(local_epochs=1, learning_rate=0.05,
-                                masking=masking))
-        server = FederatedServer(loss_fn, schedule, cfg, params,
-                                 eval_fn=eval_fn)
+        server = FederatedServer.from_strategy(
+            strat, loss_fn, params, NUM_CLIENTS, eval_fn=eval_fn)
         server.run(batches, n, ROUNDS, eval_every=ROUNDS,
                    eval_data=eval_data)
         s = server.summary()
-        print(f"{name:32s} {s['final_eval']:9.3f} "
-              f"{s['transport_units']:10.2f}")
+        print(f"{name:26s} {s['final_eval']:9.3f} "
+              f"{s['transport_units']:10.2f} "
+              f"{s['transport_bytes'] / 1e6:8.2f}  {s['codec']}")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ depth-independent (MaxText-style stacked-scan).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 __all__ = ["LayerSpec", "ArchConfig", "InputShape", "INPUT_SHAPES"]
 

@@ -1,4 +1,10 @@
-"""Paper core: dynamic sampling + selective masking for federated learning."""
+"""Paper core: dynamic sampling + selective masking for federated learning.
+
+The composable surface is ``repro.core.strategy``: a ``FedStrategy`` record
+(sampling × masking × codec × aggregation) plus a string registry of
+presets — ``strategy.get("fig5")`` — consumed by
+``FederatedServer.from_strategy`` / ``strategy.build_round``.
+"""
 
 from repro.core.sampling import (
     StaticSampling, DynamicSampling, SamplingSchedule,
@@ -19,4 +25,12 @@ from repro.core.federated import (
 from repro.core.server import FederatedServer, RoundRecord
 from repro.core.compression import (
     payload_bytes, pytree_payload_bytes, encode_sparse, decode_sparse,
+    quantize_int8, dequantize_int8,
+)
+from repro.core.codecs import (
+    UploadCodec, IdentityCodec, SparseCodec, Int8Codec, ChainCodec,
+)
+from repro.core import strategy
+from repro.core.strategy import (
+    FedStrategy, MaskPolicy, Aggregator, build_round,
 )

@@ -29,6 +29,10 @@ __all__ = [
     "pytree_payload_bytes",
     "encode_sparse",
     "decode_sparse",
+    "quantize_int8",
+    "dequantize_int8",
+    "quantize_pytree",
+    "dequantize_pytree",
     "CompressionStats",
 ]
 
@@ -70,7 +74,8 @@ def payload_bytes(num_params: int, gamma: float, value_bytes: int = 4,
 
 
 def pytree_num_params(tree: PyTree) -> int:
-    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+    return int(sum(np.prod(leaf.shape)
+                   for leaf in jax.tree_util.tree_leaves(tree)))
 
 
 def pytree_payload_bytes(tree: PyTree, gamma: float, min_leaf_size: int = 256,
@@ -106,26 +111,94 @@ def encode_sparse(masked: jax.Array, k: int) -> Dict[str, jax.Array]:
     """Coordinate-encode a masked tensor: the k nonzero (index, value) pairs.
 
     Static-shape (k fixed); zero-padded if fewer nonzeros survived the
-    threshold.  Used by the simulated client->server transport to prove the
-    payload round-trips; the pod path aggregates masked dense tensors and only
-    *meters* these bytes.
+    threshold.  This is the per-leaf primitive behind
+    ``repro.core.codecs.SparseCodec`` — the real client->server wire format;
+    the pod path aggregates masked dense tensors and only *meters* these
+    bytes.
+
+    Slot selection is MAGNITUDE-ranked (stable, index tie-break): with at
+    most k nonzeros the round-trip is bit-exact, and a tensor that
+    overflows its slot budget (e.g. a tie plateau on the kernel top-k
+    path) degrades gracefully by shedding its *smallest* values — i.e. it
+    behaves as a slightly tighter top-k mask, never dropping dominant
+    coordinates.  With error feedback on, the shed mass re-enters the
+    residual (see ``make_federated_round``).
     """
+    if k < 1:
+        raise ValueError(f"encode_sparse needs k >= 1, got {k}")
     flat = masked.reshape(-1)
+    if k > flat.size:
+        raise ValueError(
+            f"encode_sparse k={k} exceeds tensor size {flat.size}")
     nz = flat != 0
-    # Stable selection of nonzero positions: sort by (not nz, position).
-    order = jnp.argsort(jnp.where(nz, jnp.arange(flat.size),
-                                  flat.size + jnp.arange(flat.size)))
+    # Zeros sort last (+inf key); nonzeros by descending magnitude.
+    key = jnp.where(nz, -jnp.abs(flat.astype(jnp.float32)), jnp.inf)
+    order = jnp.argsort(key)          # jnp.argsort is stable: index tie-break
     idx = order[:k].astype(jnp.int32)
     vals = flat[idx] * nz[idx].astype(flat.dtype)
     return {"indices": idx, "values": vals,
             "shape": np.asarray(masked.shape, np.int32)}
 
 
+def _is_concrete(x: Any) -> bool:
+    """True when value-level validation is possible (not an abstract
+    tracer)."""
+    return not isinstance(x, jax.core.Tracer)
+
+
+def _as_array(x: Any, name: str):
+    """Normalize a payload entry to something with shape/dtype, so the
+    validators below raise the documented ``ValueError`` (not
+    ``AttributeError``) on non-array garbage.  Tracers and arrays pass
+    through; lists/scalars coerce via numpy."""
+    if hasattr(x, "dtype") and hasattr(x, "shape"):
+        return x
+    try:
+        arr = np.asarray(x)
+    except Exception as e:
+        raise ValueError(
+            f"{name} is not array-like: {type(x).__name__}") from e
+    if arr.dtype == object:
+        raise ValueError(f"{name} is not array-like: {type(x).__name__}")
+    return arr
+
+
 def decode_sparse(payload: Dict[str, jax.Array]) -> jax.Array:
+    """Decode a COO payload back to a dense tensor.
+
+    Malformed payloads fail loudly instead of silently scatter-adding
+    garbage: missing keys, index/value length mismatch, non-integer
+    indices, or (when the payload is concrete, i.e. not traced)
+    out-of-range indices all raise ``ValueError``.
+    """
+    missing = {"indices", "values", "shape"} - set(payload)
+    if missing:
+        raise ValueError(f"sparse payload missing keys {sorted(missing)}")
+    indices = _as_array(payload["indices"], "sparse indices")
+    values = _as_array(payload["values"], "sparse values")
+    if not jnp.issubdtype(indices.dtype, jnp.integer):
+        raise ValueError(
+            f"sparse indices must be integers, got {indices.dtype}")
+    if indices.shape != values.shape or getattr(indices, "ndim", 1) != 1:
+        raise ValueError(
+            f"sparse indices/values must be matching 1-D arrays, got "
+            f"{indices.shape} vs {values.shape}")
     shape = tuple(int(s) for s in payload["shape"])
-    size = int(np.prod(shape))
-    out = jnp.zeros((size,), payload["values"].dtype)
-    out = out.at[payload["indices"]].add(payload["values"])
+    if any(s < 0 for s in shape):
+        raise ValueError(f"sparse payload has negative shape {shape}")
+    size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    if indices.shape[0] > size:
+        raise ValueError(
+            f"sparse payload has {indices.shape[0]} slots for a tensor of "
+            f"{size} elements")
+    if _is_concrete(indices):
+        idx = np.asarray(indices)
+        if idx.size and (idx.min() < 0 or idx.max() >= size):
+            raise ValueError(
+                f"sparse indices out of range [0, {size}): "
+                f"[{idx.min()}, {idx.max()}]")
+    out = jnp.zeros((size,), values.dtype)
+    out = out.at[indices].add(values)
     return out.reshape(shape)
 
 
@@ -140,6 +213,9 @@ def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
     drops from 4 to 1 byte per kept entry (bitmap encoding then costs
     gamma*P + P/8 bytes).
     """
+    x = _as_array(x, "quantize_int8 input")
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        raise ValueError(f"quantize_int8 expects a float tensor, got {x.dtype}")
     scale = jnp.max(jnp.abs(x)) / 127.0
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
@@ -147,7 +223,19 @@ def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
 
 
 def dequantize_int8(payload: Dict[str, jax.Array]) -> jax.Array:
-    return payload["q"].astype(jnp.float32) * payload["scale"]
+    """Dequantize an int8 payload; malformed payloads raise ``ValueError``
+    (missing keys, non-int8 values, non-scalar scale)."""
+    missing = {"q", "scale"} - set(payload)
+    if missing:
+        raise ValueError(f"int8 payload missing keys {sorted(missing)}")
+    q = _as_array(payload["q"], "int8 payload q")
+    scale = _as_array(payload["scale"], "int8 payload scale")
+    if q.dtype != jnp.int8:
+        raise ValueError(f"int8 payload q must be int8, got {q.dtype}")
+    if getattr(scale, "ndim", 0) != 0:
+        raise ValueError(
+            f"int8 payload scale must be a scalar, got shape {scale.shape}")
+    return q.astype(jnp.float32) * scale
 
 
 def quantize_pytree(tree: PyTree) -> PyTree:

@@ -30,18 +30,30 @@ The pod (shard_map) form of the same round lives in
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.client import ClientConfig, stacked_client_update
+from repro.core.codecs import roundtrip_stacked
 from repro.core.sampling import SamplingSchedule, participation_mask
 
 PyTree = Any
 
 __all__ = ["FederatedConfig", "make_federated_round", "make_cohort_round",
-           "make_cohort_scan", "fedavg_aggregate"]
+           "make_cohort_scan", "cohort_select", "fedavg_aggregate"]
+
+
+def _resolve_policies(codec, aggregator):
+    """Normalize the optional (codec, aggregator) pair every round builder
+    takes: identity wire + plain fedavg when unset."""
+    agg_fn = aggregator.fn if aggregator is not None else fedavg_aggregate
+
+    def apply_wire(stacked):
+        return roundtrip_stacked(codec, stacked)
+
+    return apply_wire, agg_fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,15 +79,19 @@ def fedavg_aggregate(global_params: PyTree, uploads: PyTree,
 
 
 def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
-                         cfg: FederatedConfig):
+                         cfg: FederatedConfig, *, codec=None, aggregator=None):
     """Returns ``round_fn(params, residuals, client_batches, n_samples, t, key)
     -> (params, residuals, metrics)``.
 
     ``client_batches``: pytree with leading (num_clients, num_batches, B, ...)
     axes.  ``n_samples``: (num_clients,) float per-client dataset sizes for
     Eq. 2 weighting.  ``residuals``: stacked error-feedback state (zeros when
-    cfg.error_feedback is False).
+    cfg.error_feedback is False).  ``codec`` (an
+    ``repro.core.codecs.UploadCodec``) round-trips every client upload
+    through its wire format before aggregation; ``aggregator`` (an
+    ``repro.core.strategy.Aggregator``) replaces plain weighted FedAvg.
     """
+    apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
     def round_fn(params, residuals, client_batches, n_samples, t, key):
         sample_key, mask_key = jax.random.split(key)
@@ -86,10 +102,18 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
             loss_fn, params, client_batches, mask_keys, cfg.client,
             residuals, cfg.error_feedback)
 
+        wired = apply_wire(uploads)
         weights = part * n_samples
-        new_params = fedavg_aggregate(params, uploads, weights,
-                                      cfg.client.upload)
+        new_params = agg_fn(params, wired, weights, cfg.client.upload)
         if cfg.error_feedback:
+            if wired is not uploads:
+                # Wire loss (int8 quantisation, slot truncation) is real
+                # masked-out mass: feed it back like any other residual so
+                # error feedback compensates for the codec too.  Exact
+                # no-op for bit-exact wires (u - w == 0).
+                new_residuals = jax.tree.map(
+                    lambda r, u, w: r + (u - w), new_residuals, uploads,
+                    wired)
             # Non-participants did not really run this round: keep their old
             # residual; participants reset to the post-mask remainder.
             new_residuals = jax.tree.map(
@@ -146,7 +170,8 @@ def cohort_select(sample_key: jax.Array, schedule: SamplingSchedule, t,
 
 
 def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
-                      cfg: FederatedConfig, cohort_size: int):
+                      cfg: FederatedConfig, cohort_size: int, *,
+                      codec=None, aggregator=None):
     """Cohort-engine form of ``make_federated_round``: same signature and
     math, but client_update runs over ``cohort_size`` (static) clients
     instead of ``cfg.num_clients``.  Requires
@@ -155,13 +180,16 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
     if not (0 < cohort_size <= cfg.num_clients):
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+    apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
     def round_fn(params, residuals, client_batches, n_samples, t, key):
         sample_key, mask_key = jax.random.split(key)
         cohort_ids, valid = cohort_select(
             sample_key, schedule, t, cfg.num_clients, cohort_size)
 
-        gather = lambda x: jnp.take(x, cohort_ids, axis=0)
+        def gather(x):
+            return jnp.take(x, cohort_ids, axis=0)
+
         cohort_batches = jax.tree.map(gather, client_batches)
         cohort_res = jax.tree.map(gather, residuals)
         mask_keys = jnp.take(
@@ -171,10 +199,16 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
             loss_fn, params, cohort_batches, mask_keys, cfg.client,
             cohort_res, cfg.error_feedback)
 
+        wired = apply_wire(uploads)
         weights = valid * jnp.take(n_samples, cohort_ids)
-        new_params = fedavg_aggregate(params, uploads, weights,
-                                      cfg.client.upload)
+        new_params = agg_fn(params, wired, weights, cfg.client.upload)
         if cfg.error_feedback:
+            if wired is not uploads:
+                # Same wire-loss feedback as the oracle round (bit-exact
+                # equivalence holds: both engines adjust identically).
+                new_res = jax.tree.map(
+                    lambda r, u, w: r + (u - w), new_res, uploads, wired)
+
             def scatter(old, new, old_cohort):
                 vm = valid.reshape((-1,) + (1,) * (new.ndim - 1))
                 kept = jnp.where(vm > 0, new, old_cohort)
@@ -196,7 +230,8 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
 
 
 def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
-                     cfg: FederatedConfig, cohort_size: int):
+                     cfg: FederatedConfig, cohort_size: int, *,
+                     codec=None, aggregator=None):
     """lax.scan-over-rounds fast path: one dispatch for a whole segment of
     rounds that share a cohort bucket.
 
@@ -208,10 +243,12 @@ def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
     if not (0 < cohort_size <= cfg.num_clients):
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+    kw = dict(codec=codec, aggregator=aggregator)
     if cohort_size == cfg.num_clients:
-        round_fn = make_federated_round(loss_fn, schedule, cfg)
+        round_fn = make_federated_round(loss_fn, schedule, cfg, **kw)
     else:
-        round_fn = make_cohort_round(loss_fn, schedule, cfg, cohort_size)
+        round_fn = make_cohort_round(loss_fn, schedule, cfg, cohort_size,
+                                     **kw)
 
     def scan_fn(params, residuals, client_batches, n_samples, ts, keys):
         def body(carry, tk):

@@ -18,7 +18,7 @@ the masked delta plus bookkeeping for byte accounting.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

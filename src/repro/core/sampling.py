@@ -9,7 +9,6 @@ kept as its own class because it is the paper's baseline (Alg. 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

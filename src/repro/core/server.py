@@ -1,8 +1,19 @@
 """Central-server training loop (paper Alg. 1 / Alg. 3 outer procedure).
 
 ``FederatedServer`` owns the global model, runs R communication rounds,
-meters transport bytes per round (sampling × masking × encoding, see
-``repro.core.compression``), and evaluates on a held-out set.
+meters transport bytes per round, and evaluates on a held-out set.  The
+scenario it runs — sampling schedule, mask policy, wire codec, aggregation
+rule, client hyperparameters — is a single
+:class:`repro.core.strategy.FedStrategy`; construct the server with
+:meth:`FederatedServer.from_strategy` (the legacy ``(loss_fn, schedule,
+cfg, ...)`` kwargs still work behind a ``DeprecationWarning`` shim that
+synthesizes an equivalent strategy).
+
+Transport is metered by the strategy's codec: every client upload is
+round-tripped through the codec's wire format inside the round program, and
+``RoundRecord.transport_bytes`` counts the EXACT serialized bytes of that
+wire pytree (``UploadCodec.wire_bytes``, shape-only via ``eval_shape``) —
+not the ``pytree_payload_bytes`` estimate earlier revisions reported.
 
 Two execution engines (DESIGN.md §3.5):
 
@@ -15,7 +26,8 @@ Two execution engines (DESIGN.md §3.5):
   bit-identical to the legacy path.
 * ``engine="full"``: the original full-population vmap (every registered
   client runs; non-participants are zero-weighted) — kept as the oracle
-  the cohort engine is property-tested against.
+  the cohort engine is property-tested against, under every registry
+  preset (tests/test_strategy.py).
 
 Each distinct (bucket, segment-length) program is AOT-compiled once and
 cached; compile time is recorded on the triggering round's
@@ -30,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -37,9 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client import local_update_flops
-from repro.core.compression import pytree_payload_bytes, pytree_num_params
-from repro.core.federated import (FederatedConfig, make_cohort_round,
-                                  make_cohort_scan, make_federated_round)
+from repro.core.compression import pytree_num_params
+from repro.core.federated import FederatedConfig
 from repro.core.sampling import SamplingSchedule
 
 PyTree = Any
@@ -53,7 +65,7 @@ class RoundRecord:
     num_sampled: int
     mean_loss: float
     transport_units: float      # full-model-upload units this round (Eq. 6 basis)
-    transport_bytes: int        # metered bytes (values + index overhead)
+    transport_bytes: int        # EXACT wire bytes (codec-encoded uploads)
     eval_metric: Optional[float] = None
     wall_s: float = 0.0         # steady-state execution time (compile excluded)
     compile_s: float = 0.0      # program build time; nonzero on bucket-change rounds
@@ -64,14 +76,45 @@ class RoundRecord:
 class FederatedServer:
     """Owns Θ_t; runs rounds; meters communication."""
 
-    def __init__(self, loss_fn: Callable, schedule: SamplingSchedule,
-                 cfg: FederatedConfig, init_params: PyTree,
+    def __init__(self, loss_fn: Callable = None, schedule: SamplingSchedule = None,
+                 cfg: FederatedConfig = None, init_params: PyTree = None,
                  eval_fn: Optional[Callable] = None, seed: int = 0,
-                 engine: str = "cohort", scan_rounds: bool = True):
+                 engine: str = "cohort", scan_rounds: bool = True, *,
+                 strategy=None, num_clients: int = None):
+        """Legacy kwargs constructor — DEPRECATED shim for one release.
+
+        Prefer :meth:`from_strategy`.  The ``(schedule, cfg)`` pair is
+        converted to an equivalent :class:`FedStrategy` (codec derived from
+        the masking config), so both paths run the identical round
+        program.
+        """
+        if strategy is None:
+            if schedule is None or cfg is None:
+                raise TypeError(
+                    "FederatedServer needs either strategy=/num_clients= or "
+                    "the legacy (schedule, cfg) pair")
+            warnings.warn(
+                "FederatedServer(loss_fn, schedule, cfg, ...) is deprecated; "
+                "use FederatedServer.from_strategy(strategy, loss_fn, "
+                "init_params, num_clients, ...) with a repro.core.strategy."
+                "FedStrategy (see strategy.get presets)",
+                DeprecationWarning, stacklevel=2)
+            from repro.core.strategy import FedStrategy
+            strategy = FedStrategy.from_components(
+                "legacy", schedule, cfg.client.masking,
+                local_epochs=cfg.client.local_epochs,
+                learning_rate=cfg.client.learning_rate,
+                momentum=cfg.client.momentum,
+                upload=cfg.client.upload,
+                error_feedback=cfg.error_feedback)
+            num_clients = cfg.num_clients
         if engine not in ("cohort", "full"):
             raise ValueError(f"unknown engine {engine!r}")
-        self.cfg = cfg
-        self.schedule = schedule
+        if num_clients is None:
+            raise TypeError("from_strategy/strategy= requires num_clients")
+        self.strategy = strategy
+        self.cfg = strategy.federated_config(num_clients)
+        self.schedule = strategy.sampling
         self.params = init_params
         self.eval_fn = eval_fn
         self.engine = engine
@@ -80,21 +123,40 @@ class FederatedServer:
         self._key = jax.random.PRNGKey(seed)
         self._compiled: Dict[tuple, Any] = {}   # (bucket, seg_len) -> executable
         self._residuals = jax.tree.map(
-            lambda p: jnp.zeros((cfg.num_clients,) + p.shape, p.dtype),
+            lambda p: jnp.zeros((num_clients,) + p.shape, p.dtype),
             init_params)
         self.history: List[RoundRecord] = []
         self._num_params = pytree_num_params(init_params)
+        # Exact per-client-upload wire bytes: the codec's encode traced
+        # shape-only over a delta template (same avals as params).
+        self.client_upload_bytes = strategy.codec.wire_bytes(init_params)
+
+    @classmethod
+    def from_strategy(cls, strategy, loss_fn: Callable, init_params: PyTree,
+                      num_clients: int, eval_fn: Optional[Callable] = None,
+                      seed: int = 0, engine: str = "cohort",
+                      scan_rounds: bool = True) -> "FederatedServer":
+        """Build a server from one :class:`FedStrategy` — sampling, masking,
+        wire codec, aggregator and client hyperparameters all come from the
+        strategy record (e.g. ``strategy.get("fig5")``)."""
+        return cls(loss_fn, init_params=init_params, eval_fn=eval_fn,
+                   seed=seed, engine=engine, scan_rounds=scan_rounds,
+                   strategy=strategy, num_clients=num_clients)
 
     # ---- engine dispatch -------------------------------------------------
     def _round_program(self, bucket: int, seg_len: int):
-        """Build the (bucket, seg_len) round program (uncompiled)."""
+        """Build the (bucket, seg_len) round program (uncompiled) from the
+        strategy — ``strategy.build_round`` threads the codec and
+        aggregator into every form."""
+        from repro.core.strategy import build_round
+        M = self.cfg.num_clients
         if seg_len > 1:
-            return make_cohort_scan(
-                self._loss_fn, self.schedule, self.cfg, bucket)
-        if bucket >= self.cfg.num_clients:
-            return make_federated_round(self._loss_fn, self.schedule, self.cfg)
-        return make_cohort_round(
-            self._loss_fn, self.schedule, self.cfg, bucket)
+            return build_round(self.strategy, self._loss_fn, M,
+                               form="scan", cohort_size=bucket)
+        if bucket >= M:
+            return build_round(self.strategy, self._loss_fn, M, form="full")
+        return build_round(self.strategy, self._loss_fn, M,
+                           form="cohort", cohort_size=bucket)
 
     def _get_compiled(self, bucket: int, seg_len: int, args):
         """AOT-compile (once) the program for this bucket/segment shape.
@@ -138,9 +200,7 @@ class FederatedServer:
             eval_data: Any = None) -> List[RoundRecord]:
         gamma = self.cfg.client.masking.gamma \
             if self.cfg.client.masking.mode != "none" else 1.0
-        stats = pytree_payload_bytes(
-            self.params, gamma, self.cfg.client.masking.min_leaf_size)
-        self._compression = stats        # per-encoding byte split for summary()
+        wire_bytes = self.client_upload_bytes
         n_samples = jnp.asarray(n_samples, jnp.float32)
         flops_per_client = local_update_flops(
             client_batches, self._num_params, self.cfg.client)
@@ -179,7 +239,7 @@ class FederatedServer:
                     num_sampled=int(m),
                     mean_loss=float(mean_loss[i]),
                     transport_units=m * gamma,
-                    transport_bytes=int(m) * stats.sparse_bytes,
+                    transport_bytes=int(m) * wire_bytes,
                     wall_s=wall / seg_len,
                     compile_s=compile_s if i == 0 else 0.0,
                     cohort_size=bucket,
@@ -199,21 +259,19 @@ class FederatedServer:
 
     def summary(self) -> Dict[str, Any]:
         evals = [r.eval_metric for r in self.history if r.eval_metric is not None]
-        out = {
+        return {
             "rounds": len(self.history),
             "final_loss": self.history[-1].mean_loss if self.history else float("nan"),
             "final_eval": evals[-1] if evals else float("nan"),
             "transport_units": self.total_transport_units(),
+            "transport_bytes": self.total_transport_bytes(),
             "transport_GB": self.total_transport_bytes() / 1e9,
             "num_params": self._num_params,
             "engine": self.engine,
+            "strategy": self.strategy.name,
+            # wire accounting now comes from the codec, not an estimate
+            "codec": self.strategy.codec.name,
+            "client_upload_bytes": self.client_upload_bytes,
             "compile_s": float(sum(r.compile_s for r in self.history)),
             "steady_wall_s": float(sum(r.wall_s for r in self.history)),
         }
-        stats = getattr(self, "_compression", None)
-        if stats is not None:
-            # Mixed bitmap/coordinate/dense uploads: report the exact split
-            # (bytes per model upload per encoding), not just the last leaf's.
-            out["upload_encoding"] = stats.encoding
-            out["upload_encoding_bytes"] = dict(stats.encoding_bytes)
-        return out

@@ -1,0 +1,341 @@
+"""Composable federated strategies: sampling × masking × codec × aggregation.
+
+A *scenario* used to be threaded through five call sites as loose kwargs
+(``make_federated_round(loss_fn, schedule, masking_cfg, use_kernel, ...)``,
+``FederatedServer.__init__`` re-took the same set, ``FedPodConfig``
+duplicated it again).  A :class:`FedStrategy` makes the scenario *data*:
+one frozen record composing four pluggable policies —
+
+* ``sampling``    — a :class:`repro.core.sampling.SamplingSchedule`
+  (static / dynamic c(t));
+* ``masking``     — a :class:`MaskPolicy` (none / random / selective top-k,
+  jnp-bisection or segmented-Pallas-kernel backend);
+* ``codec``       — a :class:`repro.core.codecs.UploadCodec` (identity /
+  sparse COO / int8 / chained), the REAL encode → wire → decode transform
+  the round applies to every client upload, with exact ``wire_bytes()``;
+* ``aggregator``  — an :class:`Aggregator` (weighted fedavg now; clipped
+  fedavg as the first registry alternative, trimmed-mean et al. slot in
+  the same way).
+
+plus the client-side hyperparameters (local epochs, lr, momentum, upload
+semantics, error feedback).  ``build_round`` turns a strategy into the
+oracle / cohort / scan round program; ``FederatedServer.from_strategy``
+runs it end-to-end.  The string registry (``register`` / ``get``) holds the
+paper presets — ``"fig3"``, ``"fig4"``, ``"fig5"``, ``"dense-baseline"``
+(plus ``"fig5-int8"`` for the chained wire) — so a new scenario is a
+registry entry, not a plumbing change.
+
+Every preset preserves the cohort-vs-oracle bit-exactness guarantee of
+DESIGN.md §3.5 (property-tested per preset in tests/test_strategy.py): the
+codec round-trip is deterministic per upload, so running only the sampled
+cohort still reproduces the full-population oracle to the bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import ClientConfig
+from repro.core.codecs import (ChainCodec, IdentityCodec, Int8Codec,
+                               SparseCodec, UploadCodec)
+from repro.core.federated import (FederatedConfig, fedavg_aggregate,
+                                  make_cohort_round, make_cohort_scan,
+                                  make_federated_round)
+from repro.core.masking import MaskingConfig
+from repro.core.sampling import DynamicSampling, SamplingSchedule, StaticSampling
+
+PyTree = Any
+
+__all__ = [
+    "MaskPolicy",
+    "Aggregator",
+    "FEDAVG",
+    "clipped_fedavg",
+    "FedStrategy",
+    "default_codec",
+    "build_round",
+    "register",
+    "get",
+    "names",
+]
+
+
+# ---------------------------------------------------------------------------
+# mask policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MaskPolicy:
+    """Which entries of the client delta survive the upload.
+
+    ``backend`` selects the selective-top-k implementation: ``"jnp"`` is
+    the pure threshold-bisection path (DESIGN.md §3.1), ``"kernel"`` routes
+    the whole pytree through the segmented Pallas subsystem (§3.4).
+    """
+
+    mode: str = "none"          # none | random | selective
+    gamma: float = 1.0          # fraction KEPT (paper's masking rate)
+    backend: str = "jnp"        # jnp | kernel
+    min_leaf_size: int = 256
+    bisect_iters: int = 24
+
+    def __post_init__(self):
+        if self.mode not in ("none", "random", "selective"):
+            raise ValueError(f"unknown masking mode {self.mode!r}")
+        if self.backend not in ("jnp", "kernel"):
+            raise ValueError(f"unknown masking backend {self.backend!r}")
+        if not 0.0 < self.gamma <= 1.0:
+            raise ValueError(f"gamma must be in (0, 1], got {self.gamma}")
+
+    @classmethod
+    def none(cls) -> "MaskPolicy":
+        return cls()
+
+    @classmethod
+    def random(cls, gamma: float, **kw) -> "MaskPolicy":
+        return cls(mode="random", gamma=gamma, **kw)
+
+    @classmethod
+    def selective(cls, gamma: float, backend: str = "jnp", **kw) -> "MaskPolicy":
+        return cls(mode="selective", gamma=gamma, backend=backend, **kw)
+
+    @classmethod
+    def from_masking_config(cls, cfg: MaskingConfig) -> "MaskPolicy":
+        return cls(mode=cfg.mode, gamma=cfg.gamma,
+                   backend="kernel" if cfg.use_kernel else "jnp",
+                   min_leaf_size=cfg.min_leaf_size,
+                   bisect_iters=cfg.bisect_iters)
+
+    def masking_config(self) -> MaskingConfig:
+        return MaskingConfig(gamma=self.gamma, mode=self.mode,
+                             min_leaf_size=self.min_leaf_size,
+                             bisect_iters=self.bisect_iters,
+                             use_kernel=self.backend == "kernel")
+
+
+# ---------------------------------------------------------------------------
+# aggregators
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """Server-side combination rule over stacked client uploads.
+
+    ``fn(global_params, uploads, weights, upload_semantics) -> params`` with
+    a leading client axis on every ``uploads`` leaf.  Must treat
+    zero-weight rows as absent (the cohort/oracle equivalence relies on the
+    oracle's extra zero-weight clients being no-ops).
+    """
+
+    name: str
+    fn: Callable[[PyTree, PyTree, jnp.ndarray, str], PyTree]
+
+
+FEDAVG = Aggregator("fedavg", fedavg_aggregate)
+
+
+def clipped_fedavg(max_norm: float) -> Aggregator:
+    """FedAvg over per-client norm-clipped uploads (robustness knob).
+
+    Zero uploads stay zero after clipping, so the cohort-vs-oracle
+    bit-exactness guarantee survives: the oracle's zero-weight rows clip to
+    themselves and then drop out of the weighted sum exactly as before.
+    """
+
+    def agg(global_params, uploads, weights, upload_semantics):
+        sq = sum(jnp.sum(jnp.square(u), axis=tuple(range(1, u.ndim)))
+                 for u in jax.tree_util.tree_leaves(uploads))
+        norm = jnp.sqrt(sq)
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        clipped = jax.tree_util.tree_map(
+            lambda u: u * factor.reshape((-1,) + (1,) * (u.ndim - 1)),
+            uploads)
+        return fedavg_aggregate(global_params, clipped, weights,
+                                upload_semantics)
+
+    return Aggregator(f"clipped_fedavg({max_norm})", agg)
+
+
+_AGGREGATORS: Dict[str, Callable[..., Aggregator]] = {
+    "fedavg": lambda: FEDAVG,
+    "clipped_fedavg": clipped_fedavg,
+}
+
+
+# ---------------------------------------------------------------------------
+# the strategy record
+# ---------------------------------------------------------------------------
+def default_codec(masking: MaskPolicy, quantized: bool = False) -> UploadCodec:
+    """The wire format a mask policy implies: dense uploads ship identity,
+    masked uploads ship sparse COO sized to gamma; ``quantized`` chains
+    int8 on the value payload."""
+    if masking.mode == "none" or masking.gamma >= 1.0:
+        base: UploadCodec = IdentityCodec()
+    else:
+        base = SparseCodec(gamma=masking.gamma,
+                           min_leaf_size=masking.min_leaf_size)
+    if quantized:
+        return ChainCodec((base, Int8Codec()))
+    return base
+
+
+@dataclasses.dataclass(frozen=True)
+class FedStrategy:
+    """One federated-learning scenario as data (see module docstring)."""
+
+    name: str
+    sampling: SamplingSchedule
+    masking: MaskPolicy = MaskPolicy()
+    codec: UploadCodec = IdentityCodec()
+    aggregator: Aggregator = FEDAVG
+    local_epochs: int = 1
+    learning_rate: float = 0.05
+    momentum: float = 0.0
+    upload: str = "delta"       # delta | zero (Alg. 4 literal)
+    error_feedback: bool = False
+
+    # ---- derived configs -------------------------------------------------
+    def client_config(self) -> ClientConfig:
+        return ClientConfig(local_epochs=self.local_epochs,
+                            learning_rate=self.learning_rate,
+                            momentum=self.momentum,
+                            masking=self.masking.masking_config(),
+                            upload=self.upload)
+
+    def federated_config(self, num_clients: int) -> FederatedConfig:
+        return FederatedConfig(num_clients=num_clients,
+                               client=self.client_config(),
+                               error_feedback=self.error_feedback)
+
+    # ---- functional updates ---------------------------------------------
+    def replace(self, **overrides) -> "FedStrategy":
+        return dataclasses.replace(self, **overrides)
+
+    def with_masking(self, masking: MaskPolicy, **overrides) -> "FedStrategy":
+        """Replace the mask policy AND re-derive a consistent codec (COO
+        slot counts track gamma), preserving int8 chaining if the current
+        codec quantises.  Pass ``codec=`` explicitly to opt out."""
+        if "codec" not in overrides:
+            quantized = _quantizes(self.codec)
+            overrides["codec"] = default_codec(masking, quantized=quantized)
+        return dataclasses.replace(self, masking=masking, **overrides)
+
+    @classmethod
+    def from_components(cls, name: str, sampling: SamplingSchedule,
+                        masking: MaskingConfig | MaskPolicy | None = None,
+                        **overrides) -> "FedStrategy":
+        """Build a strategy from the legacy (schedule, MaskingConfig) pair,
+        deriving the matching codec — the shim behind the deprecated
+        ``FederatedServer`` kwargs path and the benchmark helpers."""
+        if masking is None:
+            masking = MaskPolicy.none()
+        elif isinstance(masking, MaskingConfig):
+            masking = MaskPolicy.from_masking_config(masking)
+        if "codec" not in overrides:
+            overrides["codec"] = default_codec(masking)
+        return cls(name=name, sampling=sampling, masking=masking, **overrides)
+
+
+def _quantizes(codec: UploadCodec) -> bool:
+    if isinstance(codec, Int8Codec):
+        return True
+    if isinstance(codec, ChainCodec):
+        return any(_quantizes(s) for s in codec.stages)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# round construction: one object -> the engine
+# ---------------------------------------------------------------------------
+def build_round(strategy: FedStrategy, loss_fn: Callable, num_clients: int,
+                form: str = "full", cohort_size: int | None = None):
+    """Build the round program a strategy describes.
+
+    ``form``: ``"full"`` — the all-clients vmap oracle; ``"cohort"`` — the
+    bucketed cohort engine (requires ``cohort_size``); ``"scan"`` — the
+    lax.scan-over-rounds fast path (requires ``cohort_size``; a
+    ``cohort_size == num_clients`` scan wraps the oracle).  The strategy's
+    codec and aggregator are threaded into the round body, so every form
+    runs the same math.
+    """
+    if form not in ("full", "cohort", "scan"):
+        raise ValueError(f"unknown round form {form!r}")
+    cfg = strategy.federated_config(num_clients)
+    kw = dict(codec=strategy.codec, aggregator=strategy.aggregator)
+    if form == "full":
+        return make_federated_round(loss_fn, strategy.sampling, cfg, **kw)
+    if cohort_size is None:
+        raise ValueError(f"form={form!r} requires cohort_size")
+    if form == "cohort":
+        return make_cohort_round(loss_fn, strategy.sampling, cfg,
+                                 cohort_size, **kw)
+    return make_cohort_scan(loss_fn, strategy.sampling, cfg,
+                            cohort_size, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, FedStrategy] = {}
+
+
+def register(strategy: FedStrategy, overwrite: bool = False) -> FedStrategy:
+    if not overwrite and strategy.name in _REGISTRY:
+        raise ValueError(f"strategy {strategy.name!r} already registered")
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str, **overrides) -> FedStrategy:
+    """Fetch a registered strategy, optionally specialized via field
+    overrides.  Overriding ``masking`` without an explicit ``codec``
+    re-derives the codec so COO slot counts stay consistent with gamma."""
+    try:
+        base = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; registered: {', '.join(names())}"
+        ) from None
+    if "masking" in overrides and "codec" not in overrides:
+        masking = overrides.pop("masking")
+        return base.with_masking(masking, **overrides)
+    if overrides:
+        return dataclasses.replace(base, **overrides)
+    return base
+
+
+# ---- paper presets --------------------------------------------------------
+# "dense-baseline": Alg. 1 — full participation, dense uploads.
+register(FedStrategy(
+    name="dense-baseline",
+    sampling=StaticSampling(initial_rate=1.0, min_clients=2)))
+
+# "fig3": dynamic sampling alone (Alg. 3, beta = 0.1), dense uploads.
+register(FedStrategy(
+    name="fig3",
+    sampling=DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2)))
+
+# "fig4": selective masking alone (Alg. 4) at the paper's gamma = 0.1,
+# sparse COO wire.
+register(FedStrategy.from_components(
+    "fig4", StaticSampling(initial_rate=1.0, min_clients=2),
+    MaskPolicy.selective(0.1)))
+
+# "fig5": both levers combined (Alg. 3 + Alg. 4) at the Fig. 5 operating
+# point (beta = 0.1, gamma = 0.5), sparse COO wire.
+register(FedStrategy.from_components(
+    "fig5", DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2),
+    MaskPolicy.selective(0.5)))
+
+# "fig5-int8": beyond-paper — fig5 with the COO value payload int8-quantised
+# (4 -> 1 bytes/kept value on the wire; lossy, error <= scale/2 per entry).
+register(get("fig5").with_masking(
+    MaskPolicy.selective(0.5),
+    codec=ChainCodec((SparseCodec(gamma=0.5), Int8Codec())),
+    name="fig5-int8"))

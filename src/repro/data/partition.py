@@ -55,7 +55,8 @@ def noniid_partition_images(x: np.ndarray, y: np.ndarray, num_clients: int,
         cx = np.concatenate([x[i * shard_size:(i + 1) * shard_size] for i in ids])
         cy = np.concatenate([y[i * shard_size:(i + 1) * shard_size] for i in ids])
         perm = rng.permutation(cx.shape[0])
-        xs.append(cx[perm]); ys.append(cy[perm])
+        xs.append(cx[perm])
+        ys.append(cy[perm])
     x = np.stack(xs).reshape((-1,) + x.shape[1:])
     y = np.stack(ys).reshape(-1)
     return _batch_clients(x, y, num_clients, batch_size)

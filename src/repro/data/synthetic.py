@@ -17,8 +17,6 @@ All generators are deterministic in ``seed``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
-
 import numpy as np
 
 __all__ = ["ImageDataset", "TextDataset", "class_gaussian_images", "markov_text"]
@@ -97,7 +95,7 @@ def markov_text(num_train: int = 200_000, num_test: int = 20_000,
     def gen(n):
         toks = np.empty(n, np.int32)
         toks[0], toks[1] = rng.integers(0, vocab_size, size=2)
-        ctxs = rng.integers(0, num_ctx)  # unused warm start
+        _ = rng.integers(0, num_ctx)  # RNG warm start (stream stability)
         choices = rng.choice(branching, size=n, p=probs)
         for i in range(2, n):
             ctx = (toks[i - 2] * 31 + toks[i - 1] * 7) % num_ctx

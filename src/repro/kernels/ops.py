@@ -149,7 +149,8 @@ def topk_mask_pytree(tree: PyTree, gamma: float, *,
     """
     interpret = _auto_interpret(interpret)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    mask_idx = [i for i, l in enumerate(leaves) if l.size >= min_leaf_size]
+    mask_idx = [i for i, leaf in enumerate(leaves)
+                if leaf.size >= min_leaf_size]
     if gamma >= 1.0 or not mask_idx:
         return tree
 

@@ -85,7 +85,7 @@ class PackSpec:
         return out
 
     def sizes(self) -> np.ndarray:
-        return np.asarray([l.size for l in self.leaves], np.int32)
+        return np.asarray([leaf.size for leaf in self.leaves], np.int32)
 
 
 def build_pack_spec(leaves: Sequence[jax.Array]) -> PackSpec:

@@ -23,7 +23,6 @@ tests/test_kernels.py.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

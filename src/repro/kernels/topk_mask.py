@@ -15,7 +15,6 @@ interpret mode preserves the semantics on CPU).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

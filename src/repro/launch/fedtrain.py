@@ -25,13 +25,13 @@ computed on the host from the schedule — shapes stay static.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, InputShape
-from repro.core.masking import MaskingConfig
+from repro.core.codecs import roundtrip_stacked, with_axis0_slices
 from repro.launch import shardings as sh
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tr
@@ -41,6 +41,11 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class FedPodConfig:
+    """Pod-round configuration.  Prefer :meth:`from_strategy` — one
+    ``repro.core.strategy.FedStrategy`` supplies masking, codec, and client
+    hyperparameters; the loose kwargs remain for scripts that predate the
+    strategy API."""
+
     num_clients: int
     local_steps: int = 2          # local SGD steps per round (E epochs)
     learning_rate: float = 0.01
@@ -53,6 +58,27 @@ class FedPodConfig:
     # instead of O(L * iters) — off by default because the pure-jnp bisection
     # below is what the SPMD partitioner auto-shards over "model".
     use_kernel: bool = False
+    # Wire codec (repro.core.codecs.UploadCodec): every client's masked
+    # delta is round-tripped through its encode -> wire pytree -> decode
+    # INSIDE the shard, so what enters the cross-client psum is exactly
+    # what survived the wire.  None = dense (identity) upload.
+    codec: Any = None
+
+    @classmethod
+    def from_strategy(cls, strategy, num_clients: int,
+                      local_steps: int = 2) -> "FedPodConfig":
+        """Collapse a FedStrategy onto the pod round: mask policy, codec and
+        learning rate come from the strategy record.  Sparse codec stages
+        are re-budgeted to the pod masks' per-first-axis-slice top-k
+        granularity (``with_axis0_slices``) so the wire never truncates a
+        within-budget upload."""
+        mp = strategy.masking
+        return cls(num_clients=num_clients, local_steps=local_steps,
+                   learning_rate=strategy.learning_rate, gamma=mp.gamma,
+                   masking=mp.mode, bisect_iters=mp.bisect_iters,
+                   min_leaf_size=mp.min_leaf_size,
+                   use_kernel=mp.backend == "kernel",
+                   codec=with_axis0_slices(strategy.codec))
 
 
 def _threshold_mask(delta: jax.Array, gamma: float, iters: int) -> jax.Array:
@@ -81,8 +107,22 @@ def _threshold_mask(delta: jax.Array, gamma: float, iters: int) -> jax.Array:
 
 
 def _random_mask(key: jax.Array, delta: jax.Array, gamma: float) -> jax.Array:
-    keep = (jax.random.uniform(key, delta.shape) < gamma).astype(delta.dtype)
-    return delta * keep
+    """Exact-count random mask per last-dims block, matching
+    ``_threshold_mask``'s granularity (per first-axis slice for stacked
+    leaves).  Exact counts — not Bernoulli — so every upload fits the
+    sparse wire's ``max(1, round(gamma * slice))`` slot budget instead of
+    overflowing it on roughly half the draws."""
+    lead = delta.shape[:2] if delta.ndim > 2 else delta.shape[:1]
+    flat = delta.reshape(lead + (-1,))
+    n = flat.shape[-1]
+    k = max(1, int(round(gamma * n)))
+    scores = jax.random.uniform(key, flat.shape).reshape(-1, n)
+    # Single top_k pass per slice (as in core.masking.random_mask), not a
+    # double-argsort ranking.
+    _, idx = jax.lax.top_k(-scores, k)
+    rows = jnp.arange(scores.shape[0])[:, None]
+    keep = jnp.zeros(scores.shape, delta.dtype).at[rows, idx].set(1)
+    return (flat * keep.reshape(flat.shape)).reshape(delta.shape)
 
 
 def mask_deltas(key: jax.Array, deltas: PyTree, cfg: FedPodConfig) -> PyTree:
@@ -190,6 +230,9 @@ def make_fed_round(arch: ArchConfig, cfg: FedPodConfig, hints=None) -> Callable:
         deltas, losses = jax.vmap(
             lambda b: local_update(params, b))(batches)
         masked = mask_deltas(key, deltas, cfg)
+        # Each client's upload crosses the wire: encode -> wire pytree ->
+        # decode through the strategy codec before the weighted reduction.
+        masked = roundtrip_stacked(cfg.codec, masked)
         w = participation * n_samples
         w = w / jnp.maximum(jnp.sum(w), 1e-12)
         agg = _weighted_upload(w, masked)
@@ -251,11 +294,15 @@ def make_cohort_fed_round(arch: ArchConfig, cfg: FedPodConfig,
              check_rep=False)
     def cohort_shard(params, cohort_batches, w_shard, valid_shard, key):
         # Each shard: its slice of the cohort end-to-end — local SGD, mask,
-        # weighted partial aggregation — then ONE f32 psum of model size.
+        # codec wire round-trip, weighted partial aggregation — then ONE
+        # f32 psum of model size.  The codec runs per client INSIDE the
+        # shard_map body, so the bytes each client ships are exactly the
+        # wire pytree the strategy meters.
         deltas, losses = jax.vmap(
             lambda b: local_update(params, b))(cohort_batches)
         shard_key = jax.random.fold_in(key, jax.lax.axis_index(client_axis))
         masked = mask_deltas(shard_key, deltas, cfg)
+        masked = roundtrip_stacked(cfg.codec, masked)
         agg = jax.lax.psum(_weighted_upload(w_shard, masked), client_axis)
         loss_sum = jax.lax.psum(jnp.sum(losses * valid_shard), client_axis)
         valid_sum = jax.lax.psum(jnp.sum(valid_shard), client_axis)
@@ -302,8 +349,8 @@ def lower_fed_round(arch: ArchConfig, shape: InputShape, mesh):
     silo_chips = mesh.devices.size // C
     pc = steps_lib.params_specs(arch, "float32")
     import numpy as np
-    n_params = sum(int(np.prod(l.shape))
-                   for l in jax.tree_util.tree_leaves(pc))
+    n_params = sum(int(np.prod(leaf.shape))
+                   for leaf in jax.tree_util.tree_leaves(pc))
     dtype = "float32" if 4 * n_params / silo_chips < 6e9 else "bfloat16"
 
     pspecs = steps_lib.params_specs(arch, dtype)
@@ -325,7 +372,7 @@ def lower_fed_round(arch: ArchConfig, shape: InputShape, mesh):
              arch.d_model), jnp.bfloat16)
 
     bsh = jax.tree.map(
-        lambda l: NamedSharding(mesh, P(client_axis)), batches)
+        lambda leaf: NamedSharding(mesh, P(client_axis)), batches)
     vec_sh = NamedSharding(mesh, P())
     n_samples = jax.ShapeDtypeStruct((C,), jnp.float32)
     participation = jax.ShapeDtypeStruct((C,), jnp.float32)

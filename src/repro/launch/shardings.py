@@ -20,7 +20,7 @@ Strategy (DESIGN.md §5):
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np

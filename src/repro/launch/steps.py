@@ -7,8 +7,7 @@ decode shapes) — weak-type-correct, shardable, no device allocation.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

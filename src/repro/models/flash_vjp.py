@@ -16,8 +16,6 @@ the naive oracle in tests/test_models.py.
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -84,7 +82,7 @@ def _flash_fwd(q, k, v, attn, window, softcap_val, scale, q_offset,
         qb, q_pos = qblk
 
         def kv_body(carry, kvblk):
-            acc, m, l = carry
+            acc, m, lsum = carry
             kb, vb, k_pos = kvblk
             kb = jnp.repeat(kb, groups, axis=1)    # (B,H,bk,D)
             vb = jnp.repeat(vb, groups, axis=1)
@@ -97,7 +95,7 @@ def _flash_fwd(q, k, v, attn, window, softcap_val, scale, q_offset,
             m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
             p = jnp.exp(logits - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + jnp.sum(p, axis=-1)
+            l_new = lsum * alpha + jnp.sum(p, axis=-1)
             acc_new = acc * alpha[..., None] + jnp.einsum(
                 "bhtk,bhkd->bhtd", p.astype(vb.dtype), vb,
                 preferred_element_type=jnp.float32)
@@ -106,9 +104,9 @@ def _flash_fwd(q, k, v, attn, window, softcap_val, scale, q_offset,
         acc0 = jnp.zeros((B, H, block_q, D), jnp.float32)
         m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, H, block_q), jnp.float32)
-        (acc, m, l), _ = jax.lax.scan(kv_body, (acc0, m0, l0),
-                                      (kb_all, vb_all, k_pos_all))
-        l_safe = jnp.maximum(l, 1e-30)
+        (acc, m, lsum), _ = jax.lax.scan(kv_body, (acc0, m0, l0),
+                                         (kb_all, vb_all, k_pos_all))
+        l_safe = jnp.maximum(lsum, 1e-30)
         out_b = acc / l_safe[..., None]
         lse_b = m + jnp.log(l_safe)                # (B,H,bq)
         return None, (out_b, lse_b)

@@ -15,7 +15,6 @@ into a single wide FFN.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
 import jax

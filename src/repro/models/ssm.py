@@ -41,7 +41,6 @@ def init_ssm_params(key, d_model: int, d_inner: int, state: int, dtype) -> dict:
 
 def _selective_terms(params, xz):
     """Shared by scan/step: returns (x, z, a (decay), bx (input), C)."""
-    d_inner = params["d_skip"].shape[0]
     state = params["log_a"].shape[1]
     f32 = jnp.float32
     x, z = jnp.split(xz, 2, axis=-1)                    # (..., d_inner) each

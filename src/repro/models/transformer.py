@@ -18,8 +18,6 @@ Structure
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -122,8 +120,8 @@ def init_params(key: jax.Array, cfg: ArchConfig,
 
 def param_count(params: PyTree) -> int:
     import numpy as np
-    return int(sum(np.prod(l.shape)
-                   for l in jax.tree_util.tree_leaves(params)))
+    return int(sum(np.prod(leaf.shape)
+                   for leaf in jax.tree_util.tree_leaves(params)))
 
 
 # ===========================================================================
@@ -143,7 +141,6 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x: jax.Array,
     """Returns (x, new_recur_state, aux_loss)."""
     from repro.models.hints import apply_seq, apply_grad_bf16
     aux = jnp.zeros((), jnp.float32)
-    B = x.shape[0]
     # Megatron-style sequence parallelism between blocks: the residual
     # stream (and thus the per-group remat checkpoint) is T-sharded over
     # "model"; attention/MLP re-shard internally as needed.
@@ -286,10 +283,10 @@ def forward(params: PyTree, cfg: ArchConfig, tokens: jax.Array,
         # checkpoint every `span` groups: reshape the stacked leaves from
         # (G, ...) to (G/span, span, ...); the body loops the span inline.
         layers = jax.tree.map(
-            lambda l: l.reshape((l.shape[0] // span, span) + l.shape[1:]),
+            lambda x: x.reshape((x.shape[0] // span, span) + x.shape[1:]),
             layers)
         recur0 = jax.tree.map(
-            lambda l: l.reshape((l.shape[0] // span, span) + l.shape[1:]),
+            lambda x: x.reshape((x.shape[0] // span, span) + x.shape[1:]),
             recur0)
 
     def group_body(carry, xs):
@@ -298,9 +295,9 @@ def forward(params: PyTree, cfg: ArchConfig, tokens: jax.Array,
         for s_idx in range(span):
             for p_idx, spec in enumerate(pattern):
                 lp = layer_ps[p_idx] if span == 1 else \
-                    jax.tree.map(lambda l: l[s_idx], layer_ps[p_idx])
+                    jax.tree.map(lambda x: x[s_idx], layer_ps[p_idx])
                 rc = recur[p_idx] if span == 1 else \
-                    jax.tree.map(lambda l: l[s_idx], recur[p_idx])
+                    jax.tree.map(lambda x: x[s_idx], recur[p_idx])
                 x, _, a = _apply_layer(cfg, spec, lp, x,
                                        positions, rc, cdt, hints)
                 aux = aux + a
@@ -482,8 +479,8 @@ def decode_step(params: PyTree, cfg: ArchConfig, state: DecodeState,
     caches = list(state.caches)
     for gi in range(cfg.num_groups):
         for p_idx, spec in enumerate(pattern):
-            p_g = jax.tree.map(lambda l: l[gi], params["layers"][p_idx])
-            c_g = jax.tree.map(lambda l: l[gi], caches[p_idx])
+            p_g = jax.tree.map(lambda x: x[gi], params["layers"][p_idx])
+            c_g = jax.tree.map(lambda x: x[gi], caches[p_idx])
             x, nc = _decode_layer(cfg, spec, p_g, x, c_g, pos, cdt, hints)
             caches[p_idx] = jax.tree.map(
                 lambda buf, new: buf.at[gi].set(new), caches[p_idx], nc)

@@ -8,8 +8,7 @@ training driver defaults to AdamW.  Interface mirrors optax:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -97,8 +96,8 @@ def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
 
 def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
     leaves = jax.tree_util.tree_leaves(grads)
-    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                         for l in leaves))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                         for leaf in leaves))
     scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
     return jax.tree.map(lambda g: g * scale, grads), gnorm
 

@@ -3,7 +3,6 @@ each assigned family runs one train step and one decode step on CPU, with
 shape and finiteness assertions.  Full configs are exercised only via the
 dry-run."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,257 @@
+"""Wire-codec layer (repro.core.codecs) properties.
+
+Contract (DESIGN.md §4): identity and sparse COO round-trip BIT-exact on
+masked uploads; int8 round-trip error is bounded by half a quantisation
+step (scale/2 with scale = max|x|/127); ``wire_bytes()`` equals the actual
+serialized nbytes of the encoded wire pytree; and the server's
+``summary()["transport_bytes"]`` comes from the codec, not from the old
+``pytree_payload_bytes`` estimate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+
+from repro.core.codecs import (ChainCodec, IdentityCodec, Int8Codec,
+                               SparseCodec, roundtrip_stacked,
+                               tree_wire_nbytes)
+from repro.core.compression import (decode_sparse, dequantize_int8,
+                                    encode_sparse, quantize_int8)
+from repro.core.masking import random_mask, selective_mask_threshold
+
+
+def _tree(key, shapes, dtype=jnp.float32):
+    keys = jax.random.split(key, len(shapes))
+    return {f"leaf{i}": jax.random.normal(k, s, dtype)
+            for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+def _masked_tree(key, shapes, gamma, min_leaf_size, mode="selective"):
+    tree = _tree(key, shapes)
+
+    def mask(k, leaf):
+        if leaf.size < min_leaf_size:
+            return leaf
+        if mode == "random":
+            return random_mask(k, leaf, gamma)
+        return selective_mask_threshold(leaf, gamma)
+
+    keys = jax.random.split(key, len(tree))
+    return {name: mask(k, leaf)
+            for k, (name, leaf) in zip(keys, tree.items())}
+
+
+def _assert_bit_exact(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# round-trip properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_identity_roundtrip_bit_exact(seed):
+    tree = _tree(jax.random.PRNGKey(seed), [(17, 31), (300,), (5,)])
+    codec = IdentityCodec()
+    _assert_bit_exact(tree, codec.roundtrip(tree))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=1000),
+       st.floats(min_value=0.05, max_value=0.9),
+       st.sampled_from(["selective", "random"]))
+def test_sparse_roundtrip_bit_exact_on_masked(seed, gamma, mode):
+    """Sparse COO is bit-exact whenever the tensor has at most
+    k = round(gamma * n) nonzeros — which the masks guarantee."""
+    shapes = [(40, 40), (513,), (64,), (3, 5, 41)]
+    masked = _masked_tree(jax.random.PRNGKey(seed), shapes, gamma,
+                          min_leaf_size=256, mode=mode)
+    codec = SparseCodec(gamma=gamma, min_leaf_size=256)
+    _assert_bit_exact(masked, codec.roundtrip(masked))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_int8_roundtrip_error_bounded(seed):
+    """|x - dequant(quant(x))| <= scale/2 per entry (scale = max|x|/127),
+    and exact zeros stay exactly zero."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (37, 53))
+    x = x * (jax.random.uniform(jax.random.PRNGKey(seed + 1), x.shape) > 0.5)
+    payload = quantize_int8(x)
+    back = dequantize_int8(payload)
+    scale = float(payload["scale"])
+    assert float(jnp.max(jnp.abs(back - x))) <= 0.5 * scale + 1e-7
+    # exact zeros stay exactly zero (sparsity structure survives)
+    assert np.all(np.asarray(back)[np.asarray(x) == 0] == 0)
+
+
+def test_chain_sparse_int8_roundtrip():
+    """Chained wire: COO first, then int8 on the surviving values — support
+    is preserved exactly, values within half a quantisation step."""
+    gamma = 0.2
+    masked = _masked_tree(jax.random.PRNGKey(7), [(64, 64), (40,)], gamma,
+                          min_leaf_size=256)
+    codec = ChainCodec((SparseCodec(gamma=gamma, min_leaf_size=256),
+                        Int8Codec()))
+    back = codec.roundtrip(masked)
+    for a, b in zip(jax.tree_util.tree_leaves(masked),
+                    jax.tree_util.tree_leaves(back)):
+        a, b = np.asarray(a), np.asarray(b)
+        # decode only scatters encoded slots: dropped entries stay zero
+        assert (b[a == 0] == 0).all()
+        scale = np.abs(a).max() / 127.0
+        assert np.abs(a - b).max() <= 0.5 * scale + 1e-7
+
+
+def test_roundtrip_stacked_restores_dtype():
+    stacked = {"w": jnp.ones((3, 300), jnp.bfloat16) *
+               jnp.arange(3, dtype=jnp.bfloat16)[:, None]}
+    codec = ChainCodec((SparseCodec(gamma=1.0), Int8Codec()))
+    out = roundtrip_stacked(codec, stacked)
+    assert out["w"].dtype == jnp.bfloat16
+    # identity/None short-circuit: the SAME object comes back
+    assert roundtrip_stacked(None, stacked) is stacked
+    assert roundtrip_stacked(IdentityCodec(), stacked) is stacked
+
+
+# ---------------------------------------------------------------------------
+# exact wire bytes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", [
+    IdentityCodec(),
+    SparseCodec(gamma=0.1, min_leaf_size=256),
+    SparseCodec(gamma=0.5, min_leaf_size=64),
+    Int8Codec(),
+    ChainCodec((SparseCodec(gamma=0.25, min_leaf_size=256), Int8Codec())),
+])
+def test_wire_bytes_matches_serialized_nbytes(codec):
+    """wire_bytes() (shape-only eval_shape trace) == the summed nbytes of
+    the actually-encoded wire leaves."""
+    tree = _tree(jax.random.PRNGKey(0), [(100, 30), (1000,), (10,)])
+    wire = codec.encode(tree)
+    actual = sum(np.asarray(leaf).nbytes
+                 for leaf in jax.tree_util.tree_leaves(wire))
+    assert codec.wire_bytes(tree) == actual == tree_wire_nbytes(wire)
+
+
+def test_sparse_wire_bytes_formula():
+    """COO leaf = k int32 indices + k values + int32 shape vector."""
+    n, gamma = 1000, 0.1
+    k = round(gamma * n)
+    tree = {"w": jnp.zeros((n,)), "b": jnp.zeros((10,))}
+    codec = SparseCodec(gamma=gamma, min_leaf_size=256)
+    expected = (k * 4 + k * 4 + 1 * 4) + 10 * 4   # big leaf COO + small dense
+    assert codec.wire_bytes(tree) == expected
+
+
+# ---------------------------------------------------------------------------
+# overflow behavior: magnitude-ranked slots, pod per-slice budgeting
+# ---------------------------------------------------------------------------
+def test_encode_sparse_overflow_sheds_smallest():
+    """More nonzeros than slots: the wire keeps the k LARGEST magnitudes
+    (graceful top-k degradation), never dropping dominant coordinates."""
+    x = jnp.asarray([5.0, -1.0, 4.0, 0.0, -2.0, 3.0])
+    back = decode_sparse(encode_sparse(x, k=3))
+    np.testing.assert_array_equal(np.asarray(back),
+                                  [5.0, 0.0, 4.0, 0.0, 0.0, 3.0])
+
+
+def test_sparse_axis0_slices_budget():
+    """Per-first-axis-slice masking (the pod path) can keep more than
+    round(gamma*n) entries per leaf; axis0_slices sizes the wire to the
+    per-slice budget so those uploads round-trip bit-exact."""
+    G, d, gamma = 4, 15, 0.1
+    # per-slice top-k keeps max(1, round(0.1*15)) = 2 each -> 8 total;
+    # the whole-leaf budget would be round(0.1*60) = 6.
+    leaf = jnp.zeros((G, d)).at[:, :2].set(
+        jnp.arange(1, 2 * G + 1, dtype=jnp.float32).reshape(G, 2))
+    whole = SparseCodec(gamma=gamma, min_leaf_size=1)
+    sliced = SparseCodec(gamma=gamma, min_leaf_size=1, axis0_slices=True)
+
+    assert np.count_nonzero(np.asarray(whole.roundtrip(leaf))) == 6  # shed 2
+    np.testing.assert_array_equal(np.asarray(sliced.roundtrip(leaf)),
+                                  np.asarray(leaf))
+    # wire bytes reflect the bigger slot budget, exactly
+    assert sliced.wire_bytes(leaf) == 8 * 8 + 2 * 4
+    assert whole.wire_bytes(leaf) == 6 * 8 + 2 * 4
+
+
+def test_pod_config_rebudgets_sparse_stages():
+    """FedPodConfig.from_strategy switches every SparseCodec stage to the
+    pod masks' per-slice budgeting, including inside chains."""
+    from repro.core import strategy
+    from repro.core.codecs import with_axis0_slices
+    from repro.launch.fedtrain import FedPodConfig
+
+    cfg = FedPodConfig.from_strategy(strategy.get("fig5-int8"), 4)
+    assert isinstance(cfg.codec, ChainCodec)
+    assert cfg.codec.stages[0].axis0_slices
+    # idempotent + identity passthrough
+    assert with_axis0_slices(cfg.codec) == cfg.codec
+    assert with_axis0_slices(IdentityCodec()) == IdentityCodec()
+
+
+# ---------------------------------------------------------------------------
+# malformed-payload error paths (compression.py satellite)
+# ---------------------------------------------------------------------------
+def test_decode_sparse_rejects_malformed():
+    good = encode_sparse(jnp.asarray([0.0, 2.0, 0.0, 3.0]), k=2)
+    _assert_bit_exact(decode_sparse(good), jnp.asarray([0.0, 2.0, 0.0, 3.0]))
+
+    bad = dict(good)
+    del bad["indices"]
+    with pytest.raises(ValueError, match="missing"):
+        decode_sparse(bad)
+
+    with pytest.raises(ValueError, match="integers"):
+        decode_sparse({**good, "indices": good["indices"].astype(jnp.float32)})
+
+    with pytest.raises(ValueError, match="matching 1-D"):
+        decode_sparse({**good, "values": jnp.zeros((3,))})
+
+    with pytest.raises(ValueError, match="out of range"):
+        decode_sparse({**good, "indices": jnp.asarray([1, 9], jnp.int32)})
+
+    with pytest.raises(ValueError, match="slots"):
+        decode_sparse({"indices": jnp.zeros((9,), jnp.int32),
+                       "values": jnp.zeros((9,)),
+                       "shape": np.asarray([4], np.int32)})
+
+
+def test_encode_sparse_rejects_bad_k():
+    x = jnp.zeros((8,))
+    with pytest.raises(ValueError, match="k >= 1"):
+        encode_sparse(x, k=0)
+    with pytest.raises(ValueError, match="exceeds"):
+        encode_sparse(x, k=9)
+
+
+def test_decoders_reject_non_array_payloads():
+    """Non-array garbage raises the documented ValueError (coerced where
+    possible, rejected otherwise) — never a bare AttributeError."""
+    with pytest.raises(ValueError, match="not array-like"):
+        dequantize_int8({"q": object(), "scale": jnp.float32(0.5)})
+    with pytest.raises(ValueError, match="int8"):
+        dequantize_int8({"q": [1, 2, 3], "scale": jnp.float32(0.5)})
+    # coercible lists decode fine
+    out = decode_sparse({"indices": [0, 2], "values": [1.0, 3.0],
+                         "shape": np.asarray([4], np.int32)})
+    np.testing.assert_array_equal(np.asarray(out), [1.0, 0.0, 3.0, 0.0])
+
+
+def test_dequantize_int8_rejects_malformed():
+    good = quantize_int8(jnp.asarray([1.0, -2.0, 0.5]))
+    with pytest.raises(ValueError, match="missing"):
+        dequantize_int8({"q": good["q"]})
+    with pytest.raises(ValueError, match="int8"):
+        dequantize_int8({**good, "q": good["q"].astype(jnp.int32)})
+    with pytest.raises(ValueError, match="scalar"):
+        dequantize_int8({**good, "scale": jnp.ones((3,))})
+    with pytest.raises(ValueError, match="float"):
+        quantize_int8(jnp.asarray([1, 2, 3], jnp.int32))

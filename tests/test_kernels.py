@@ -182,7 +182,8 @@ def test_select_thresholds_brackets_every_segment():
     x2d, seg_ids, spec = _packed(leaves)
     hist = seg.segmented_histogram(x2d, seg_ids,
                                    spec.num_segments, interpret=True)
-    k = jnp.asarray([max(1, round(0.1 * l.size)) for l in leaves], jnp.int32)
+    k = jnp.asarray([max(1, round(0.1 * leaf.size)) for leaf in leaves],
+                    jnp.int32)
     lo, hi, cnt_lo, cnt_hi = seg.select_thresholds(hist, k)
     for s, leaf in enumerate(leaves):
         mag = jnp.sort(jnp.abs(leaf.reshape(-1)))

@@ -6,12 +6,9 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import hlo as hlo_lib
 

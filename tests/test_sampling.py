@@ -1,7 +1,6 @@
 """Sampling schedules (paper §3.2 / §4.1) + transport cost (Eq. 6)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from conftest import given, settings, st

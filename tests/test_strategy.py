@@ -1,0 +1,323 @@
+"""FedStrategy API (repro.core.strategy): registry semantics, per-preset
+cohort-vs-oracle bit-exactness, and the legacy-kwargs deprecation shim.
+
+Acceptance contract of the strategy redesign:
+
+* every registry preset runs bit-identically under ``engine="cohort"`` and
+  the full-population oracle (the DESIGN.md §3.5 guarantee survives the
+  codec/aggregator threading);
+* ``FederatedServer.from_strategy(strategy.get("fig5"), ...)`` reproduces
+  the legacy ``(loss_fn, schedule, cfg, ...)`` server's round records with
+  params bit-identical, while transport is now the codec's exact wire
+  bytes;
+* the legacy kwargs still work — behind a ``DeprecationWarning``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClientConfig, DynamicSampling, FederatedConfig,
+                        FederatedServer, StaticSampling)
+from repro.core import strategy
+from repro.core.codecs import ChainCodec, IdentityCodec, SparseCodec
+from repro.core.strategy import (FEDAVG, Aggregator, FedStrategy, MaskPolicy,
+                                 build_round, clipped_fedavg, default_codec)
+
+
+@functools.lru_cache()
+def _problem(num_clients, dim=8, classes=3, num_batches=2, batch=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (num_clients, num_batches, batch, dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1),
+                           (num_clients, num_batches, batch), 0, classes)
+
+    def loss_fn(params, data):
+        xb, yb = data
+        logp = jax.nn.log_softmax(xb @ params["w"] + params["b"])
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    params = {"w": 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           (dim, classes)),
+              "b": jnp.zeros((classes,))}
+    n = np.ones((num_clients,), np.float32)
+    return loss_fn, params, (x, y), n
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_presets_present():
+    assert {"dense-baseline", "fig3", "fig4", "fig5",
+            "fig5-int8"} <= set(strategy.names())
+    for name in strategy.names():
+        st = strategy.get(name)
+        assert isinstance(st, FedStrategy) and st.name == name
+
+
+def test_registry_unknown_name():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        strategy.get("does-not-exist")
+
+
+def test_registry_rejects_duplicate():
+    with pytest.raises(ValueError, match="already registered"):
+        strategy.register(strategy.get("fig5"))
+
+
+def test_get_with_overrides():
+    st = strategy.get("fig5", learning_rate=0.2, error_feedback=True)
+    assert st.learning_rate == 0.2 and st.error_feedback
+    # the registered preset is untouched (frozen record semantics)
+    assert strategy.get("fig5").learning_rate != 0.2
+
+
+def test_masking_override_rederives_codec():
+    """Overriding masking without a codec keeps COO slots consistent with
+    the new gamma — including int8 chaining for quantised presets."""
+    st = strategy.get("fig5", masking=MaskPolicy.selective(0.25))
+    assert isinstance(st.codec, SparseCodec) and st.codec.gamma == 0.25
+
+    dense = strategy.get("fig5", masking=MaskPolicy.none())
+    assert isinstance(dense.codec, IdentityCodec)
+
+    q = strategy.get("fig5-int8", masking=MaskPolicy.selective(0.25))
+    assert isinstance(q.codec, ChainCodec)
+    assert q.codec.stages[0].gamma == 0.25
+
+
+def test_preset_expectations():
+    fig3 = strategy.get("fig3")
+    assert isinstance(fig3.sampling, DynamicSampling)
+    assert fig3.masking.mode == "none"
+    assert isinstance(fig3.codec, IdentityCodec)
+
+    fig4 = strategy.get("fig4")
+    assert isinstance(fig4.sampling, StaticSampling)
+    assert fig4.masking.mode == "selective" and fig4.masking.gamma == 0.1
+    assert isinstance(fig4.codec, SparseCodec)
+
+    fig5 = strategy.get("fig5")
+    assert isinstance(fig5.sampling, DynamicSampling)
+    assert fig5.masking.mode == "selective"
+    assert isinstance(fig5.codec, SparseCodec)
+
+
+def test_mask_policy_validation():
+    with pytest.raises(ValueError, match="mode"):
+        MaskPolicy(mode="bogus")
+    with pytest.raises(ValueError, match="backend"):
+        MaskPolicy.selective(0.5, backend="cuda")
+    with pytest.raises(ValueError, match="gamma"):
+        MaskPolicy.selective(0.0)
+    mc = MaskPolicy.selective(0.3, backend="kernel").masking_config()
+    assert mc.mode == "selective" and mc.use_kernel
+    assert MaskPolicy.from_masking_config(mc) == MaskPolicy.selective(
+        0.3, backend="kernel")
+
+
+def test_default_codec_matches_policy():
+    assert isinstance(default_codec(MaskPolicy.none()), IdentityCodec)
+    sc = default_codec(MaskPolicy.selective(0.3, min_leaf_size=64))
+    assert isinstance(sc, SparseCodec)
+    assert sc.gamma == 0.3 and sc.min_leaf_size == 64
+    chained = default_codec(MaskPolicy.selective(0.3), quantized=True)
+    assert isinstance(chained, ChainCodec)
+
+
+# ---------------------------------------------------------------------------
+# every preset: cohort engine == full oracle, bit-exact
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("preset", strategy.names())
+def test_preset_cohort_matches_oracle(preset):
+    """The §3.5 bit-exactness guarantee survives under every registered
+    strategy: same params, residual state, and history either engine.
+    dim=128 makes the weight leaf big enough (512 > min_leaf_size=256)
+    that the sparse COO wire actually engages in-round."""
+    M = 16
+    loss_fn, params, batches, n = _problem(M, dim=128, classes=4)
+    st = strategy.get(preset, learning_rate=0.1, error_feedback=True)
+
+    servers = {}
+    for engine in ("full", "cohort"):
+        s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=5,
+                                          engine=engine)
+        s.run(batches, n, rounds=6)
+        servers[engine] = s
+
+    full, cohort = servers["full"], servers["cohort"]
+    _assert_trees_equal(full.params, cohort.params)
+    _assert_trees_equal(full._residuals, cohort._residuals)
+    assert [r.num_sampled for r in full.history] == \
+        [r.num_sampled for r in cohort.history]
+    np.testing.assert_allclose(
+        [r.mean_loss for r in full.history],
+        [r.mean_loss for r in cohort.history], rtol=1e-5, atol=1e-6)
+    assert full.total_transport_bytes() == cohort.total_transport_bytes()
+    ladder = st.sampling.bucket_ladder(M)
+    assert all(r.cohort_size in ladder and r.cohort_size >= r.num_sampled
+               for r in cohort.history)
+
+
+# ---------------------------------------------------------------------------
+# from_strategy vs the deprecated kwargs shim
+# ---------------------------------------------------------------------------
+def test_from_strategy_reproduces_legacy_kwargs_server():
+    """strategy.get("fig5") == the legacy (schedule, cfg) construction:
+    params bit-identical round by round; transport now reported as the
+    codec's exact wire bytes; the old path emits a DeprecationWarning."""
+    M = 8
+    loss_fn, params, batches, n = _problem(M)
+    st = strategy.get("fig5")
+
+    new = FederatedServer.from_strategy(st, loss_fn, params, M, seed=9)
+    new.run(batches, n, rounds=5)
+
+    legacy_cfg = FederatedConfig(
+        num_clients=M,
+        client=ClientConfig(local_epochs=st.local_epochs,
+                            learning_rate=st.learning_rate,
+                            masking=st.masking.masking_config()))
+    with pytest.warns(DeprecationWarning, match="from_strategy"):
+        old = FederatedServer(loss_fn, st.sampling, legacy_cfg, params,
+                              seed=9)
+    old.run(batches, n, rounds=5)
+
+    _assert_trees_equal(new.params, old.params)
+    assert [(r.round, r.num_sampled, r.mean_loss, r.cohort_size)
+            for r in new.history] == \
+        [(r.round, r.num_sampled, r.mean_loss, r.cohort_size)
+         for r in old.history]
+
+    # transport is the codec's exact wire byte count, not an estimate
+    wire = st.codec.wire_bytes(params)
+    assert new.client_upload_bytes == wire
+    for rec in new.history:
+        assert rec.transport_bytes == rec.num_sampled * wire
+    assert new.total_transport_bytes() == old.total_transport_bytes()
+
+
+def test_server_summary_transport_from_codec():
+    """summary()["transport_bytes"] is codec-metered: identity counts full
+    dense bytes; the fig4 sparse wire shrinks it accordingly."""
+    M = 8
+    loss_fn, params, batches, n = _problem(M)
+    dense_bytes = sum(np.asarray(leaf).nbytes
+                      for leaf in jax.tree_util.tree_leaves(params))
+
+    s = FederatedServer.from_strategy(strategy.get("dense-baseline"),
+                                      loss_fn, params, M, seed=1)
+    s.run(batches, n, rounds=2)
+    summ = s.summary()
+    assert summ["codec"] == "identity"
+    assert summ["client_upload_bytes"] == dense_bytes
+    assert summ["transport_bytes"] == sum(
+        r.num_sampled for r in s.history) * dense_bytes
+
+    s4 = FederatedServer.from_strategy(strategy.get("fig4"), loss_fn,
+                                       params, M, seed=1)
+    s4.run(batches, n, rounds=2)
+    assert s4.summary()["codec"].startswith("sparse")
+    assert s4.summary()["client_upload_bytes"] == \
+        strategy.get("fig4").codec.wire_bytes(params)
+
+
+# ---------------------------------------------------------------------------
+# build_round forms + aggregator plug point
+# ---------------------------------------------------------------------------
+def test_build_round_forms_agree():
+    M = 8
+    loss_fn, params, batches, n = _problem(M)
+    st = strategy.get("fig5", learning_rate=0.1)
+    residuals = jax.tree.map(
+        lambda p: jnp.zeros((M,) + p.shape, p.dtype), params)
+    n = jnp.asarray(n)
+    key = jax.random.PRNGKey(0)
+    t = jnp.asarray(1.0)
+
+    full = jax.jit(build_round(st, loss_fn, M, form="full"))
+    scan = jax.jit(build_round(st, loss_fn, M, form="scan", cohort_size=M))
+    p_f, _, m_f = full(params, residuals, batches, n, t, key)
+    p_s, _, m_s = scan(params, residuals, batches, n, t[None], key[None])
+    _assert_trees_equal(p_f, p_s)
+    assert int(m_f["num_sampled"]) == int(np.asarray(m_s["num_sampled"])[0])
+
+    with pytest.raises(ValueError, match="cohort_size"):
+        build_round(st, loss_fn, M, form="cohort")
+    with pytest.raises(ValueError, match="unknown round form"):
+        build_round(st, loss_fn, M, form="bogus")
+
+
+def test_clipped_fedavg_aggregator():
+    """clipped_fedavg: norm-clips per client, leaves small uploads alone,
+    and keeps zero rows zero (cohort-equivalence requirement)."""
+    agg = clipped_fedavg(1.0)
+    assert isinstance(agg, Aggregator) and "clipped" in agg.name
+    g = {"w": jnp.zeros((4,))}
+    uploads = {"w": jnp.stack([jnp.asarray([3.0, 0.0, 0.0, 0.0]),
+                               jnp.asarray([0.1, 0.0, 0.0, 0.0]),
+                               jnp.zeros((4,))])}
+    w = jnp.asarray([1.0, 1.0, 0.0])
+    out = agg.fn(g, uploads, w, "delta")
+    # client 0 clipped 3.0 -> 1.0; client 1 untouched; zero row inert
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               [(1.0 + 0.1) / 2, 0, 0, 0], rtol=1e-6)
+
+    # and it is available through the strategy surface end to end
+    M = 8
+    loss_fn, params, batches, n = _problem(M)
+    st = strategy.get("fig3", aggregator=clipped_fedavg(10.0),
+                      learning_rate=0.1)
+    s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=2)
+    s.run(batches, n, rounds=2)
+    assert s.history[-1].mean_loss < s.history[0].mean_loss * 1.5
+
+
+def test_fedavg_is_default_aggregator():
+    assert strategy.get("fig5").aggregator is FEDAVG
+
+
+def test_error_feedback_absorbs_wire_loss():
+    """With a lossy codec + error feedback, the wire's quantisation error
+    re-enters the residual.  Invariant (full participation, uniform
+    weights, "delta" semantics): the residual gap between the lossless and
+    lossy runs equals, on average over clients, the parameter gap —
+    i.e. no mass is silently discarded on the wire."""
+    M = 4
+    loss_fn, params, batches, n = _problem(M, dim=128, classes=4)
+    residuals = jax.tree.map(
+        lambda p: jnp.zeros((M,) + p.shape, p.dtype), params)
+    nj = jnp.asarray(n)
+    key = jax.random.PRNGKey(11)
+    t = jnp.asarray(1.0)
+
+    sampling = StaticSampling(initial_rate=1.0, min_clients=2)
+    lossless = strategy.get("fig5", sampling=sampling, error_feedback=True,
+                            learning_rate=0.1)
+    lossy = strategy.get("fig5-int8", sampling=sampling,
+                         error_feedback=True, learning_rate=0.1)
+
+    p_a, r_a, _ = jax.jit(build_round(lossless, loss_fn, M, form="full"))(
+        params, residuals, batches, nj, t, key)
+    p_b, r_b, _ = jax.jit(build_round(lossy, loss_fn, M, form="full"))(
+        params, residuals, batches, nj, t, key)
+
+    # int8 wire really is lossy here, and the residual moved to absorb it
+    gap = [np.asarray(a) - np.asarray(b)
+           for a, b in zip(jax.tree_util.tree_leaves(p_a),
+                           jax.tree_util.tree_leaves(p_b))]
+    assert max(np.abs(g).max() for g in gap) > 0
+    for (la, lb), dp in zip(zip(jax.tree_util.tree_leaves(r_a),
+                                jax.tree_util.tree_leaves(r_b)),
+                            gap):
+        mean_res_gap = np.asarray(jnp.mean(lb - la, axis=0))
+        np.testing.assert_allclose(mean_res_gap, dp, rtol=1e-5, atol=1e-6)

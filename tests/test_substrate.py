@@ -1,7 +1,6 @@
 """Substrate tests: compression/byte accounting, checkpointing, optimizers,
 data pipeline."""
 
-import os
 
 import jax
 import jax.numpy as jnp
