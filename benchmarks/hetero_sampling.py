@@ -1,0 +1,119 @@
+"""Adaptive client selection on a heterogeneous fleet (DESIGN.md §5).
+
+Compares the three client samplers — ``uniform`` (the paper's rule),
+``importance`` (norm-proportional with-replacement draws, unbiased HT
+weights), ``threshold`` (water-filled independent transmission) — on the
+same dynamic c(t) schedule, running every round on the simulated
+``mobile`` fleet so the records carry both the codec's exact wire bytes
+AND the simulated straggler wall-clock:
+
+  PYTHONPATH=src python -m benchmarks.hetero_sampling            # full
+  PYTHONPATH=src python -m benchmarks.hetero_sampling --smoke    # CI
+
+Writes ``BENCH_hetero.json`` (or ``BENCH_hetero.smoke.json``): one row per
+sampler with the per-round loss / cumulative-bytes / cumulative-sim-clock
+curves and the bytes + simulated seconds needed to first reach the uniform
+run's final loss (bytes-to-target-loss).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import FederatedServer, strategy
+from repro.core.hetero import HeteroModel
+from repro.core.sampling import get_sampler
+from repro.models import (classifier_accuracy, classifier_loss, init_lenet,
+                          lenet_forward)
+
+from benchmarks.common import IMG_SIZE, NUM_CLIENTS, mnist_like
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_hetero.json")
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_hetero.smoke.json")
+
+SAMPLERS = ("uniform", "importance", "threshold")
+
+
+def run_sampler(name: str, rounds: int, seed: int = 0):
+    """One federated run with the named sampler on the mobile fleet;
+    returns the per-round curves a cost-to-quality comparison needs."""
+    batches, n, eval_data = mnist_like(seed)
+    params = init_lenet(jax.random.PRNGKey(seed), IMG_SIZE, 1)
+    loss_fn = classifier_loss(lenet_forward)
+    eval_fn = jax.jit(classifier_accuracy(lenet_forward))
+
+    strat = strategy.get(
+        "fig3", sampler=get_sampler(name),
+        hetero=HeteroModel(profile="mobile", seed=seed),
+        learning_rate=0.1)
+    server = FederatedServer.from_strategy(
+        strat, loss_fn, params, NUM_CLIENTS, eval_fn=eval_fn, seed=seed)
+    server.run(batches, n, rounds, eval_every=rounds, eval_data=eval_data)
+
+    loss = [r.mean_loss for r in server.history]
+    cum_bytes = np.cumsum([r.transport_bytes for r in server.history])
+    cum_sim_s = np.cumsum([r.sim_round_s for r in server.history])
+    s = server.summary()
+    return {
+        "sampler": name,
+        "rounds": rounds,
+        "loss_curve": [round(v, 4) for v in loss],
+        "cum_bytes_curve": [int(v) for v in cum_bytes],
+        "cum_sim_s_curve": [round(float(v), 2) for v in cum_sim_s],
+        "final_loss": round(s["final_loss"], 4),
+        "final_eval": round(s["final_eval"], 4),
+        "transport_bytes": s["transport_bytes"],
+        "sim_total_s": round(s["sim_total_s"], 2),
+        "dropped_uploads": s["dropped_uploads"],
+        "steady_wall_s": round(s["steady_wall_s"], 4),
+    }
+
+
+def _cost_to_target(row, target_loss):
+    """First-round cumulative (bytes, sim seconds) at which the run's loss
+    reaches ``target_loss`` (None when it never does).  Empty rounds (the
+    threshold sampler's count can be 0) report NaN loss and are skipped."""
+    for loss, b, t in zip(row["loss_curve"], row["cum_bytes_curve"],
+                          row["cum_sim_s_curve"]):
+        if np.isfinite(loss) and loss <= target_loss:
+            return int(b), float(t)
+    return None, None
+
+
+def run(rounds: int = 24, seed: int = 0):
+    """All three samplers + bytes/sim-clock to the uniform run's final
+    loss, the bench's cost-to-quality headline."""
+    rows = [run_sampler(name, rounds, seed=seed) for name in SAMPLERS]
+    target = rows[0]["final_loss"]          # uniform's final loss
+    for row in rows:
+        b, t = _cost_to_target(row, target)
+        row["target_loss"] = target
+        row["bytes_to_target"] = b
+        row["sim_s_to_target"] = t
+    return rows
+
+
+def main():
+    """CLI entry: full bench, or tiny --smoke rows for the CI artifact."""
+    from benchmarks.common import fmt_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3-round CI smoke (writes BENCH_hetero.smoke.json)")
+    args = ap.parse_args()
+    rounds = 3 if args.smoke else 24
+    rows = run(rounds=rounds)
+    path = SMOKE_PATH if args.smoke else OUT_PATH
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    brief = [{k: v for k, v in r.items()
+              if not k.endswith("_curve")} for r in rows]
+    print(fmt_rows(brief))
+
+
+if __name__ == "__main__":
+    main()

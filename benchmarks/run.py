@@ -17,14 +17,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_sampling, fig4_masking, fig5_combined,
-                            fig67_vgg, fig89_lm, kernels_bench, noniid,
-                            roofline)
+                            fig67_vgg, fig89_lm, hetero_sampling,
+                            kernels_bench, noniid, roofline)
     from benchmarks.common import fmt_rows
 
     modules = {
         "fig3": fig3_sampling, "fig4": fig4_masking, "fig5": fig5_combined,
         "fig67": fig67_vgg, "fig89": fig89_lm, "kernels": kernels_bench,
-        "noniid": noniid, "roofline": roofline,
+        "noniid": noniid, "hetero": hetero_sampling, "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -8,6 +8,9 @@ the accuracy-vs-transport trade-off the paper is about, with transport as
 the codec's EXACT wire bytes.
 
   PYTHONPATH=src python examples/quickstart.py
+
+The full public surface (every entry point with a runnable snippet) is
+documented in docs/api.md — executed by CI, so it cannot rot.
 """
 
 import jax

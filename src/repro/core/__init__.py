@@ -9,6 +9,11 @@ presets — ``strategy.get("fig5")`` — consumed by
 from repro.core.sampling import (
     StaticSampling, DynamicSampling, SamplingSchedule,
     participation_mask, sample_clients, transport_cost,
+    ClientSampler, UniformSampler, ImportanceSampler, ThresholdSampler,
+    transmit_probabilities, get_sampler,
+)
+from repro.core.hetero import (
+    ClientTraits, HeteroModel, simulate_round, profile_names,
 )
 from repro.core.masking import (
     MaskingConfig, random_mask, selective_mask_exact,

@@ -41,6 +41,10 @@ __all__ = ["ClientConfig", "local_sgd", "client_update",
 
 @dataclasses.dataclass(frozen=True)
 class ClientConfig:
+    """Per-client hyperparameters: local SGD (epochs, lr, momentum), the
+    mask policy applied to the delta, and the upload semantics
+    ("delta" | "zero"; see module docstring)."""
+
     local_epochs: int = 1
     learning_rate: float = 0.01
     momentum: float = 0.0

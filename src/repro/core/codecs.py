@@ -73,9 +73,11 @@ class UploadCodec:
     name = "identity"
 
     def encode(self, tree: PyTree) -> PyTree:
+        """Upload pytree -> wire pytree (static shapes)."""
         raise NotImplementedError
 
     def decode(self, wire: PyTree) -> PyTree:
+        """Wire pytree -> upload pytree (inverse of :meth:`encode`)."""
         raise NotImplementedError
 
     def roundtrip(self, tree: PyTree) -> PyTree:
@@ -97,12 +99,15 @@ class IdentityCodec(UploadCodec):
     name = "identity"
 
     def encode(self, tree: PyTree) -> PyTree:
+        """The wire IS the upload pytree."""
         return tree
 
     def decode(self, wire: PyTree) -> PyTree:
+        """The upload IS the wire pytree."""
         return wire
 
     def roundtrip(self, tree: PyTree) -> PyTree:
+        """Free: dense pass-through loses nothing."""
         return tree
 
 
@@ -138,6 +143,7 @@ class SparseCodec(UploadCodec):
 
     @property
     def name(self) -> str:  # type: ignore[override]
+        """Wire-format label surfaced in ``FederatedServer.summary()``."""
         suffix = ", per-slice" if self.axis0_slices else ""
         return f"sparse(gamma={self.gamma}{suffix})"
 
@@ -150,6 +156,7 @@ class SparseCodec(UploadCodec):
         return self._slots(leaf.size)
 
     def encode(self, tree: PyTree) -> PyTree:
+        """COO-encode every maskable leaf (small leaves ship dense)."""
         def enc(leaf):
             if leaf.size < self.min_leaf_size or self.gamma >= 1.0:
                 return leaf
@@ -158,6 +165,7 @@ class SparseCodec(UploadCodec):
         return jax.tree_util.tree_map(enc, tree)
 
     def decode(self, wire: PyTree) -> PyTree:
+        """Scatter every COO leaf back to dense; pass dense leaves."""
         return jax.tree_util.tree_map(
             lambda leaf: decode_sparse(leaf) if _is_coo(leaf) else leaf,
             wire, is_leaf=_is_coo)
@@ -177,6 +185,7 @@ class Int8Codec(UploadCodec):
     name = "int8"
 
     def encode(self, tree: PyTree) -> PyTree:
+        """Quantise every float leaf to (int8 q, fp32 scale) pairs."""
         def enc(leaf):
             if jnp.issubdtype(leaf.dtype, jnp.floating):
                 return quantize_int8(leaf)
@@ -185,6 +194,7 @@ class Int8Codec(UploadCodec):
         return jax.tree_util.tree_map(enc, tree)
 
     def decode(self, wire: PyTree) -> PyTree:
+        """Dequantise every (q, scale) leaf back to float32."""
         return jax.tree_util.tree_map(
             lambda leaf: dequantize_int8(leaf) if _is_q8(leaf) else leaf,
             wire, is_leaf=_is_q8)
@@ -205,14 +215,17 @@ class ChainCodec(UploadCodec):
 
     @property
     def name(self) -> str:  # type: ignore[override]
+        """Stage names joined with "+" (e.g. ``sparse(gamma=0.5)+int8``)."""
         return "+".join(s.name for s in self.stages)
 
     def encode(self, tree: PyTree) -> PyTree:
+        """Fold every stage's encode left-to-right."""
         for stage in self.stages:
             tree = stage.encode(tree)
         return tree
 
     def decode(self, wire: PyTree) -> PyTree:
+        """Unwind every stage's decode in reverse order."""
         for stage in reversed(self.stages):
             wire = stage.decode(wire)
         return wire

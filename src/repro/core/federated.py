@@ -23,6 +23,18 @@ Two execution forms of the same round:
   client_update over the cohort axis, scatter residuals back (DESIGN.md
   §3.5) — per-round work decays with c(t).
 
+Every builder takes two further scenario axes (DESIGN.md §5):
+
+* ``sampler`` — a :class:`repro.core.sampling.ClientSampler` picking WHICH
+  m_t clients and the aggregation weights that keep the weighted mean
+  unbiased under non-uniform selection.  Adaptive samplers (importance /
+  threshold) consume and emit a per-client norm-tracker vector, so the
+  round signature gains a ``norms`` state argument/result.
+* ``hetero`` — a :class:`repro.core.hetero.HeteroModel`; its per-client
+  drop rates are drawn INSIDE the round (a dropped upload is zero-weighted
+  and, under error feedback, leaves that client's residual untouched), so
+  both engines agree bit-exactly on which uploads count.
+
 The pod (shard_map) form of the same round lives in
 ``repro.launch.fedtrain`` — identical math, collectives instead of vmap.
 """
@@ -30,6 +42,7 @@ The pod (shard_map) form of the same round lives in
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable
 
 import jax
@@ -37,7 +50,8 @@ import jax.numpy as jnp
 
 from repro.core.client import ClientConfig, stacked_client_update
 from repro.core.codecs import roundtrip_stacked
-from repro.core.sampling import SamplingSchedule, participation_mask
+from repro.core.sampling import (SamplingSchedule, UniformSampler,
+                                 participation_mask)
 
 PyTree = Any
 
@@ -45,10 +59,31 @@ __all__ = ["FederatedConfig", "make_federated_round", "make_cohort_round",
            "make_cohort_scan", "cohort_select", "fedavg_aggregate"]
 
 
-def _resolve_policies(codec, aggregator):
+def _resolve_policies(codec, aggregator, normalize: bool = True):
     """Normalize the optional (codec, aggregator) pair every round builder
-    takes: identity wire + plain fedavg when unset."""
-    agg_fn = aggregator.fn if aggregator is not None else fedavg_aggregate
+    takes: identity wire + plain fedavg when unset.
+
+    ``normalize`` binds the sampler's weight semantics into the returned
+    aggregation call.  Legacy aggregators registered against the PR-4
+    4-argument ``fn(params, uploads, weights, semantics)`` contract keep
+    working under self-normalizing samplers; pairing one with a
+    Horvitz-Thompson sampler (``normalize=False``) raises at build time
+    instead of silently re-normalizing the debiased weights.
+    """
+    fn = aggregator.fn if aggregator is not None else fedavg_aggregate
+    params = inspect.signature(fn).parameters
+    takes_normalize = "normalize" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+    if takes_normalize:
+        def agg_fn(g, uploads, weights, semantics):
+            return fn(g, uploads, weights, semantics, normalize=normalize)
+    elif normalize:
+        agg_fn = fn
+    else:
+        raise TypeError(
+            f"aggregator {getattr(aggregator, 'name', fn)!r} does not accept "
+            "normalize= but the sampler emits Horvitz-Thompson weights "
+            "(normalize=False); extend its fn signature")
 
     def apply_wire(stacked):
         return roundtrip_stacked(codec, stacked)
@@ -56,18 +91,49 @@ def _resolve_policies(codec, aggregator):
     return apply_wire, agg_fn
 
 
+def _is_plain(sampler, hetero) -> bool:
+    """True when the round reduces to the original schedule-only body —
+    the path kept verbatim so default rounds stay bit-identical."""
+    return hetero is None and (sampler is None
+                               or isinstance(sampler, UniformSampler))
+
+
+def _row_l2(stacked: PyTree) -> jnp.ndarray:
+    """Per-client L2 norm over every leaf of a client-stacked pytree."""
+    sq = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)),
+                     axis=tuple(range(1, leaf.ndim)))
+             for leaf in jax.tree_util.tree_leaves(stacked))
+    return jnp.sqrt(sq)
+
+
 @dataclasses.dataclass(frozen=True)
 class FederatedConfig:
+    """Population-level round configuration: how many clients are
+    registered, their shared :class:`repro.core.client.ClientConfig`, and
+    whether DGC-style error-feedback residuals accumulate (beyond-paper)."""
+
     num_clients: int
     client: ClientConfig
     error_feedback: bool = False  # beyond-paper (DGC-style residuals)
 
 
 def fedavg_aggregate(global_params: PyTree, uploads: PyTree,
-                     weights: jnp.ndarray, upload_semantics: str) -> PyTree:
-    """Weighted FedAvg over stacked client uploads (leading client axis)."""
-    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
-    norm_w = weights / wsum
+                     weights: jnp.ndarray, upload_semantics: str,
+                     normalize: bool = True) -> PyTree:
+    """Weighted FedAvg over stacked client uploads (leading client axis).
+
+    ``normalize=True`` (default) re-normalizes ``weights`` to sum to 1 —
+    Eq. 2's self-normalized mean.  ``normalize=False`` uses the weights as
+    given: the Horvitz-Thompson path, where a non-uniform
+    :class:`~repro.core.sampling.ClientSampler` has already folded the
+    inverse selection probabilities in so the weighted sum is an unbiased
+    estimate of the full-population mean.
+    """
+    if normalize:
+        wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+        norm_w = weights / wsum
+    else:
+        norm_w = weights
 
     def combine(g, u):
         contrib = jnp.tensordot(norm_w, u, axes=(0, 0))
@@ -78,10 +144,52 @@ def fedavg_aggregate(global_params: PyTree, uploads: PyTree,
     return jax.tree.map(combine, global_params, uploads)
 
 
+def _round_extras(sampler, hetero, cfg):
+    """Shared setup for the generalized (non-plain) round bodies: the
+    resolved sampler and the static per-client drop-rate vector (or None)."""
+    smp = sampler if sampler is not None else UniformSampler()
+    drop = None
+    if hetero is not None:
+        drop = jnp.asarray(hetero.drop_rates(cfg.num_clients), jnp.float32)
+    return smp, drop
+
+
+def _split_round_key(key, with_drop: bool):
+    """(sample, mask[, drop]) subkeys; the 2-way split is kept verbatim for
+    hetero-free rounds so default rounds stay bit-identical."""
+    if not with_drop:
+        sample_key, mask_key = jax.random.split(key)
+        return sample_key, mask_key, None
+    return tuple(jax.random.split(key, 3))
+
+
+def _apply_dropout(part, weights, drop, drop_key, normalize):
+    """Draw upload losses and fold them into participation weights.
+
+    Self-normalized weights just zero the lost rows (FedAvg re-normalizes
+    over arrivals); Horvitz-Thompson weights additionally divide by the
+    per-client survival probability so unbiasedness is preserved under
+    dropout: ``E[arrived_i / (1 - q_i)] = part_i``.
+    """
+    if drop is None:
+        return part, weights
+    lost = (jax.random.uniform(drop_key, drop.shape) < drop)
+    arrived = part * (1.0 - lost.astype(jnp.float32))
+    if normalize:
+        return arrived, weights * arrived
+    return arrived, weights * arrived / jnp.maximum(1.0 - drop, 1e-6)
+
+
 def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
-                         cfg: FederatedConfig, *, codec=None, aggregator=None):
-    """Returns ``round_fn(params, residuals, client_batches, n_samples, t, key)
-    -> (params, residuals, metrics)``.
+                         cfg: FederatedConfig, *, codec=None, aggregator=None,
+                         sampler=None, hetero=None):
+    """Build the full-population (oracle) round program.
+
+    Returns ``round_fn(params, residuals, client_batches, n_samples, t, key)
+    -> (params, residuals, metrics)`` — or, when ``sampler.adaptive``,
+    ``round_fn(params, residuals, norms, client_batches, n_samples, t, key)
+    -> (params, residuals, norms, metrics)`` with ``norms`` the (M,)
+    per-client update-norm tracker the sampler feeds on.
 
     ``client_batches``: pytree with leading (num_clients, num_batches, B, ...)
     axes.  ``n_samples``: (num_clients,) float per-client dataset sizes for
@@ -89,45 +197,125 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
     cfg.error_feedback is False).  ``codec`` (an
     ``repro.core.codecs.UploadCodec``) round-trips every client upload
     through its wire format before aggregation; ``aggregator`` (an
-    ``repro.core.strategy.Aggregator``) replaces plain weighted FedAvg.
+    ``repro.core.strategy.Aggregator``) replaces plain weighted FedAvg;
+    ``sampler`` (a :class:`repro.core.sampling.ClientSampler`) picks the
+    participants and their aggregation weights; ``hetero`` (a
+    :class:`repro.core.hetero.HeteroModel`) adds in-round upload dropout
+    plus ``part_mask``/``arrived_mask`` metrics for host-side clock
+    simulation.
     """
-    apply_wire, agg_fn = _resolve_policies(codec, aggregator)
+    if _is_plain(sampler, hetero):
+        apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
-    def round_fn(params, residuals, client_batches, n_samples, t, key):
-        sample_key, mask_key = jax.random.split(key)
-        part = participation_mask(sample_key, schedule, t, cfg.num_clients)
-        mask_keys = jax.random.split(mask_key, cfg.num_clients)
+        def round_fn(params, residuals, client_batches, n_samples, t, key):
+            sample_key, mask_key = jax.random.split(key)
+            part = participation_mask(sample_key, schedule, t, cfg.num_clients)
+            mask_keys = jax.random.split(mask_key, cfg.num_clients)
+
+            uploads, new_residuals, losses = stacked_client_update(
+                loss_fn, params, client_batches, mask_keys, cfg.client,
+                residuals, cfg.error_feedback)
+
+            wired = apply_wire(uploads)
+            weights = part * n_samples
+            new_params = agg_fn(params, wired, weights, cfg.client.upload)
+            if cfg.error_feedback:
+                if wired is not uploads:
+                    # Wire loss (int8 quantisation, slot truncation) is real
+                    # masked-out mass: feed it back like any other residual so
+                    # error feedback compensates for the codec too.  Exact
+                    # no-op for bit-exact wires (u - w == 0).
+                    new_residuals = jax.tree.map(
+                        lambda r, u, w: r + (u - w), new_residuals, uploads,
+                        wired)
+                # Non-participants did not really run this round: keep their
+                # old residual; participants reset to the post-mask remainder.
+                new_residuals = jax.tree.map(
+                    lambda old, new: jnp.where(
+                        part.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
+                        new, old),
+                    residuals, new_residuals)
+            else:
+                new_residuals = residuals
+
+            metrics = {
+                "mean_loss": jnp.sum(losses * part)
+                / jnp.maximum(jnp.sum(part), 1.0),
+                "num_sampled": jnp.sum(part),
+            }
+            return new_params, new_residuals, metrics
+
+        return round_fn
+
+    smp, drop = _round_extras(sampler, hetero, cfg)
+    apply_wire, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
+
+    def round_impl(params, residuals, norms, client_batches, n_samples, t,
+                   key):
+        M = cfg.num_clients
+        sample_key, mask_key, drop_key = _split_round_key(
+            key, drop is not None)
+        part, weights = smp.select(sample_key, schedule, t, M, n_samples,
+                                   norms)
+        mask_keys = jax.random.split(mask_key, M)
 
         uploads, new_residuals, losses = stacked_client_update(
             loss_fn, params, client_batches, mask_keys, cfg.client,
             residuals, cfg.error_feedback)
 
         wired = apply_wire(uploads)
-        weights = part * n_samples
+        arrived, weights = _apply_dropout(part, weights, drop, drop_key,
+                                          smp.normalize)
         new_params = agg_fn(params, wired, weights, cfg.client.upload)
         if cfg.error_feedback:
             if wired is not uploads:
-                # Wire loss (int8 quantisation, slot truncation) is real
-                # masked-out mass: feed it back like any other residual so
-                # error feedback compensates for the codec too.  Exact
-                # no-op for bit-exact wires (u - w == 0).
                 new_residuals = jax.tree.map(
                     lambda r, u, w: r + (u - w), new_residuals, uploads,
                     wired)
-            # Non-participants did not really run this round: keep their old
-            # residual; participants reset to the post-mask remainder.
+            # Residuals advance only for clients whose upload ARRIVED: a
+            # dropped upload discards the whole local update, so its
+            # residual must stay consistent with the global model the
+            # client re-downloads next round.
             new_residuals = jax.tree.map(
                 lambda old, new: jnp.where(
-                    part.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old),
+                    arrived.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
+                    new, old),
                 residuals, new_residuals)
         else:
             new_residuals = residuals
 
+        new_norms = norms
+        if smp.adaptive:
+            obs = _row_l2(wired)
+            new_norms = jnp.where(
+                arrived > 0, (1.0 - smp.ema) * norms + smp.ema * obs, norms)
+
+        # An empty round (the threshold sampler's random count can be 0) is
+        # a no-op for the params; report NaN, not a fabricated 0.0 loss.
+        n_part = jnp.sum(part)
         metrics = {
-            "mean_loss": jnp.sum(losses * part) / jnp.maximum(jnp.sum(part), 1.0),
-            "num_sampled": jnp.sum(part),
+            "mean_loss": jnp.where(
+                n_part > 0,
+                jnp.sum(losses * part) / jnp.maximum(n_part, 1.0),
+                jnp.nan),
+            "num_sampled": n_part,
         }
-        return new_params, new_residuals, metrics
+        if drop is not None:
+            metrics["part_mask"] = part
+            metrics["arrived_mask"] = arrived
+            metrics["num_arrived"] = jnp.sum(arrived)
+        return new_params, new_residuals, new_norms, metrics
+
+    if smp.adaptive:
+        def round_fn(params, residuals, norms, client_batches, n_samples, t,
+                     key):
+            return round_impl(params, residuals, norms, client_batches,
+                              n_samples, t, key)
+    else:
+        def round_fn(params, residuals, client_batches, n_samples, t, key):
+            p, r, _, m = round_impl(params, residuals, None, client_batches,
+                                    n_samples, t, key)
+            return p, r, m
 
     return round_fn
 
@@ -171,21 +359,92 @@ def cohort_select(sample_key: jax.Array, schedule: SamplingSchedule, t,
 
 def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                       cfg: FederatedConfig, cohort_size: int, *,
-                      codec=None, aggregator=None):
-    """Cohort-engine form of ``make_federated_round``: same signature and
+                      codec=None, aggregator=None, sampler=None, hetero=None):
+    """Cohort-engine form of ``make_federated_round``: same signature(s) and
     math, but client_update runs over ``cohort_size`` (static) clients
-    instead of ``cfg.num_clients``.  Requires
-    ``cohort_size >= m_t`` for every round it is dispatched to — the server
-    guarantees this via ``SamplingSchedule.bucket_for``."""
+    instead of ``cfg.num_clients``.
+
+    Requires ``cohort_size`` to upper-bound the sampler's participant count
+    for every round it is dispatched to — the server guarantees this via
+    ``ClientSampler.cohort_bucket`` (``SamplingSchedule.bucket_for`` for
+    the default uniform sampler).  Under a non-uniform sampler the cohort
+    gather is keyed by the sampler's ids: the selection math runs on the
+    full (M,)-shaped arrays exactly as in the oracle, and the cohort
+    buffer gathers the ``part > 0`` ids (sorted ascending, padded with the
+    lowest-id non-participants) so the weighted reductions see the same
+    nonzero terms in the same order — bit-exact vs the oracle.
+    """
     if not (0 < cohort_size <= cfg.num_clients):
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
-    apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
-    def round_fn(params, residuals, client_batches, n_samples, t, key):
-        sample_key, mask_key = jax.random.split(key)
-        cohort_ids, valid = cohort_select(
-            sample_key, schedule, t, cfg.num_clients, cohort_size)
+    if _is_plain(sampler, hetero):
+        apply_wire, agg_fn = _resolve_policies(codec, aggregator)
+
+        def round_fn(params, residuals, client_batches, n_samples, t, key):
+            sample_key, mask_key = jax.random.split(key)
+            cohort_ids, valid = cohort_select(
+                sample_key, schedule, t, cfg.num_clients, cohort_size)
+
+            def gather(x):
+                return jnp.take(x, cohort_ids, axis=0)
+
+            cohort_batches = jax.tree.map(gather, client_batches)
+            cohort_res = jax.tree.map(gather, residuals)
+            mask_keys = jnp.take(
+                jax.random.split(mask_key, cfg.num_clients), cohort_ids,
+                axis=0)
+
+            uploads, new_res, losses = stacked_client_update(
+                loss_fn, params, cohort_batches, mask_keys, cfg.client,
+                cohort_res, cfg.error_feedback)
+
+            wired = apply_wire(uploads)
+            weights = valid * jnp.take(n_samples, cohort_ids)
+            new_params = agg_fn(params, wired, weights, cfg.client.upload)
+            if cfg.error_feedback:
+                if wired is not uploads:
+                    # Same wire-loss feedback as the oracle round (bit-exact
+                    # equivalence holds: both engines adjust identically).
+                    new_res = jax.tree.map(
+                        lambda r, u, w: r + (u - w), new_res, uploads, wired)
+
+                def scatter(old, new, old_cohort):
+                    vm = valid.reshape((-1,) + (1,) * (new.ndim - 1))
+                    kept = jnp.where(vm > 0, new, old_cohort)
+                    return old.at[cohort_ids].set(kept)
+
+                new_residuals = jax.tree.map(
+                    scatter, residuals, new_res, cohort_res)
+            else:
+                new_residuals = residuals
+
+            metrics = {
+                "mean_loss": jnp.sum(losses * valid)
+                / jnp.maximum(jnp.sum(valid), 1.0),
+                "num_sampled": jnp.sum(valid),
+            }
+            return new_params, new_residuals, metrics
+
+        return round_fn
+
+    smp, drop = _round_extras(sampler, hetero, cfg)
+    apply_wire, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
+
+    def round_impl(params, residuals, norms, client_batches, n_samples, t,
+                   key):
+        M = cfg.num_clients
+        sample_key, mask_key, drop_key = _split_round_key(
+            key, drop is not None)
+        # Selection runs on the full (M,) arrays — identical ops to the
+        # oracle — then the cohort buffer gathers the sampler's ids.
+        part, weights = smp.select(sample_key, schedule, t, M, n_samples,
+                                   norms)
+        arrived, weights = _apply_dropout(part, weights, drop, drop_key,
+                                          smp.normalize)
+        ids = jnp.arange(M, dtype=jnp.int32)
+        order = jnp.argsort(jnp.where(part > 0, ids, ids + M))
+        cohort_ids = jnp.sort(order[:cohort_size])
 
         def gather(x):
             return jnp.take(x, cohort_ids, axis=0)
@@ -193,25 +452,25 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
         cohort_batches = jax.tree.map(gather, client_batches)
         cohort_res = jax.tree.map(gather, residuals)
         mask_keys = jnp.take(
-            jax.random.split(mask_key, cfg.num_clients), cohort_ids, axis=0)
+            jax.random.split(mask_key, M), cohort_ids, axis=0)
 
         uploads, new_res, losses = stacked_client_update(
             loss_fn, params, cohort_batches, mask_keys, cfg.client,
             cohort_res, cfg.error_feedback)
 
         wired = apply_wire(uploads)
-        weights = valid * jnp.take(n_samples, cohort_ids)
-        new_params = agg_fn(params, wired, weights, cfg.client.upload)
+        valid = gather(part)
+        arr_c = gather(arrived)
+        w_c = gather(weights)
+        new_params = agg_fn(params, wired, w_c, cfg.client.upload)
         if cfg.error_feedback:
             if wired is not uploads:
-                # Same wire-loss feedback as the oracle round (bit-exact
-                # equivalence holds: both engines adjust identically).
                 new_res = jax.tree.map(
                     lambda r, u, w: r + (u - w), new_res, uploads, wired)
 
             def scatter(old, new, old_cohort):
-                vm = valid.reshape((-1,) + (1,) * (new.ndim - 1))
-                kept = jnp.where(vm > 0, new, old_cohort)
+                am = arr_c.reshape((-1,) + (1,) * (new.ndim - 1))
+                kept = jnp.where(am > 0, new, old_cohort)
                 return old.at[cohort_ids].set(kept)
 
             new_residuals = jax.tree.map(
@@ -219,46 +478,92 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
         else:
             new_residuals = residuals
 
+        new_norms = norms
+        if smp.adaptive:
+            obs = _row_l2(wired)
+            old_c = gather(norms)
+            upd = jnp.where(arr_c > 0,
+                            (1.0 - smp.ema) * old_c + smp.ema * obs, old_c)
+            new_norms = norms.at[cohort_ids].set(upd)
+
+        # Same empty-round convention as the oracle body: NaN, not 0.0.
+        n_part = jnp.sum(part)
         metrics = {
-            "mean_loss": jnp.sum(losses * valid)
-            / jnp.maximum(jnp.sum(valid), 1.0),
-            "num_sampled": jnp.sum(valid),
+            "mean_loss": jnp.where(
+                n_part > 0,
+                jnp.sum(losses * valid) / jnp.maximum(jnp.sum(valid), 1.0),
+                jnp.nan),
+            "num_sampled": n_part,
         }
-        return new_params, new_residuals, metrics
+        if drop is not None:
+            metrics["part_mask"] = part
+            metrics["arrived_mask"] = arrived
+            metrics["num_arrived"] = jnp.sum(arrived)
+        return new_params, new_residuals, new_norms, metrics
+
+    if smp.adaptive:
+        def round_fn(params, residuals, norms, client_batches, n_samples, t,
+                     key):
+            return round_impl(params, residuals, norms, client_batches,
+                              n_samples, t, key)
+    else:
+        def round_fn(params, residuals, client_batches, n_samples, t, key):
+            p, r, _, m = round_impl(params, residuals, None, client_batches,
+                                    n_samples, t, key)
+            return p, r, m
 
     return round_fn
 
 
 def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
                      cfg: FederatedConfig, cohort_size: int, *,
-                     codec=None, aggregator=None):
+                     codec=None, aggregator=None, sampler=None, hetero=None):
     """lax.scan-over-rounds fast path: one dispatch for a whole segment of
     rounds that share a cohort bucket.
 
     Returns ``scan_fn(params, residuals, client_batches, n_samples, ts,
     keys) -> (params, residuals, metrics)`` where ``ts``/``keys`` carry a
     leading segment-length axis and ``metrics`` leaves are stacked per
-    round.  Bit-identical to calling the single-round function in a Python
-    loop (same round body, scan just removes per-round dispatch)."""
+    round (adaptive samplers add a ``norms`` state argument/result after
+    ``residuals``, threaded through the scan carry).  Bit-identical to
+    calling the single-round function in a Python loop (same round body,
+    scan just removes per-round dispatch)."""
     if not (0 < cohort_size <= cfg.num_clients):
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
-    kw = dict(codec=codec, aggregator=aggregator)
+    kw = dict(codec=codec, aggregator=aggregator, sampler=sampler,
+              hetero=hetero)
     if cohort_size == cfg.num_clients:
         round_fn = make_federated_round(loss_fn, schedule, cfg, **kw)
     else:
         round_fn = make_cohort_round(loss_fn, schedule, cfg, cohort_size,
                                      **kw)
 
-    def scan_fn(params, residuals, client_batches, n_samples, ts, keys):
-        def body(carry, tk):
-            p, r = carry
-            t, k = tk
-            p, r, metrics = round_fn(p, r, client_batches, n_samples, t, k)
-            return (p, r), metrics
+    adaptive = sampler is not None and sampler.adaptive
+    if adaptive:
+        def scan_fn(params, residuals, norms, client_batches, n_samples, ts,
+                    keys):
+            def body(carry, tk):
+                p, r, nm = carry
+                t, k = tk
+                p, r, nm, metrics = round_fn(p, r, nm, client_batches,
+                                             n_samples, t, k)
+                return (p, r, nm), metrics
 
-        (params, residuals), metrics = jax.lax.scan(
-            body, (params, residuals), (ts, keys))
-        return params, residuals, metrics
+            (params, residuals, norms), metrics = jax.lax.scan(
+                body, (params, residuals, norms), (ts, keys))
+            return params, residuals, norms, metrics
+    else:
+        def scan_fn(params, residuals, client_batches, n_samples, ts, keys):
+            def body(carry, tk):
+                p, r = carry
+                t, k = tk
+                p, r, metrics = round_fn(p, r, client_batches, n_samples, t,
+                                         k)
+                return (p, r), metrics
+
+            (params, residuals), metrics = jax.lax.scan(
+                body, (params, residuals), (ts, keys))
+            return params, residuals, metrics
 
     return scan_fn

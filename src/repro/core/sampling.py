@@ -1,9 +1,18 @@
-"""Client sampling schedules (paper §3.2 static, §4.1 dynamic).
+"""Client sampling: how MANY clients per round, and WHICH ones.
 
-The paper's dynamic sampling anneals the participation fraction
-``c(t) = C * exp(-beta * t)`` (Eq. 3), floored so at least ``min_clients``
-clients participate.  Static sampling is the ``beta = 0`` special case but is
-kept as its own class because it is the paper's baseline (Alg. 1).
+Two orthogonal axes (DESIGN.md §5):
+
+* :class:`SamplingSchedule` — the paper's axis: the participation *fraction*
+  ``c(t)``.  Dynamic sampling anneals ``c(t) = C * exp(-beta * t)`` (Eq. 3),
+  floored so at least ``min_clients`` clients participate; static sampling
+  is the ``beta = 0`` special case but is kept as its own class because it
+  is the paper's baseline (Alg. 1).
+* :class:`ClientSampler` — beyond-paper: *which* ``m_t`` clients, chosen by
+  tracked update importance (Chen & Horváth, *Optimal Client Sampling*;
+  Ribero & Vikalo, threshold transmission), with aggregation weights that
+  keep the weighted FedAvg *unbiased* (property-tested in
+  ``tests/test_sampling.py``).  ``UniformSampler`` is the default and is
+  bit-identical to the schedule-only path.
 """
 
 from __future__ import annotations
@@ -21,6 +30,12 @@ __all__ = [
     "sample_clients",
     "participation_mask",
     "transport_cost",
+    "ClientSampler",
+    "UniformSampler",
+    "ImportanceSampler",
+    "ThresholdSampler",
+    "transmit_probabilities",
+    "get_sampler",
 ]
 
 
@@ -32,6 +47,7 @@ class SamplingSchedule:
     min_clients: int = 2
 
     def rate(self, t) -> jnp.ndarray:
+        """Participation fraction c(t) at round ``t`` (traced-friendly)."""
         raise NotImplementedError
 
     def num_clients(self, t, num_registered: int) -> jnp.ndarray:
@@ -90,6 +106,7 @@ class StaticSampling(SamplingSchedule):
     """Alg. 1: constant sampling fraction C."""
 
     def rate(self, t) -> jnp.ndarray:
+        """Constant participation fraction C, independent of t."""
         return jnp.full_like(jnp.asarray(t, jnp.float32), self.initial_rate)
 
 
@@ -100,6 +117,7 @@ class DynamicSampling(SamplingSchedule):
     beta: float = 0.1
 
     def rate(self, t) -> jnp.ndarray:
+        """Exponentially annealed participation fraction (Eq. 3)."""
         t = jnp.asarray(t, jnp.float32)
         return self.initial_rate * jnp.exp(-self.beta * t)
 
@@ -172,3 +190,240 @@ def rounds_for_budget(schedule: SamplingSchedule, gamma: float,
             return t - 1
         if t > 1_000_000:  # pragma: no cover - safety
             return t
+
+
+# ---------------------------------------------------------------------------
+# Client samplers: WHICH m_t clients, with unbiased aggregation weights
+# ---------------------------------------------------------------------------
+# The schedule fixes HOW MANY clients round t uses; a ClientSampler picks
+# WHICH ones and emits the per-client aggregation coefficients that keep the
+# server's weighted FedAvg an unbiased estimator of the full-population
+# update (DESIGN.md §5).  All selection math is (M,)-shaped jnp on the round
+# key — cheap enough that BOTH the oracle and the cohort engine recompute it
+# identically, which is what keeps cohort gathers bit-exact under
+# non-uniform selection.
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSampler:
+    """Base client-selection policy.
+
+    Contract of :meth:`select`: return ``(part, weights)`` where ``part`` is
+    a float 0/1 participation mask of shape ``(M,)`` (who computes and
+    uploads this round) and ``weights`` are the aggregation coefficients
+    handed to the :class:`repro.core.strategy.Aggregator`.  When
+    ``normalize`` is True the aggregator re-normalizes ``weights`` to sum
+    to 1 (the paper's self-normalized FedAvg); when False the weights are
+    already Horvitz-Thompson-corrected so that
+    ``E[sum_i weights_i * u_i] = sum_i (n_i / n) * u_i`` exactly.
+
+    ``adaptive`` samplers consume ``norms`` — the server-tracked EMA of each
+    client's observed (post-wire) update L2 norm — and the round program
+    threads an updated norms vector back out as state.
+    """
+
+    name = "uniform"
+    adaptive = False        # needs per-client norm feedback between rounds
+    normalize = True        # aggregator re-normalizes weights to sum to 1
+    ema = 0.5               # norm-tracker update rate (adaptive samplers)
+
+    def cohort_bucket(self, schedule: SamplingSchedule, m: int,
+                      num_registered: int) -> int:
+        """Static cohort-buffer size for a round with nominal m participants.
+
+        Host-side mirror of the traced participant cap: the cohort engine
+        sizes its gather buffer with this, so it must upper-bound the number
+        of ``part > 0`` clients :meth:`select` can emit for the same
+        ``m``."""
+        return schedule.bucket_for(m, num_registered)
+
+    def select(self, key: jax.Array, schedule: SamplingSchedule, t,
+               num_registered: int, n_samples: jnp.ndarray,
+               norms: jnp.ndarray | None = None):
+        """Draw round ``t``'s participants; see class docstring for the
+        ``(part, weights)`` contract."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler(ClientSampler):
+    """The paper's selection rule: m_t clients uniformly at random.
+
+    Delegates to :func:`participation_mask` with the same key, so rounds
+    built with the default sampler are bit-identical to the schedule-only
+    path (property-tested in ``tests/test_sampling.py``).  Weights are the
+    masked dataset sizes; the aggregator self-normalizes them (Eq. 2).
+    """
+
+    def select(self, key, schedule, t, num_registered, n_samples, norms=None):
+        """Uniform m_t-subset: ``part`` from :func:`participation_mask`,
+        weights = ``part * n_samples`` (self-normalized downstream)."""
+        part = participation_mask(key, schedule, t, num_registered)
+        return part, part * n_samples
+
+
+@dataclasses.dataclass(frozen=True)
+class ImportanceSampler(ClientSampler):
+    """Importance sampling by tracked update norm (Optimal-Client-Sampling
+    style), exactly unbiased via with-replacement draws.
+
+    Round ``t`` draws ``m_t`` client slots i.i.d. from
+    ``p_i ∝ (1 - exploration) * norm_i / Σ norm + exploration / M`` (the
+    exploration floor keeps every p_i > 0 so the correction below never
+    divides by zero and unseen clients keep getting observed).  A client
+    drawn ``c_i`` times uploads once and is counted with weight
+    ``c_i * n_i / (n * m_t * p_i)`` — the classic importance-sampled FedAvg
+    estimator, unbiased for ANY p:  ``E[c_i] = m_t * p_i``, so
+    ``E[Σ w_i u_i] = Σ (n_i/n) u_i`` (property-tested over seeds in
+    ``tests/test_sampling.py``).  Distinct participants ≤ m_t, so the
+    schedule's cohort bucket still fits.
+    """
+
+    name = "importance"
+    adaptive = True
+    normalize = False
+    exploration: float = 0.1
+    ema: float = 0.5
+
+    def __post_init__(self):
+        """Validate the exploration mixing coefficient."""
+        if not 0.0 < self.exploration <= 1.0:
+            raise ValueError(
+                f"exploration must be in (0, 1], got {self.exploration}")
+
+    def probabilities(self, norms: jnp.ndarray) -> jnp.ndarray:
+        """Selection distribution over clients: normalized tracked norms
+        mixed with a uniform exploration floor (valid distribution: >= 0,
+        sums to 1, every entry >= exploration / M)."""
+        norms = jnp.maximum(jnp.asarray(norms, jnp.float32), 0.0)
+        m = norms.shape[0]
+        p = norms / jnp.maximum(jnp.sum(norms), 1e-12)
+        return (1.0 - self.exploration) * p + self.exploration / m
+
+    def select(self, key, schedule, t, num_registered, n_samples, norms=None):
+        """Multinomial(m_t, p) slot draws -> (distinct-participant mask,
+        Horvitz-Thompson count weights)."""
+        m = schedule.num_clients(t, num_registered)
+        p = self.probabilities(norms)
+        draws = jax.random.categorical(key, jnp.log(p), shape=(num_registered,))
+        active = (jnp.arange(num_registered) < m).astype(jnp.float32)
+        counts = jnp.sum(
+            jax.nn.one_hot(draws, num_registered, dtype=jnp.float32)
+            * active[:, None], axis=0)
+        part = (counts > 0).astype(jnp.float32)
+        n_total = jnp.maximum(jnp.sum(n_samples), 1e-12)
+        weights = counts * n_samples / (
+            n_total * jnp.maximum(m.astype(jnp.float32), 1.0) * p)
+        return part, weights
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdSampler(ClientSampler):
+    """Norm-threshold transmission (Ribero-Vikalo style), debiased.
+
+    Each client transmits independently with probability
+    ``p_i = min(1, norm_i / tau)`` where ``tau`` solves
+    ``Σ min(1, norm_i / tau) = m_t`` (:func:`transmit_probabilities` — the
+    optimal-sampling water-filling solution): clients whose tracked update
+    norm clears the threshold always transmit, the rest transmit with
+    probability proportional to how close they come.  Horvitz-Thompson
+    weights ``n_i / (n * p_i)`` make the aggregate unbiased.
+
+    Independent transmission has a *random* participant count (mean m_t),
+    so the cohort buffer is sized to ``slack * m_t`` (next bucket) and both
+    engines apply the SAME deterministic cap — selected clients ranked by
+    their uniform draw, overflow beyond the bucket dropped — keeping cohort
+    gathers bit-exact vs the oracle.  P(count > 2 m_t) is exponentially
+    small, so the cap's bias is negligible (covered by the statistical
+    tolerance of the unbiasedness test).
+    """
+
+    name = "threshold"
+    adaptive = True
+    normalize = False
+    slack: float = 2.0
+    ema: float = 0.5
+
+    def __post_init__(self):
+        """Validate the cohort-buffer slack factor."""
+        if self.slack < 1.0:
+            raise ValueError(f"slack must be >= 1, got {self.slack}")
+
+    def cohort_bucket(self, schedule, m, num_registered):
+        """Bucket for ``slack * m`` participants (random count, mean m)."""
+        target = min(num_registered, int(np.ceil(self.slack * m)))
+        return schedule.bucket_for(target, num_registered)
+
+    def _cap(self, schedule, m, num_registered):
+        """Traced participant cap == the host-side cohort bucket."""
+        ladder = jnp.asarray(schedule.bucket_ladder(num_registered), jnp.int32)
+        target = jnp.minimum(
+            jnp.ceil(self.slack * m.astype(jnp.float32)),
+            num_registered).astype(jnp.int32)
+        return jnp.min(jnp.where(ladder >= target, ladder, num_registered))
+
+    def select(self, key, schedule, t, num_registered, n_samples, norms=None):
+        """Independent transmit draws at the water-filled probabilities,
+        capped at the cohort bucket; Horvitz-Thompson ``1/p`` weights."""
+        m = schedule.num_clients(t, num_registered)
+        p = transmit_probabilities(norms, m)
+        u = jax.random.uniform(key, (num_registered,))
+        sel = u < p
+        # Deterministic overflow cap, identical in oracle and cohort form:
+        # selected clients ranked by their uniform draw (the "most firmly"
+        # selected — smallest u — survive), capped at the bucket size.
+        ranks = jnp.argsort(jnp.argsort(jnp.where(sel, u, 2.0)))
+        cap = self._cap(schedule, m, num_registered)
+        part = (sel & (ranks < cap)).astype(jnp.float32)
+        n_total = jnp.maximum(jnp.sum(n_samples), 1e-12)
+        weights = part * n_samples / (n_total * jnp.maximum(p, 1e-12))
+        return part, weights
+
+
+def transmit_probabilities(norms: jnp.ndarray, m) -> jnp.ndarray:
+    """Water-filling transmit probabilities: ``p_i = min(1, norms_i / tau)``
+    with ``tau`` chosen so ``Σ p_i = m`` (Chen & Horváth's optimal-sampling
+    solution; also the debiased form of Ribero-Vikalo threshold
+    transmission).
+
+    Static-shape and fully traced: for every candidate count ``K`` of
+    saturated clients (the K largest norms at p = 1), the implied threshold
+    is ``tau_K = (Σ of the other norms) / (m - K)``; the solution is the
+    first K whose tau clears the (K+1)-th largest norm.  ``m >= M`` returns
+    all-ones.
+    """
+    a = jnp.maximum(jnp.asarray(norms, jnp.float32), 1e-12)
+    num = a.shape[0]
+    m_f = jnp.asarray(m, jnp.float32)
+    desc = jnp.sort(a)[::-1]
+    csum = jnp.cumsum(desc)
+    total = csum[-1]
+    ks = jnp.arange(num, dtype=jnp.float32)
+    # tail(K) = sum of the M-K smallest norms = total - (K largest)
+    tails = total - jnp.concatenate([jnp.zeros((1,)), csum[:-1]])
+    denom = m_f - ks
+    tau_k = jnp.where(denom > 0, tails / jnp.maximum(denom, 1e-12), jnp.inf)
+    feasible = (denom > 0) & (tau_k >= desc)
+    k_star = jnp.argmax(feasible)          # first feasible K
+    tau = tau_k[k_star]
+    p = jnp.minimum(1.0, a / tau)
+    return jnp.where(m_f >= num, jnp.ones_like(p), p)
+
+
+_SAMPLERS = {
+    "uniform": UniformSampler,
+    "importance": ImportanceSampler,
+    "threshold": ThresholdSampler,
+}
+
+
+def get_sampler(name: str, **kwargs) -> ClientSampler:
+    """Build a sampler by name: ``uniform`` | ``importance`` | ``threshold``
+    (kwargs forward to the sampler's constructor)."""
+    try:
+        cls = _SAMPLERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler {name!r}; known: {', '.join(sorted(_SAMPLERS))}"
+        ) from None
+    return cls(**kwargs)

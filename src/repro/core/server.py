@@ -15,6 +15,13 @@ round-tripped through the codec's wire format inside the round program, and
 wire pytree (``UploadCodec.wire_bytes``, shape-only via ``eval_shape``) —
 not the ``pytree_payload_bytes`` estimate earlier revisions reported.
 
+Two further scenario axes ride on the strategy (DESIGN.md §5): adaptive
+client samplers (importance/threshold) make the server carry a per-client
+update-norm tracker as round-program state next to the error-feedback
+residuals, and a ``HeteroModel`` fleet adds in-round upload dropout plus
+host-side clock simulation — ``RoundRecord.sim_round_s`` (straggler
+wall-clock on the simulated fleet), ``straggler_s`` and ``dropped``.
+
 Two execution engines (DESIGN.md §3.5):
 
 * ``engine="cohort"`` (default): per round, only the sampled cohort is
@@ -52,6 +59,7 @@ import numpy as np
 from repro.core.client import local_update_flops
 from repro.core.compression import pytree_num_params
 from repro.core.federated import FederatedConfig
+from repro.core.hetero import simulate_round
 from repro.core.sampling import SamplingSchedule
 
 PyTree = Any
@@ -61,6 +69,13 @@ __all__ = ["RoundRecord", "FederatedServer"]
 
 @dataclasses.dataclass
 class RoundRecord:
+    """Per-round ledger entry: who participated, what it cost (measured
+    wall-clock, exact wire bytes) and — when the strategy carries a
+    :class:`repro.core.hetero.HeteroModel` — what the round would have cost
+    on the simulated fleet (``sim_round_s`` straggler wall-clock,
+    ``straggler_s`` tail above the median arrival, ``dropped`` lost
+    uploads)."""
+
     round: int
     num_sampled: int
     mean_loss: float
@@ -71,6 +86,9 @@ class RoundRecord:
     compile_s: float = 0.0      # program build time; nonzero on bucket-change rounds
     cohort_size: int = 0        # padded cohort buffer actually executed
     flop_proxy: float = 0.0     # 6·params·examples·epochs·cohort_size (proxy)
+    sim_round_s: float = 0.0    # simulated fleet wall-clock (hetero only)
+    straggler_s: float = 0.0    # sim straggler tail: max - median arrival
+    dropped: int = 0            # uploads lost on the simulated fleet
 
 
 class FederatedServer:
@@ -125,6 +143,16 @@ class FederatedServer:
         self._residuals = jax.tree.map(
             lambda p: jnp.zeros((num_clients,) + p.shape, p.dtype),
             init_params)
+        # Adaptive samplers (importance/threshold) feed on a per-client
+        # EMA of observed post-wire update norms; ones = "everyone looks
+        # equally important" until data arrives, so round 1 ~ uniform.
+        self._adaptive = strategy.sampler.adaptive
+        self._norms = (jnp.ones((num_clients,), jnp.float32)
+                       if self._adaptive else None)
+        # Simulated-fleet traits (static per-client draws) for the hetero
+        # round clock; None on the paper's ideal homogeneous fleet.
+        self._traits = (strategy.hetero.client_traits(num_clients)
+                        if strategy.hetero is not None else None)
         self.history: List[RoundRecord] = []
         self._num_params = pytree_num_params(init_params)
         # Exact per-client-upload wire bytes: the codec's encode traced
@@ -180,11 +208,16 @@ class FederatedServer:
     def _segments(self, rounds: int, eval_rounds) -> List[tuple]:
         """Split 1..rounds into (bucket, [t...]) segments: consecutive rounds
         sharing a cohort bucket, broken at eval rounds (the host needs Θ_t
-        there).  engine="full" pins every bucket to the full population."""
+        there).  engine="full" pins every bucket to the full population.
+        Bucket sizing is sampler-aware: ``ClientSampler.cohort_bucket``
+        upper-bounds the participant count its selection can emit (e.g. the
+        threshold sampler's random arrival count gets a slack bucket)."""
         M = self.cfg.num_clients
+        sampler = self.strategy.sampler
         plan = self.schedule.round_buckets(rounds, M)
         segments: List[tuple] = []
-        for t, (_m, bucket) in zip(range(1, rounds + 1), plan):
+        for t, (m, _bucket) in zip(range(1, rounds + 1), plan):
+            bucket = sampler.cohort_bucket(self.schedule, m, M)
             b_eff = bucket if self.engine == "cohort" else M
             if (segments and self.scan_rounds
                     and segments[-1][0] == b_eff
@@ -198,6 +231,14 @@ class FederatedServer:
     def run(self, client_batches: PyTree, n_samples: np.ndarray,
             rounds: int, eval_every: int = 0,
             eval_data: Any = None) -> List[RoundRecord]:
+        """Run ``rounds`` communication rounds, appending to ``history``.
+
+        ``client_batches``: pytree with leading (num_clients, num_batches,
+        B, ...) axes; ``n_samples``: (num_clients,) per-client dataset
+        sizes; ``eval_every``: evaluate ``eval_fn(params, eval_data)``
+        every that many rounds (and on the last).  Returns the full
+        history list.
+        """
         gamma = self.cfg.client.masking.gamma \
             if self.cfg.client.masking.mode != "none" else 1.0
         wire_bytes = self.client_upload_bytes
@@ -222,16 +263,28 @@ class FederatedServer:
             else:
                 t_arg = jnp.asarray(ts[0], jnp.float32)
                 key_arg = subs[0]
-            args = (self.params, self._residuals, client_batches, n_samples,
-                    t_arg, key_arg)
+            if self._adaptive:
+                args = (self.params, self._residuals, self._norms,
+                        client_batches, n_samples, t_arg, key_arg)
+            else:
+                args = (self.params, self._residuals, client_batches,
+                        n_samples, t_arg, key_arg)
             compiled, compile_s = self._get_compiled(bucket, seg_len, args)
             t0 = time.perf_counter()
-            self.params, self._residuals, metrics = compiled(*args)
+            if self._adaptive:
+                (self.params, self._residuals, self._norms,
+                 metrics) = compiled(*args)
+            else:
+                self.params, self._residuals, metrics = compiled(*args)
             jax.block_until_ready(self.params)
             wall = time.perf_counter() - t0
 
             num_sampled = np.atleast_1d(np.asarray(metrics["num_sampled"]))
             mean_loss = np.atleast_1d(np.asarray(metrics["mean_loss"]))
+            if self._traits is not None:
+                part_masks = np.atleast_2d(np.asarray(metrics["part_mask"]))
+                arrived_masks = np.atleast_2d(
+                    np.asarray(metrics["arrived_mask"]))
             for i, t in enumerate(ts):
                 m = float(num_sampled[i])
                 rec = RoundRecord(
@@ -245,6 +298,13 @@ class FederatedServer:
                     cohort_size=bucket,
                     flop_proxy=float(flops_per_client) * bucket,
                 )
+                if self._traits is not None:
+                    sim = simulate_round(self._traits, part_masks[i],
+                                         arrived_masks[i],
+                                         float(flops_per_client), wire_bytes)
+                    rec.sim_round_s = sim["sim_round_s"]
+                    rec.straggler_s = sim["straggler_s"]
+                    rec.dropped = sim["dropped"]
                 if t in eval_rounds and t == ts[-1]:
                     rec.eval_metric = float(self.eval_fn(self.params, eval_data))
                 self.history.append(rec)
@@ -252,14 +312,18 @@ class FederatedServer:
 
     # ---- reporting ------------------------------------------------------
     def total_transport_units(self) -> float:
+        """Cumulative client uploads in full-model units (Eq. 6 basis)."""
         return float(sum(r.transport_units for r in self.history))
 
     def total_transport_bytes(self) -> int:
+        """Cumulative EXACT wire bytes across all recorded rounds."""
         return int(sum(r.transport_bytes for r in self.history))
 
     def summary(self) -> Dict[str, Any]:
+        """Run-level roll-up of the history (loss, transport, timing; plus
+        the simulated-fleet clock and drop counts when hetero is on)."""
         evals = [r.eval_metric for r in self.history if r.eval_metric is not None]
-        return {
+        out = {
             "rounds": len(self.history),
             "final_loss": self.history[-1].mean_loss if self.history else float("nan"),
             "final_eval": evals[-1] if evals else float("nan"),
@@ -269,9 +333,16 @@ class FederatedServer:
             "num_params": self._num_params,
             "engine": self.engine,
             "strategy": self.strategy.name,
+            "sampler": self.strategy.sampler.name,
             # wire accounting now comes from the codec, not an estimate
             "codec": self.strategy.codec.name,
             "client_upload_bytes": self.client_upload_bytes,
             "compile_s": float(sum(r.compile_s for r in self.history)),
             "steady_wall_s": float(sum(r.wall_s for r in self.history)),
         }
+        if self._traits is not None:
+            out["hetero"] = self.strategy.hetero.profile
+            out["sim_total_s"] = float(
+                sum(r.sim_round_s for r in self.history))
+            out["dropped_uploads"] = int(sum(r.dropped for r in self.history))
+        return out

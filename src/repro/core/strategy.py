@@ -15,15 +15,22 @@ one frozen record composing four pluggable policies —
   the round applies to every client upload, with exact ``wire_bytes()``;
 * ``aggregator``  — an :class:`Aggregator` (weighted fedavg now; clipped
   fedavg as the first registry alternative, trimmed-mean et al. slot in
-  the same way).
+  the same way);
+* ``sampler``     — a :class:`repro.core.sampling.ClientSampler` picking
+  WHICH m_t clients (uniform / importance / threshold) with unbiased
+  aggregation weights (DESIGN.md §5);
+* ``hetero``      — an optional :class:`repro.core.hetero.HeteroModel`
+  putting the round on a heterogeneous simulated fleet (per-client
+  compute/latency/bandwidth/dropout; DESIGN.md §5).
 
 plus the client-side hyperparameters (local epochs, lr, momentum, upload
 semantics, error feedback).  ``build_round`` turns a strategy into the
 oracle / cohort / scan round program; ``FederatedServer.from_strategy``
 runs it end-to-end.  The string registry (``register`` / ``get``) holds the
 paper presets — ``"fig3"``, ``"fig4"``, ``"fig5"``, ``"dense-baseline"``
-(plus ``"fig5-int8"`` for the chained wire) — so a new scenario is a
-registry entry, not a plumbing change.
+(plus ``"fig5-int8"`` for the chained wire, ``"fig3-importance"`` for
+norm-adaptive selection, and ``"hetero-dropout"`` for the flaky-fleet
+scenario) — so a new scenario is a registry entry, not a plumbing change.
 
 Every preset preserves the cohort-vs-oracle bit-exactness guarantee of
 DESIGN.md §3.5 (property-tested per preset in tests/test_strategy.py): the
@@ -45,8 +52,11 @@ from repro.core.codecs import (ChainCodec, IdentityCodec, Int8Codec,
 from repro.core.federated import (FederatedConfig, fedavg_aggregate,
                                   make_cohort_round, make_cohort_scan,
                                   make_federated_round)
+from repro.core.hetero import HeteroModel
 from repro.core.masking import MaskingConfig
-from repro.core.sampling import DynamicSampling, SamplingSchedule, StaticSampling
+from repro.core.sampling import (ClientSampler, DynamicSampling,
+                                 ImportanceSampler, SamplingSchedule,
+                                 StaticSampling, UniformSampler)
 
 PyTree = Any
 
@@ -92,24 +102,29 @@ class MaskPolicy:
 
     @classmethod
     def none(cls) -> "MaskPolicy":
+        """Dense uploads: every delta entry survives."""
         return cls()
 
     @classmethod
     def random(cls, gamma: float, **kw) -> "MaskPolicy":
+        """Keep a random ``gamma`` fraction of each maskable leaf."""
         return cls(mode="random", gamma=gamma, **kw)
 
     @classmethod
     def selective(cls, gamma: float, backend: str = "jnp", **kw) -> "MaskPolicy":
+        """Keep the top-``gamma`` fraction by magnitude (paper Alg. 4)."""
         return cls(mode="selective", gamma=gamma, backend=backend, **kw)
 
     @classmethod
     def from_masking_config(cls, cfg: MaskingConfig) -> "MaskPolicy":
+        """Lift a legacy :class:`MaskingConfig` into a policy record."""
         return cls(mode=cfg.mode, gamma=cfg.gamma,
                    backend="kernel" if cfg.use_kernel else "jnp",
                    min_leaf_size=cfg.min_leaf_size,
                    bisect_iters=cfg.bisect_iters)
 
     def masking_config(self) -> MaskingConfig:
+        """Lower the policy back to the client-side :class:`MaskingConfig`."""
         return MaskingConfig(gamma=self.gamma, mode=self.mode,
                              min_leaf_size=self.min_leaf_size,
                              bisect_iters=self.bisect_iters,
@@ -123,14 +138,20 @@ class MaskPolicy:
 class Aggregator:
     """Server-side combination rule over stacked client uploads.
 
-    ``fn(global_params, uploads, weights, upload_semantics) -> params`` with
-    a leading client axis on every ``uploads`` leaf.  Must treat
-    zero-weight rows as absent (the cohort/oracle equivalence relies on the
-    oracle's extra zero-weight clients being no-ops).
+    ``fn(global_params, uploads, weights, upload_semantics, normalize=True)
+    -> params`` with a leading client axis on every ``uploads`` leaf.
+    ``normalize=False`` means the sampler already folded its inverse
+    selection probabilities into ``weights`` (Horvitz-Thompson), so the fn
+    must use them as-is rather than re-normalizing to sum 1.  Legacy fns
+    without the ``normalize`` parameter still work under self-normalizing
+    samplers; pairing one with a Horvitz-Thompson sampler raises a
+    ``TypeError`` at round-build time.  Must treat zero-weight rows as
+    absent (the cohort/oracle equivalence relies on the oracle's extra
+    zero-weight clients being no-ops).
     """
 
     name: str
-    fn: Callable[[PyTree, PyTree, jnp.ndarray, str], PyTree]
+    fn: Callable[..., PyTree]
 
 
 FEDAVG = Aggregator("fedavg", fedavg_aggregate)
@@ -144,7 +165,8 @@ def clipped_fedavg(max_norm: float) -> Aggregator:
     themselves and then drop out of the weighted sum exactly as before.
     """
 
-    def agg(global_params, uploads, weights, upload_semantics):
+    def agg(global_params, uploads, weights, upload_semantics,
+            normalize=True):
         sq = sum(jnp.sum(jnp.square(u), axis=tuple(range(1, u.ndim)))
                  for u in jax.tree_util.tree_leaves(uploads))
         norm = jnp.sqrt(sq)
@@ -153,7 +175,7 @@ def clipped_fedavg(max_norm: float) -> Aggregator:
             lambda u: u * factor.reshape((-1,) + (1,) * (u.ndim - 1)),
             uploads)
         return fedavg_aggregate(global_params, clipped, weights,
-                                upload_semantics)
+                                upload_semantics, normalize=normalize)
 
     return Aggregator(f"clipped_fedavg({max_norm})", agg)
 
@@ -190,6 +212,8 @@ class FedStrategy:
     masking: MaskPolicy = MaskPolicy()
     codec: UploadCodec = IdentityCodec()
     aggregator: Aggregator = FEDAVG
+    sampler: ClientSampler = UniformSampler()
+    hetero: HeteroModel | None = None
     local_epochs: int = 1
     learning_rate: float = 0.05
     momentum: float = 0.0
@@ -198,6 +222,7 @@ class FedStrategy:
 
     # ---- derived configs -------------------------------------------------
     def client_config(self) -> ClientConfig:
+        """The per-client hyperparameter record this strategy implies."""
         return ClientConfig(local_epochs=self.local_epochs,
                             learning_rate=self.learning_rate,
                             momentum=self.momentum,
@@ -205,12 +230,14 @@ class FedStrategy:
                             upload=self.upload)
 
     def federated_config(self, num_clients: int) -> FederatedConfig:
+        """The population-level round config for ``num_clients`` clients."""
         return FederatedConfig(num_clients=num_clients,
                                client=self.client_config(),
                                error_feedback=self.error_feedback)
 
     # ---- functional updates ---------------------------------------------
     def replace(self, **overrides) -> "FedStrategy":
+        """Functional field update (frozen-record ``dataclasses.replace``)."""
         return dataclasses.replace(self, **overrides)
 
     def with_masking(self, masking: MaskPolicy, **overrides) -> "FedStrategy":
@@ -257,13 +284,17 @@ def build_round(strategy: FedStrategy, loss_fn: Callable, num_clients: int,
     bucketed cohort engine (requires ``cohort_size``); ``"scan"`` — the
     lax.scan-over-rounds fast path (requires ``cohort_size``; a
     ``cohort_size == num_clients`` scan wraps the oracle).  The strategy's
-    codec and aggregator are threaded into the round body, so every form
-    runs the same math.
+    codec, aggregator, client sampler and hetero model are threaded into
+    the round body, so every form runs the same math.  When
+    ``strategy.sampler.adaptive`` the returned program takes/returns an
+    extra ``norms`` state vector after ``residuals`` (see
+    ``repro.core.federated.make_federated_round``).
     """
     if form not in ("full", "cohort", "scan"):
         raise ValueError(f"unknown round form {form!r}")
     cfg = strategy.federated_config(num_clients)
-    kw = dict(codec=strategy.codec, aggregator=strategy.aggregator)
+    kw = dict(codec=strategy.codec, aggregator=strategy.aggregator,
+              sampler=strategy.sampler, hetero=strategy.hetero)
     if form == "full":
         return make_federated_round(loss_fn, strategy.sampling, cfg, **kw)
     if cohort_size is None:
@@ -282,6 +313,7 @@ _REGISTRY: Dict[str, FedStrategy] = {}
 
 
 def register(strategy: FedStrategy, overwrite: bool = False) -> FedStrategy:
+    """Add a strategy to the registry under its ``name`` (and return it)."""
     if not overwrite and strategy.name in _REGISTRY:
         raise ValueError(f"strategy {strategy.name!r} already registered")
     _REGISTRY[strategy.name] = strategy
@@ -289,6 +321,7 @@ def register(strategy: FedStrategy, overwrite: bool = False) -> FedStrategy:
 
 
 def names() -> Tuple[str, ...]:
+    """Sorted names of every registered strategy preset."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -339,3 +372,20 @@ register(get("fig5").with_masking(
     MaskPolicy.selective(0.5),
     codec=ChainCodec((SparseCodec(gamma=0.5), Int8Codec())),
     name="fig5-int8"))
+
+# "fig3-importance": beyond-paper — fig3's dynamic c(t) schedule, but the
+# m_t clients are CHOSEN by tracked update-norm importance with unbiased
+# Horvitz-Thompson reweighting (Optimal-Client-Sampling style, DESIGN.md
+# §5) instead of uniformly.
+register(FedStrategy(
+    name="fig3-importance",
+    sampling=DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2),
+    sampler=ImportanceSampler()))
+
+# "hetero-dropout": beyond-paper — full-participation dense rounds on the
+# flaky-mobile fleet: lognormal compute/latency/uplink spread and 20% of
+# uploads lost, metered as sim_round_s / dropped in the server records.
+register(FedStrategy(
+    name="hetero-dropout",
+    sampling=StaticSampling(initial_rate=1.0, min_clients=2),
+    hetero=HeteroModel(profile="flaky-mobile")))

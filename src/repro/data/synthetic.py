@@ -1,7 +1,7 @@
 """Synthetic stand-ins for MNIST / CIFAR-10 / WikiText-2.
 
 The container is offline, so the paper's datasets are replaced with
-statistically-matched synthetic generators (DESIGN.md §6):
+statistically-matched synthetic generators (DESIGN.md §7):
 
 * ``class_gaussian_images`` — K-class dataset where each class is an
   anisotropic Gaussian blob around a class-specific low-frequency template

@@ -1,4 +1,4 @@
-"""The paper's federated round at pod scale (DESIGN.md §3.3/§5).
+"""The paper's federated round at pod scale (DESIGN.md §3.3/§6).
 
 Mapping (cross-silo FL on a TPU pod):
 
@@ -19,7 +19,12 @@ Mapping (cross-silo FL on a TPU pod):
   *global* per-layer threshold of its delta without gathering it.
 
 Participation (dynamic sampling, Alg. 3) enters as a 0/1 weight vector
-computed on the host from the schedule — shapes stay static.
+computed on the host from the schedule — shapes stay static.  Non-uniform
+client samplers (DESIGN.md §5) reuse the same plumbing: run
+``ClientSampler.select`` eagerly on the host (it is plain (M,)-shaped jnp)
+and pass the returned *weights* as the participation vector with
+``FedPodConfig.normalize=False`` — the round then uses them as the final
+Horvitz-Thompson aggregation coefficients instead of re-normalizing.
 """
 
 from __future__ import annotations
@@ -63,14 +68,21 @@ class FedPodConfig:
     # INSIDE the shard, so what enters the cross-client psum is exactly
     # what survived the wire.  None = dense (identity) upload.
     codec: Any = None
+    # True (default): the participation vector is a 0/1 mask, weighted by
+    # n_samples and re-normalized to sum 1 (self-normalized FedAvg).
+    # False: the participation vector already IS the final aggregation
+    # weights (a non-uniform ClientSampler's Horvitz-Thompson coefficients,
+    # computed host-side) — used as given, n_samples ignored.
+    normalize: bool = True
 
     @classmethod
     def from_strategy(cls, strategy, num_clients: int,
                       local_steps: int = 2) -> "FedPodConfig":
-        """Collapse a FedStrategy onto the pod round: mask policy, codec and
-        learning rate come from the strategy record.  Sparse codec stages
-        are re-budgeted to the pod masks' per-first-axis-slice top-k
-        granularity (``with_axis0_slices``) so the wire never truncates a
+        """Collapse a FedStrategy onto the pod round: mask policy, codec,
+        learning rate and the sampler's weight semantics come from the
+        strategy record.  Sparse codec stages are re-budgeted to the pod
+        masks' per-first-axis-slice top-k granularity
+        (``with_axis0_slices``) so the wire never truncates a
         within-budget upload."""
         mp = strategy.masking
         return cls(num_clients=num_clients, local_steps=local_steps,
@@ -78,7 +90,8 @@ class FedPodConfig:
                    masking=mp.mode, bisect_iters=mp.bisect_iters,
                    min_leaf_size=mp.min_leaf_size,
                    use_kernel=mp.backend == "kernel",
-                   codec=with_axis0_slices(strategy.codec))
+                   codec=with_axis0_slices(strategy.codec),
+                   normalize=strategy.sampler.normalize)
 
 
 def _threshold_mask(delta: jax.Array, gamma: float, iters: int) -> jax.Array:
@@ -233,15 +246,19 @@ def make_fed_round(arch: ArchConfig, cfg: FedPodConfig, hints=None) -> Callable:
         # Each client's upload crosses the wire: encode -> wire pytree ->
         # decode through the strategy codec before the weighted reduction.
         masked = roundtrip_stacked(cfg.codec, masked)
-        w = participation * n_samples
-        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        if cfg.normalize:
+            w = participation * n_samples
+            w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        else:
+            w = participation          # pre-weighted (sampler coefficients)
         agg = _weighted_upload(w, masked)
         new_params = jax.tree.map(
             lambda p, a: (p + a.astype(p.dtype)), params, agg)
+        active = (participation > 0).astype(jnp.float32)
         metrics = {
-            "mean_loss": jnp.sum(losses * participation)
-            / jnp.maximum(jnp.sum(participation), 1.0),
-            "num_sampled": jnp.sum(participation),
+            "mean_loss": jnp.sum(losses * active)
+            / jnp.maximum(jnp.sum(active), 1.0),
+            "num_sampled": jnp.sum(active),
         }
         return new_params, metrics
 
@@ -265,7 +282,9 @@ def make_cohort_fed_round(arch: ArchConfig, cfg: FedPodConfig,
     Returns ``round(params, batches, n_samples, cohort_ids, valid, key)``
     where ``batches`` has the full (C, local_steps, ...) registered-client
     leading axes, ``cohort_ids`` is int32 (cohort_size,) and ``valid`` is
-    the 0/1 participation mask over the cohort (padding slots are 0).
+    the 0/1 participation mask over the cohort (padding slots are 0) — or,
+    with ``cfg.normalize=False``, the sampler's precomputed aggregation
+    weights (nonzero = participant).
 
     Masking caveat: ``masking="random"`` draws its keep-masks per shard
     (``fold_in(key, axis_index)`` over shard-local rows), so its random
@@ -311,10 +330,14 @@ def make_cohort_fed_round(arch: ArchConfig, cfg: FedPodConfig,
     def fed_round(params, batches, n_samples, cohort_ids, valid, key):
         cohort_batches = jax.tree.map(
             lambda x: jnp.take(x, cohort_ids, axis=0), batches)
-        w = valid * jnp.take(n_samples, cohort_ids)
-        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        if cfg.normalize:
+            w = valid * jnp.take(n_samples, cohort_ids)
+            w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        else:
+            w = valid                 # pre-weighted (sampler coefficients)
+        valid01 = (valid > 0).astype(jnp.float32)
         agg, loss_sum, valid_sum = cohort_shard(
-            params, cohort_batches, w, valid, key)
+            params, cohort_batches, w, valid01, key)
         new_params = jax.tree.map(
             lambda p, a: (p + a.astype(p.dtype)), params, agg)
         metrics = {

@@ -1,4 +1,4 @@
-"""Production meshes (DESIGN.md §5).
+"""Production meshes (DESIGN.md §6).
 
 Target: TPU v5e.  Single pod = 16x16 = 256 chips, axes ("data", "model").
 Multi-pod = 2 pods = 512 chips, axes ("pod", "data", "model") — the "pod"

@@ -1,6 +1,6 @@
 """Sharding rules: map every param / batch / cache leaf to a PartitionSpec.
 
-Strategy (DESIGN.md §5):
+Strategy (DESIGN.md §6):
 
 * **Params (standard training)** — 2D "FSDP x TP": the contraction-side
   dimension shards over the data axes (ZeRO-style), the output-side feature

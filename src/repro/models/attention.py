@@ -2,7 +2,7 @@
 path, single-token decode path with full / sliding(ring-buffer) / chunked KV
 caches.
 
-Design notes (DESIGN.md §5):
+Design notes (DESIGN.md §6):
 
 * Train/prefill never materialises the (T, S) logit matrix for the full
   sequence.  ``flash_attention`` scans over KV blocks with an online softmax

@@ -1,7 +1,7 @@
 """RWKV6 "Finch" blocks [arXiv:2404.05892]: data-dependent per-channel decay
 time-mix (wkv6) + squared-ReLU channel-mix.
 
-TPU adaptation (DESIGN.md §5): the recurrence
+TPU adaptation (DESIGN.md §6): the recurrence
 
     S_t = diag(w_t) S_{t-1} + k_t v_t^T          (per head, S in R^{D x D})
     y_t = r_t^T S_{t-1} + (r_t . u . k_t) v_t

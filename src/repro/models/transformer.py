@@ -337,7 +337,7 @@ def cross_entropy(logits: jax.Array, labels: jax.Array,
     class logit is extracted with a fused iota==label contraction, so vocab-
     (model-)sharded logits never all-gather, and ignored positions (weight
     0, e.g. the VLM vision prefix) are masked instead of sliced — slicing a
-    sequence-sharded logits tensor forces a full reshard (DESIGN.md §5)."""
+    sequence-sharded logits tensor forces a full reshard (DESIGN.md §6)."""
     V = logits.shape[-1]
     # No explicit logits.astype(f32): a materialised fp32 copy of the
     # (B, T, V) logits costs 3+ GB/device on the big-vocab archs.  The

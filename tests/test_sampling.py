@@ -1,14 +1,18 @@
-"""Sampling schedules (paper §3.2 / §4.1) + transport cost (Eq. 6)."""
+"""Sampling schedules (paper §3.2 / §4.1) + transport cost (Eq. 6) +
+client samplers (uniform / importance / threshold, DESIGN.md §5)."""
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from conftest import given, settings, st
 
-from repro.core.sampling import (DynamicSampling, StaticSampling,
-                                 cumulative_transport, participation_mask,
+from repro.core.sampling import (DynamicSampling, ImportanceSampler,
+                                 StaticSampling, ThresholdSampler,
+                                 UniformSampler, cumulative_transport,
+                                 get_sampler, participation_mask,
                                  rounds_for_budget, sample_clients,
-                                 transport_cost)
+                                 transmit_probabilities, transport_cost)
 
 
 def test_static_rate_constant():
@@ -129,3 +133,104 @@ def test_dynamic_cheaper_than_static_long_run():
     dy = DynamicSampling(initial_rate=1.0, beta=0.05)
     assert cumulative_transport(dy, 1.0, 100, M) < \
         cumulative_transport(st_, 1.0, 100, M)
+
+
+# ---- client samplers (DESIGN.md §5) ---------------------------------------
+def test_get_sampler():
+    assert isinstance(get_sampler("uniform"), UniformSampler)
+    assert isinstance(get_sampler("importance"), ImportanceSampler)
+    assert get_sampler("threshold", slack=3.0).slack == 3.0
+    with pytest.raises(ValueError, match="unknown sampler"):
+        get_sampler("bogus")
+    with pytest.raises(ValueError, match="exploration"):
+        ImportanceSampler(exploration=0.0)
+    with pytest.raises(ValueError, match="slack"):
+        ThresholdSampler(slack=0.5)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 30))
+@settings(max_examples=15, deadline=None)
+def test_uniform_sampler_bit_identical_to_schedule_path(seed, t):
+    """The default sampler IS the current schedule-only path: same key =>
+    the exact participation_mask draw, weights = mask * n_samples."""
+    M = 32
+    sched = DynamicSampling(initial_rate=1.0, beta=0.15, min_clients=2)
+    key = jax.random.PRNGKey(seed)
+    n = jnp.asarray(np.random.default_rng(seed).uniform(1, 5, M), jnp.float32)
+    part, weights = UniformSampler().select(key, sched, jnp.float32(t), M, n)
+    ref = participation_mask(key, sched, jnp.float32(t), M)
+    np.testing.assert_array_equal(np.asarray(part), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(weights), np.asarray(ref * n))
+
+
+def test_importance_probabilities_valid_distribution():
+    """p is a distribution: >= exploration floor, sums to 1, tracks norms."""
+    smp = ImportanceSampler(exploration=0.2)
+    norms = jnp.asarray([0.0, 1.0, 3.0, 0.5, 0.0, 2.0, 0.1, 1.4])
+    p = np.asarray(smp.probabilities(norms))
+    assert p.sum() == pytest.approx(1.0, rel=1e-6)
+    assert (p >= 0.2 / 8 - 1e-7).all()
+    assert p[2] == p.max() and p[2] > p[3] > p[0]
+
+
+@given(st.integers(1, 16), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_transmit_probabilities_waterfill(m, seed):
+    """Sum of transmit probs == m, probs in (0, 1], high norms saturate."""
+    M = 16
+    norms = np.random.default_rng(seed).uniform(0.01, 3.0, M)
+    p = np.asarray(transmit_probabilities(jnp.asarray(norms), m))
+    assert p.sum() == pytest.approx(m, rel=1e-4)
+    assert (p > 0).all() and (p <= 1.0 + 1e-6).all()
+    if m < M:
+        # monotone in the norms: a larger norm never transmits less often
+        order = np.argsort(norms)
+        assert (np.diff(p[order]) >= -1e-6).all()
+    else:
+        np.testing.assert_allclose(p, 1.0)
+
+
+@pytest.mark.parametrize("sampler_name", ["importance", "threshold"])
+def test_adaptive_sampler_aggregation_unbiased(sampler_name):
+    """E[sum_i w_i u_i] == sum_i (n_i/n) u_i over selection seeds, for
+    fixed uploads and arbitrary tracked norms (statistical tolerance)."""
+    M = 12
+    sched = StaticSampling(initial_rate=0.5, min_clients=2)
+    rng = np.random.default_rng(3)
+    norms = jnp.asarray(rng.uniform(0.05, 2.0, M), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(M,)), jnp.float32)
+    n = jnp.asarray(rng.uniform(1.0, 4.0, M), jnp.float32)
+    target = float(jnp.sum(n / n.sum() * u))
+
+    smp = get_sampler(sampler_name)
+    assert smp.adaptive and not smp.normalize
+    sel = jax.jit(lambda k: smp.select(k, sched, jnp.float32(2.0), M, n,
+                                       norms))
+    ests = []
+    for seed in range(3000):
+        part, w = sel(jax.random.PRNGKey(seed))
+        w = np.asarray(w)
+        part = np.asarray(part)
+        assert (w[part == 0] == 0).all()       # weights live on participants
+        ests.append(float(w @ np.asarray(u)))
+    stderr = np.std(ests) / np.sqrt(len(ests))
+    assert abs(np.mean(ests) - target) < 4 * stderr + 1e-4, \
+        (np.mean(ests), target, stderr)
+
+
+def test_threshold_sampler_respects_cohort_bucket():
+    """Participant count never exceeds the sampler's advertised bucket."""
+    M = 16
+    sched = DynamicSampling(initial_rate=0.8, beta=0.1, min_clients=2)
+    smp = ThresholdSampler()
+    norms = jnp.asarray(np.random.default_rng(0).uniform(0.1, 2.0, M),
+                        jnp.float32)
+    n = jnp.ones((M,), jnp.float32)
+    for t in range(1, 8):
+        m = sched.num_clients_host(t, M)
+        bucket = smp.cohort_bucket(sched, m, M)
+        assert bucket in sched.bucket_ladder(M)
+        for seed in range(30):
+            part, _ = smp.select(jax.random.PRNGKey(seed * 97 + t), sched,
+                                 jnp.float32(t), M, n, norms)
+            assert int(np.asarray(part).sum()) <= bucket

@@ -286,6 +286,33 @@ def test_fedavg_is_default_aggregator():
     assert strategy.get("fig5").aggregator is FEDAVG
 
 
+def test_legacy_four_arg_aggregator_compat():
+    """A custom Aggregator registered against the PR-4 4-arg fn signature
+    keeps working wherever self-normalized weights suffice (plain AND
+    hetero rounds); pairing it with a Horvitz-Thompson sampler fails fast
+    at build time instead of silently re-normalizing debiased weights."""
+    from repro.core.hetero import HeteroModel
+    from repro.core.sampling import ImportanceSampler
+    from repro.core.federated import fedavg_aggregate
+
+    def legacy_fn(g, uploads, weights, upload_semantics):
+        return fedavg_aggregate(g, uploads, weights, upload_semantics)
+
+    legacy = Aggregator("legacy-fedavg", legacy_fn)
+    M = 4
+    loss_fn, params, batches, n = _problem(M)
+    st = strategy.get("fig3", aggregator=legacy, learning_rate=0.1)
+    s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=1)
+    s.run(batches, n, rounds=2)                       # plain path: fine
+
+    het = st.replace(hetero=HeteroModel(profile="mobile"))
+    build_round(het, loss_fn, M, form="full")         # normalize=True: fine
+
+    with pytest.raises(TypeError, match="normalize"):
+        build_round(st.replace(sampler=ImportanceSampler()), loss_fn, M,
+                    form="full")
+
+
 def test_error_feedback_absorbs_wire_loss():
     """With a lossy codec + error feedback, the wire's quantisation error
     re-enters the residual.  Invariant (full participation, uniform
