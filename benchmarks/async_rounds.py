@@ -1,0 +1,146 @@
+"""Sync barrier vs async buffered aggregation on faulty fleets (DESIGN.md §8).
+
+Runs the SAME strategy preset — sampling schedule, masking, codec, fleet —
+under both execution engines, so the curves isolate the execution
+semantics: the sync cohort engine pays the straggler barrier every round,
+the async engine (``repro.core.async_engine``) applies buffered flushes as
+uploads arrive, under deadlines + retry/backoff + quarantine:
+
+  PYTHONPATH=src python -m benchmarks.async_rounds            # full
+  PYTHONPATH=src python -m benchmarks.async_rounds --smoke    # CI chaos
+
+Writes ``BENCH_async.json`` (or ``BENCH_async.smoke.json``): one row per
+(fleet preset, engine) with the per-round loss curve against BOTH cost
+axes — cumulative simulated wall-clock and cumulative wire bytes — plus
+the async engine's fault ledger (timeouts, retries, quarantined, flushes,
+mean staleness).  The smoke variant injects NaN uploads
+(``corrupt_rate``) so CI exercises the quarantine gate end to end and
+fails if a poisoned upload ever reaches the global model.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import FederatedServer, strategy
+from repro.models import (classifier_accuracy, classifier_loss, init_lenet,
+                          lenet_forward)
+
+from benchmarks.common import IMG_SIZE, NUM_CLIENTS, mnist_like
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_async.json")
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_async.smoke.json")
+
+FLEETS = ("async-mobile", "async-flaky")
+
+
+def run_engine(preset: str, engine: str, rounds: int, seed: int = 0,
+               corrupt_rate: float = 0.0):
+    """One federated run of ``preset`` under ``engine``; returns the
+    loss-vs-cost curves plus (async only) the fault ledger."""
+    batches, n, eval_data = mnist_like(seed)
+    params = init_lenet(jax.random.PRNGKey(seed), IMG_SIZE, 1)
+    loss_fn = classifier_loss(lenet_forward)
+    eval_fn = jax.jit(classifier_accuracy(lenet_forward))
+
+    strat = strategy.get(preset, learning_rate=0.1)
+    if corrupt_rate > 0.0:
+        strat = strat.replace(async_cfg=dataclasses.replace(
+            strat.async_cfg, corrupt_rate=corrupt_rate))
+    server = FederatedServer.from_strategy(
+        strat, loss_fn, params, NUM_CLIENTS, eval_fn=eval_fn, seed=seed,
+        engine=engine)
+    server.run(batches, n, rounds, eval_every=rounds, eval_data=eval_data)
+
+    if corrupt_rate > 0.0 and engine == "async":
+        # the chaos check CI rides on: poisoned uploads must never reach Θ
+        for leaf in jax.tree_util.tree_leaves(server.params):
+            assert np.isfinite(np.asarray(leaf)).all(), \
+                "quarantine gate leaked a non-finite upload into params"
+
+    loss = [r.mean_loss for r in server.history]
+    cum_bytes = np.cumsum([r.transport_bytes for r in server.history])
+    cum_sim_s = np.cumsum([r.sim_round_s for r in server.history])
+    s = server.summary()
+    row = {
+        "fleet": preset,
+        "engine": engine,
+        "rounds": rounds,
+        "loss_curve": [round(v, 4) for v in loss],
+        "cum_bytes_curve": [int(v) for v in cum_bytes],
+        "cum_sim_s_curve": [round(float(v), 2) for v in cum_sim_s],
+        "final_loss": round(s["final_loss"], 4),
+        "final_eval": round(s["final_eval"], 4),
+        "transport_bytes": s["transport_bytes"],
+        "sim_total_s": round(s["sim_total_s"], 2),
+        "dropped_uploads": s["dropped_uploads"],
+        "steady_wall_s": round(s["steady_wall_s"], 4),
+    }
+    if engine == "async":
+        row.update(
+            timeouts=s["timeouts"], retries=s["retries"],
+            quarantined=s["quarantined"], flushes=s["flushes"],
+            mean_staleness=round(s["mean_staleness"], 3),
+        )
+    return row
+
+
+def run(rounds: int = 24, seed: int = 0, corrupt_rate: float = 0.0):
+    """Both fleets x both engines, plus per-fleet headline deltas: how much
+    simulated wall-clock and how many wire bytes the async engine spends
+    to reach the sync run's final loss (None if it never does)."""
+    rows = []
+    for preset in FLEETS:
+        pair = {}
+        for engine in ("cohort", "async"):
+            row = run_engine(preset, engine, rounds, seed=seed,
+                             corrupt_rate=corrupt_rate)
+            pair[engine] = row
+            rows.append(row)
+        target = pair["cohort"]["final_loss"]
+        b, t = _cost_to_target(pair["async"], target)
+        pair["async"]["target_loss"] = target
+        pair["async"]["bytes_to_sync_loss"] = b
+        pair["async"]["sim_s_to_sync_loss"] = t
+    return rows
+
+
+def _cost_to_target(row, target_loss):
+    """First-round cumulative (bytes, sim seconds) at which the run's loss
+    reaches ``target_loss``; empty rounds report NaN loss and are
+    skipped."""
+    for loss, b, t in zip(row["loss_curve"], row["cum_bytes_curve"],
+                          row["cum_sim_s_curve"]):
+        if np.isfinite(loss) and loss <= target_loss:
+            return int(b), float(t)
+    return None, None
+
+
+def main():
+    """CLI entry: full bench, or --smoke chaos rows for the CI artifact
+    (short run WITH fault injection, so the quarantine path executes)."""
+    from benchmarks.common import fmt_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3-round CI chaos smoke with corrupt_rate=0.3 "
+                         "(writes BENCH_async.smoke.json)")
+    args = ap.parse_args()
+    rounds = 3 if args.smoke else 24
+    corrupt = 0.3 if args.smoke else 0.0
+    rows = run(rounds=rounds, corrupt_rate=corrupt)
+    path = SMOKE_PATH if args.smoke else OUT_PATH
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    brief = [{k: v for k, v in r.items()
+              if not k.endswith("_curve")} for r in rows]
+    print(fmt_rows(brief))
+
+
+if __name__ == "__main__":
+    main()

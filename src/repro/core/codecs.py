@@ -36,8 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import (decode_sparse, dequantize_int8,
-                                    encode_sparse, quantize_int8)
+from repro.core.compression import (_is_concrete, decode_sparse,
+                                    dequantize_int8, encode_sparse,
+                                    quantize_int8)
 
 PyTree = Any
 
@@ -51,6 +52,22 @@ __all__ = [
     "roundtrip_stacked",
     "with_axis0_slices",
 ]
+
+
+def _reject_nonfinite(leaf: Any, codec_name: str) -> Any:
+    """Decode-boundary validation shared by every codec: a *concrete*
+    (host-side, untraced) float payload carrying NaN/Inf raises
+    ``ValueError`` before it can reach aggregation or error-feedback
+    state.  Traced payloads pass through — inside a jitted round the
+    async engine's quarantine gate masks non-finite rows instead
+    (``repro.core.async_engine``)."""
+    if _is_concrete(leaf):
+        arr = np.asarray(leaf)
+        if (np.issubdtype(arr.dtype, np.floating) and arr.size
+                and not np.isfinite(arr).all()):
+            raise ValueError(
+                f"{codec_name} decode: payload contains non-finite values")
+    return leaf
 
 
 def _leaf_nbytes(leaf: Any) -> int:
@@ -103,8 +120,9 @@ class IdentityCodec(UploadCodec):
         return tree
 
     def decode(self, wire: PyTree) -> PyTree:
-        """The upload IS the wire pytree."""
-        return wire
+        """The upload IS the wire pytree — after the non-finite gate."""
+        return jax.tree_util.tree_map(
+            lambda leaf: _reject_nonfinite(leaf, "identity"), wire)
 
     def roundtrip(self, tree: PyTree) -> PyTree:
         """Free: dense pass-through loses nothing."""
@@ -165,9 +183,11 @@ class SparseCodec(UploadCodec):
         return jax.tree_util.tree_map(enc, tree)
 
     def decode(self, wire: PyTree) -> PyTree:
-        """Scatter every COO leaf back to dense; pass dense leaves."""
+        """Scatter every COO leaf back to dense; pass dense leaves (after
+        the non-finite gate — COO values are checked in decode_sparse)."""
         return jax.tree_util.tree_map(
-            lambda leaf: decode_sparse(leaf) if _is_coo(leaf) else leaf,
+            lambda leaf: (decode_sparse(leaf) if _is_coo(leaf)
+                          else _reject_nonfinite(leaf, self.name)),
             wire, is_leaf=_is_coo)
 
 
@@ -194,9 +214,12 @@ class Int8Codec(UploadCodec):
         return jax.tree_util.tree_map(enc, tree)
 
     def decode(self, wire: PyTree) -> PyTree:
-        """Dequantise every (q, scale) leaf back to float32."""
+        """Dequantise every (q, scale) leaf back to float32; float
+        pass-through leaves hit the non-finite gate (q8 scales are checked
+        in dequantize_int8)."""
         return jax.tree_util.tree_map(
-            lambda leaf: dequantize_int8(leaf) if _is_q8(leaf) else leaf,
+            lambda leaf: (dequantize_int8(leaf) if _is_q8(leaf)
+                          else _reject_nonfinite(leaf, "int8")),
             wire, is_leaf=_is_q8)
 
 

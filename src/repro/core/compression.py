@@ -169,7 +169,9 @@ def decode_sparse(payload: Dict[str, jax.Array]) -> jax.Array:
     Malformed payloads fail loudly instead of silently scatter-adding
     garbage: missing keys, index/value length mismatch, non-integer
     indices, or (when the payload is concrete, i.e. not traced)
-    out-of-range indices all raise ``ValueError``.
+    out-of-range indices or non-finite values all raise ``ValueError``.
+    Traced payloads cannot raise; the in-round quarantine gate
+    (``repro.core.async_engine``) masks non-finite rows instead.
     """
     missing = {"indices", "values", "shape"} - set(payload)
     if missing:
@@ -197,6 +199,12 @@ def decode_sparse(payload: Dict[str, jax.Array]) -> jax.Array:
             raise ValueError(
                 f"sparse indices out of range [0, {size}): "
                 f"[{idx.min()}, {idx.max()}]")
+    if _is_concrete(values):
+        v = np.asarray(values)
+        if (np.issubdtype(v.dtype, np.floating) and v.size
+                and not np.isfinite(v).all()):
+            raise ValueError(
+                "sparse payload values contain non-finite entries")
     out = jnp.zeros((size,), values.dtype)
     out = out.at[indices].add(values)
     return out.reshape(shape)
@@ -224,7 +232,7 @@ def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
 
 def dequantize_int8(payload: Dict[str, jax.Array]) -> jax.Array:
     """Dequantize an int8 payload; malformed payloads raise ``ValueError``
-    (missing keys, non-int8 values, non-scalar scale)."""
+    (missing keys, non-int8 values, non-scalar or non-finite scale)."""
     missing = {"q", "scale"} - set(payload)
     if missing:
         raise ValueError(f"int8 payload missing keys {sorted(missing)}")
@@ -235,6 +243,9 @@ def dequantize_int8(payload: Dict[str, jax.Array]) -> jax.Array:
     if getattr(scale, "ndim", 0) != 0:
         raise ValueError(
             f"int8 payload scale must be a scalar, got shape {scale.shape}")
+    if _is_concrete(scale) and not np.isfinite(np.asarray(scale)):
+        raise ValueError(
+            f"int8 payload scale is non-finite: {np.asarray(scale)}")
     return q.astype(jnp.float32) * scale
 
 

@@ -56,7 +56,8 @@ from repro.core.sampling import (SamplingSchedule, UniformSampler,
 PyTree = Any
 
 __all__ = ["FederatedConfig", "make_federated_round", "make_cohort_round",
-           "make_cohort_scan", "cohort_select", "fedavg_aggregate"]
+           "make_cohort_scan", "make_cohort_compute", "cohort_select",
+           "fedavg_aggregate"]
 
 
 def _resolve_policies(codec, aggregator, normalize: bool = True):
@@ -357,6 +358,73 @@ def cohort_select(sample_key: jax.Array, schedule: SamplingSchedule, t,
     return cohort_ids, valid
 
 
+def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
+                        cfg: FederatedConfig, cohort_size: int, *,
+                        codec=None, sampler=None):
+    """The round's *client-side sweep*, shared between execution engines:
+    selection → cohort gather → local updates → wire round-trip — and
+    nothing after it (no dropout draw, no aggregation, no state commit).
+
+    The sync cohort engine (``make_cohort_round``) runs this then applies
+    its barrier aggregation in the same jitted program; the async buffered
+    engine (``repro.core.async_engine``) runs it as the round's *dispatch*
+    phase and applies the uploads event-by-event as they arrive.  Both see
+    the identical uploads because the whole sweep is a pure function of
+    ``(params, residuals, norms, t, sample_key, mask_key)``.
+
+    Returns ``compute(params, residuals, norms, client_batches, n_samples,
+    t, sample_key, mask_key) -> dict`` with keys ``part`` / ``weights``
+    (full ``(M,)`` selection mask and pre-dropout aggregation weights),
+    ``cohort_ids`` (sorted ascending, padded with the lowest-id
+    non-participants), ``cohort_res`` (round-entry residuals, gathered),
+    ``uploads`` / ``wired`` (pre-/post-wire stacked uploads), ``new_res``
+    (post-mask residual candidates) and ``losses`` — everything a barrier
+    or a buffer needs to finish the round.  Pass ``norms=None`` for
+    non-adaptive samplers.
+    """
+    if not (0 < cohort_size <= cfg.num_clients):
+        raise ValueError(
+            f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+    smp = sampler if sampler is not None else UniformSampler()
+
+    def compute(params, residuals, norms, client_batches, n_samples, t,
+                sample_key, mask_key):
+        M = cfg.num_clients
+        # Selection runs on the full (M,) arrays — identical ops to the
+        # oracle — then the cohort buffer gathers the sampler's ids.
+        part, weights = smp.select(sample_key, schedule, t, M, n_samples,
+                                   norms)
+        ids = jnp.arange(M, dtype=jnp.int32)
+        order = jnp.argsort(jnp.where(part > 0, ids, ids + M))
+        cohort_ids = jnp.sort(order[:cohort_size])
+
+        def gather(x):
+            return jnp.take(x, cohort_ids, axis=0)
+
+        cohort_batches = jax.tree.map(gather, client_batches)
+        cohort_res = jax.tree.map(gather, residuals)
+        mask_keys = jnp.take(
+            jax.random.split(mask_key, M), cohort_ids, axis=0)
+
+        uploads, new_res, losses = stacked_client_update(
+            loss_fn, params, cohort_batches, mask_keys, cfg.client,
+            cohort_res, cfg.error_feedback)
+
+        wired = roundtrip_stacked(codec, uploads)
+        return {
+            "part": part,
+            "weights": weights,
+            "cohort_ids": cohort_ids,
+            "cohort_res": cohort_res,
+            "uploads": uploads,
+            "new_res": new_res,
+            "losses": losses,
+            "wired": wired,
+        }
+
+    return compute
+
+
 def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                       cfg: FederatedConfig, cohort_size: int, *,
                       codec=None, aggregator=None, sampler=None, hetero=None):
@@ -429,36 +497,28 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
         return round_fn
 
     smp, drop = _round_extras(sampler, hetero, cfg)
-    apply_wire, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
+    _, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
+    compute = make_cohort_compute(loss_fn, schedule, cfg, cohort_size,
+                                  codec=codec, sampler=sampler)
 
     def round_impl(params, residuals, norms, client_batches, n_samples, t,
                    key):
-        M = cfg.num_clients
         sample_key, mask_key, drop_key = _split_round_key(
             key, drop is not None)
-        # Selection runs on the full (M,) arrays — identical ops to the
-        # oracle — then the cohort buffer gathers the sampler's ids.
-        part, weights = smp.select(sample_key, schedule, t, M, n_samples,
-                                   norms)
-        arrived, weights = _apply_dropout(part, weights, drop, drop_key,
+        # The client-side sweep (selection → gather → updates → wire) is
+        # the engine-shared compute; everything below is this engine's
+        # barrier: dropout draw, one-shot aggregation, state commit.
+        c = compute(params, residuals, norms, client_batches, n_samples, t,
+                    sample_key, mask_key)
+        part, cohort_ids = c["part"], c["cohort_ids"]
+        uploads, new_res, wired = c["uploads"], c["new_res"], c["wired"]
+        losses = c["losses"]
+        arrived, weights = _apply_dropout(part, c["weights"], drop, drop_key,
                                           smp.normalize)
-        ids = jnp.arange(M, dtype=jnp.int32)
-        order = jnp.argsort(jnp.where(part > 0, ids, ids + M))
-        cohort_ids = jnp.sort(order[:cohort_size])
 
         def gather(x):
             return jnp.take(x, cohort_ids, axis=0)
 
-        cohort_batches = jax.tree.map(gather, client_batches)
-        cohort_res = jax.tree.map(gather, residuals)
-        mask_keys = jnp.take(
-            jax.random.split(mask_key, M), cohort_ids, axis=0)
-
-        uploads, new_res, losses = stacked_client_update(
-            loss_fn, params, cohort_batches, mask_keys, cfg.client,
-            cohort_res, cfg.error_feedback)
-
-        wired = apply_wire(uploads)
         valid = gather(part)
         arr_c = gather(arrived)
         w_c = gather(weights)
@@ -474,7 +534,7 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                 return old.at[cohort_ids].set(kept)
 
             new_residuals = jax.tree.map(
-                scatter, residuals, new_res, cohort_res)
+                scatter, residuals, new_res, c["cohort_res"])
         else:
             new_residuals = residuals
 

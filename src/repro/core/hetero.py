@@ -13,6 +13,11 @@ never arrives.  This module models that axis:
 * :func:`simulate_round` — given who participated / whose upload arrived
   and the per-client compute + wire-byte cost, the simulated round
   wall-clock (the straggler max), its straggler tail, and the dropped count.
+* :func:`arrival_stream` — the per-round *arrival-time stream*: the same
+  completion-time model as :func:`simulate_round`, but emitted as a
+  time-ordered event sequence ``(arrival_s, client_id)`` the asynchronous
+  buffered-aggregation engine (``repro.core.async_engine``) consumes
+  instead of a round barrier.
 
 Split of responsibilities: the *drop draws* run INSIDE the round program
 (they change the aggregation and error-feedback gating, so both execution
@@ -30,7 +35,15 @@ from typing import Dict
 
 import numpy as np
 
-__all__ = ["ClientTraits", "HeteroModel", "simulate_round", "profile_names"]
+__all__ = ["ClientTraits", "HeteroModel", "simulate_round", "profile_names",
+           "arrival_stream", "MAX_DROP_RATE"]
+
+# Upload-loss probabilities are clamped here.  Horvitz-Thompson weights
+# divide by the survival probability ``1 - q`` (``_apply_dropout`` in
+# ``repro.core.federated``), so an unclamped q -> 1 would inflate a single
+# client's weight without bound; at q <= 0.5 the inflation factor is <= 2.
+# A fleet losing more than half its uploads is an outage, not a profile.
+MAX_DROP_RATE = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +66,29 @@ class ClientTraits:
         followed by an ``upload_bytes`` upload."""
         return (self.latency_s + flops / self.flops_per_s
                 + 8.0 * upload_bytes / self.uplink_bps)
+
+    def upload_time_s(self, upload_bytes: int) -> np.ndarray:
+        """Per-client wire time to (re)send an ``upload_bytes`` payload —
+        the marginal cost of a retry, which resends cached bytes without
+        recomputing the local update."""
+        return 8.0 * upload_bytes / self.uplink_bps
+
+    def arrival_times_s(self, flops: float, upload_bytes: int,
+                        rng: np.random.Generator | None = None,
+                        jitter_sigma: float = 0.0) -> np.ndarray:
+        """Per-client first-attempt arrival times for one round.
+
+        The static :meth:`client_time_s` base, optionally multiplied by a
+        per-round lognormal jitter draw (``jitter_sigma > 0`` needs
+        ``rng``) so repeated rounds do not always see the same straggler.
+        """
+        base = np.asarray(self.client_time_s(flops, upload_bytes),
+                          np.float64)
+        if jitter_sigma > 0.0:
+            if rng is None:
+                raise ValueError("jitter_sigma > 0 requires an rng")
+            base = base * np.exp(rng.normal(0.0, jitter_sigma, base.shape))
+        return base
 
 
 # Named profiles: (median, lognormal sigma) per trait + drop rate.  Medians
@@ -82,8 +118,10 @@ class HeteroModel:
     """A named heterogeneity profile: which fleet the simulation runs on.
 
     ``dropout`` overrides the profile's upload-loss rate when set (the
-    ``hetero-dropout`` strategy preset uses the profile default).  Draws
-    are deterministic in ``(profile, seed, num_clients)`` so both execution
+    ``hetero-dropout`` strategy preset uses the profile default); whatever
+    the source, the effective per-client rate is clamped at
+    :data:`MAX_DROP_RATE` so debiasing weights stay bounded.  Draws are
+    deterministic in ``(profile, seed, num_clients)`` so both execution
     engines and repeated runs see the same fleet.
     """
 
@@ -111,6 +149,9 @@ class HeteroModel:
             return median * np.exp(rng.normal(0.0, sigma, (num_clients,)))
 
         drop = self.dropout if self.dropout is not None else spec["drop"]
+        # Clamp at MAX_DROP_RATE so the Horvitz-Thompson 1/(1-q) dropout
+        # correction stays bounded (<= 2x) however lossy the override.
+        drop = min(float(drop), MAX_DROP_RATE)
         return ClientTraits(
             flops_per_s=lognormal(*spec["flops"]),
             latency_s=lognormal(*spec["latency"]),
@@ -149,3 +190,23 @@ def simulate_round(traits: ClientTraits, part: np.ndarray,
         "straggler_s": round_s - median_s,
         "dropped": int(part.sum() - arrived.sum()),
     }
+
+
+def arrival_stream(traits: ClientTraits, part: np.ndarray, flops: float,
+                   upload_bytes: int, rng: np.random.Generator | None = None,
+                   jitter_sigma: float = 0.0):
+    """Yield this round's upload arrivals as time-ordered events.
+
+    ``part`` is the 0/1 participation mask over all registered clients;
+    each participant's first transmission completes at its
+    :meth:`ClientTraits.arrival_times_s` draw.  Yields ``(arrival_s,
+    client_id)`` sorted by ``(time, client id)`` — the deterministic tie
+    break matters on the ``ideal`` fleet, where every arrival lands on the
+    same instant.  Retries, drops and deadlines are the *consumer's* story
+    (``repro.core.async_engine``); this is only the fault-free first-attempt
+    stream the failure model perturbs.
+    """
+    times = traits.arrival_times_s(flops, upload_bytes, rng, jitter_sigma)
+    ids = np.flatnonzero(np.asarray(part) > 0)
+    for t_s, cid in sorted(zip(times[ids].tolist(), ids.tolist())):
+        yield float(t_s), int(cid)

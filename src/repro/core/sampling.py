@@ -90,12 +90,15 @@ class SamplingSchedule:
                 return b
         return num_registered
 
-    def round_buckets(self, rounds: int, num_registered: int) -> list:
-        """Per-round (m_t, bucket) for t = 1..rounds — the server's dispatch
-        plan: consecutive equal buckets can share one compiled program and
-        be folded into a single lax.scan segment."""
+    def round_buckets(self, rounds: int, num_registered: int,
+                      start: int = 0) -> list:
+        """Per-round (m_t, bucket) for t = start+1..start+rounds — the
+        server's dispatch plan: consecutive equal buckets can share one
+        compiled program and be folded into a single lax.scan segment.
+        ``start`` offsets the plan for runs resumed from a checkpointed
+        round counter (m_t is a pure function of the absolute t)."""
         out = []
-        for t in range(1, rounds + 1):
+        for t in range(start + 1, start + rounds + 1):
             m = self.num_clients_host(t, num_registered)
             out.append((m, self.bucket_for(m, num_registered)))
         return out

@@ -22,7 +22,7 @@ residuals, and a ``HeteroModel`` fleet adds in-round upload dropout plus
 host-side clock simulation — ``RoundRecord.sim_round_s`` (straggler
 wall-clock on the simulated fleet), ``straggler_s`` and ``dropped``.
 
-Two execution engines (DESIGN.md §3.5):
+Three execution engines (DESIGN.md §3.5, §8):
 
 * ``engine="cohort"`` (default): per round, only the sampled cohort is
   materialized and executed — the cohort buffer size is bucketed to
@@ -35,6 +35,22 @@ Two execution engines (DESIGN.md §3.5):
   client runs; non-participants are zero-weighted) — kept as the oracle
   the cohort engine is property-tested against, under every registry
   preset (tests/test_strategy.py).
+* ``engine="async"``: FedBuff-style asynchronous buffered aggregation
+  (``repro.core.async_engine``) — uploads apply as they *arrive* on the
+  strategy's simulated fleet, K at a time with staleness-discounted
+  weights, under a failure model (deadlines, retry/backoff, upload
+  quarantine) configured by ``strategy.async_cfg``.  Degenerates
+  bit-exactly to the cohort engine on an instant fleet with no faults
+  (property-tested in tests/test_async.py); per-round fault accounting
+  lands in the new ``RoundRecord`` fields (arrivals, timeouts, retries,
+  quarantined, flushes, mean_staleness).
+
+The server also carries a persistent round counter: ``save_state`` /
+``restore_state`` round-trip the full training state (params, EF
+residuals, sampler norm EMAs, RNG key, round counter) through
+``repro.checkpoint.checkpoint``, and ``run()`` continues from the restored
+round — a resumed run is bit-identical to an uninterrupted one
+(tests/test_async.py::test_crash_resume_bit_exact, both engines).
 
 Each distinct (bucket, segment-length) program is AOT-compiled once and
 cached; compile time is recorded on the triggering round's
@@ -89,6 +105,13 @@ class RoundRecord:
     sim_round_s: float = 0.0    # simulated fleet wall-clock (hetero only)
     straggler_s: float = 0.0    # sim straggler tail: max - median arrival
     dropped: int = 0            # uploads lost on the simulated fleet
+    # --- async-engine accounting (engine="async" only; DESIGN.md §8) ---
+    arrivals: int = 0           # uploads accepted into a buffer flush
+    timeouts: int = 0           # uploads cut by the round deadline
+    retries: int = 0            # retransmissions scheduled after drops
+    quarantined: int = 0        # uploads rejected at the decode gate
+    flushes: int = 0            # buffer flushes applied this round
+    mean_staleness: float = 0.0  # mean flush-count staleness of applied rows
 
 
 class FederatedServer:
@@ -126,7 +149,7 @@ class FederatedServer:
                 upload=cfg.client.upload,
                 error_feedback=cfg.error_feedback)
             num_clients = cfg.num_clients
-        if engine not in ("cohort", "full"):
+        if engine not in ("cohort", "full", "async"):
             raise ValueError(f"unknown engine {engine!r}")
         if num_clients is None:
             raise TypeError("from_strategy/strategy= requires num_clients")
@@ -153,6 +176,13 @@ class FederatedServer:
         # round clock; None on the paper's ideal homogeneous fleet.
         self._traits = (strategy.hetero.client_traits(num_clients)
                         if strategy.hetero is not None else None)
+        # Absolute round counter: run() continues from here, so a server
+        # restored via restore_state resumes mid-run bit-identically.
+        self._round = 0
+        self._async = None
+        if engine == "async":
+            from repro.core.async_engine import AsyncRoundRunner
+            self._async = AsyncRoundRunner(strategy, loss_fn, num_clients)
         self.history: List[RoundRecord] = []
         self._num_params = pytree_num_params(init_params)
         # Exact per-client-upload wire bytes: the codec's encode traced
@@ -205,18 +235,19 @@ class FederatedServer:
         self._compiled[cache_key] = compiled
         return compiled, compile_s
 
-    def _segments(self, rounds: int, eval_rounds) -> List[tuple]:
-        """Split 1..rounds into (bucket, [t...]) segments: consecutive rounds
-        sharing a cohort bucket, broken at eval rounds (the host needs Θ_t
-        there).  engine="full" pins every bucket to the full population.
-        Bucket sizing is sampler-aware: ``ClientSampler.cohort_bucket``
-        upper-bounds the participant count its selection can emit (e.g. the
-        threshold sampler's random arrival count gets a slack bucket)."""
+    def _segments(self, rounds: int, eval_rounds, start: int = 0) -> List[tuple]:
+        """Split start+1..start+rounds into (bucket, [t...]) segments:
+        consecutive rounds sharing a cohort bucket, broken at eval rounds
+        (the host needs Θ_t there).  engine="full" pins every bucket to the
+        full population.  Bucket sizing is sampler-aware:
+        ``ClientSampler.cohort_bucket`` upper-bounds the participant count
+        its selection can emit (e.g. the threshold sampler's random arrival
+        count gets a slack bucket)."""
         M = self.cfg.num_clients
         sampler = self.strategy.sampler
-        plan = self.schedule.round_buckets(rounds, M)
+        plan = self.schedule.round_buckets(rounds, M, start=start)
         segments: List[tuple] = []
-        for t, (m, _bucket) in zip(range(1, rounds + 1), plan):
+        for t, (m, _bucket) in zip(range(start + 1, start + rounds + 1), plan):
             bucket = sampler.cohort_bucket(self.schedule, m, M)
             b_eff = bucket if self.engine == "cohort" else M
             if (segments and self.scan_rounds
@@ -237,7 +268,9 @@ class FederatedServer:
         B, ...) axes; ``n_samples``: (num_clients,) per-client dataset
         sizes; ``eval_every``: evaluate ``eval_fn(params, eval_data)``
         every that many rounds (and on the last).  Returns the full
-        history list.
+        history list.  Rounds are numbered from the server's persistent
+        round counter, so a run on a ``restore_state``-d server continues
+        where the checkpoint left off.
         """
         gamma = self.cfg.client.masking.gamma \
             if self.cfg.client.masking.mode != "none" else 1.0
@@ -245,13 +278,19 @@ class FederatedServer:
         n_samples = jnp.asarray(n_samples, jnp.float32)
         flops_per_client = local_update_flops(
             client_batches, self._num_params, self.cfg.client)
+        start = self._round
 
         eval_rounds = set()
         if eval_every and self.eval_fn is not None:
-            eval_rounds = {t for t in range(1, rounds + 1)
-                           if t % eval_every == 0 or t == rounds}
+            eval_rounds = {t for t in range(start + 1, start + rounds + 1)
+                           if t % eval_every == 0 or t == start + rounds}
 
-        for bucket, ts in self._segments(rounds, eval_rounds):
+        if self.engine == "async":
+            return self._run_async(client_batches, n_samples, rounds,
+                                   eval_rounds, eval_data, gamma, wire_bytes,
+                                   flops_per_client)
+
+        for bucket, ts in self._segments(rounds, eval_rounds, start):
             seg_len = len(ts)
             subs = []
             for _ in ts:
@@ -308,7 +347,94 @@ class FederatedServer:
                 if t in eval_rounds and t == ts[-1]:
                     rec.eval_metric = float(self.eval_fn(self.params, eval_data))
                 self.history.append(rec)
+            self._round = ts[-1]
         return self.history
+
+    def _run_async(self, client_batches, n_samples, rounds, eval_rounds,
+                   eval_data, gamma, wire_bytes, flops_per_client):
+        """engine="async" round loop: one buffered round at a time via
+        :class:`repro.core.async_engine.AsyncRoundRunner`, with the SAME
+        per-round key-split sequence as the sync engines (bit-exactness in
+        the degenerate case depends on it).  Transport counts every
+        transmission the fleet attempted — retries and deadline-cut sends
+        included — because those bytes crossed the uplink either way."""
+        M = self.cfg.num_clients
+        sampler = self.strategy.sampler
+        for _ in range(rounds):
+            t = self._round + 1
+            self._key, sub = jax.random.split(self._key)
+            m = self.schedule.num_clients_host(t, M)
+            bucket = sampler.cohort_bucket(self.schedule, m, M)
+            t0 = time.perf_counter()
+            (self.params, self._residuals, self._norms,
+             stats) = self._async.run_round(
+                self.params, self._residuals, self._norms, client_batches,
+                n_samples, t, sub, cohort_size=bucket,
+                flops=float(flops_per_client), wire_bytes=wire_bytes)
+            jax.block_until_ready(self.params)
+            wall = max(0.0, time.perf_counter() - t0 - stats["compile_s"])
+            rec = RoundRecord(
+                round=t,
+                num_sampled=stats["num_sampled"],
+                mean_loss=stats["mean_loss"],
+                transport_units=stats["sends"] * gamma,
+                transport_bytes=stats["sends"] * wire_bytes,
+                wall_s=wall,
+                compile_s=stats["compile_s"],
+                cohort_size=bucket,
+                flop_proxy=float(flops_per_client) * bucket,
+                sim_round_s=stats["sim_round_s"],
+                straggler_s=stats["straggler_s"],
+                dropped=stats["dropped"],
+                arrivals=stats["arrivals"],
+                timeouts=stats["timeouts"],
+                retries=stats["retries"],
+                quarantined=stats["quarantined"],
+                flushes=stats["flushes"],
+                mean_staleness=stats["mean_staleness"],
+            )
+            if t in eval_rounds:
+                rec.eval_metric = float(self.eval_fn(self.params, eval_data))
+            self.history.append(rec)
+            self._round = t
+        return self.history
+
+    # ---- checkpoint / resume --------------------------------------------
+    def state(self) -> Dict[str, Any]:
+        """The complete resumable training state as one pytree: global
+        params, EF residuals, the sampler's norm EMAs (adaptive samplers
+        only) and the server RNG key.  The round counter rides in the
+        checkpoint's ``extra`` manifest."""
+        tree: Dict[str, Any] = {
+            "key": self._key,
+            "params": self.params,
+            "residuals": self._residuals,
+        }
+        if self._norms is not None:
+            tree["norms"] = self._norms
+        return tree
+
+    def save_state(self, ckpt_dir: str) -> str:
+        """Checkpoint :meth:`state` (atomically) at the current round."""
+        from repro.checkpoint.checkpoint import save_checkpoint
+        return save_checkpoint(ckpt_dir, self._round, self.state(),
+                               extra={"round": self._round})
+
+    def restore_state(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore :meth:`state` from ``ckpt_dir`` (latest step unless
+        pinned) and continue the round numbering where the checkpoint left
+        off; the next ``run()`` resumes bit-identically to the run that
+        wrote it.  Returns the restored step."""
+        from repro.checkpoint.checkpoint import restore_checkpoint
+        restored, step, extra = restore_checkpoint(ckpt_dir, self.state(),
+                                                   step)
+        self._key = jnp.asarray(restored["key"])
+        self.params = restored["params"]
+        self._residuals = restored["residuals"]
+        if self._norms is not None:
+            self._norms = jnp.asarray(restored["norms"])
+        self._round = int(extra.get("round", step))
+        return step
 
     # ---- reporting ------------------------------------------------------
     def total_transport_units(self) -> float:
@@ -345,4 +471,19 @@ class FederatedServer:
             out["sim_total_s"] = float(
                 sum(r.sim_round_s for r in self.history))
             out["dropped_uploads"] = int(sum(r.dropped for r in self.history))
+        if self.engine == "async":
+            arrivals = int(sum(r.arrivals for r in self.history))
+            out["sim_total_s"] = float(
+                sum(r.sim_round_s for r in self.history))
+            out["dropped_uploads"] = int(sum(r.dropped for r in self.history))
+            out["arrivals"] = arrivals
+            out["timeouts"] = int(sum(r.timeouts for r in self.history))
+            out["retries"] = int(sum(r.retries for r in self.history))
+            out["quarantined"] = int(
+                sum(r.quarantined for r in self.history))
+            out["flushes"] = int(sum(r.flushes for r in self.history))
+            # staleness averaged over APPLIED uploads, not over rounds
+            out["mean_staleness"] = float(
+                sum(r.mean_staleness * r.arrivals for r in self.history)
+                / arrivals) if arrivals else 0.0
         return out

@@ -21,7 +21,11 @@ one frozen record composing four pluggable policies —
   aggregation weights (DESIGN.md §5);
 * ``hetero``      — an optional :class:`repro.core.hetero.HeteroModel`
   putting the round on a heterogeneous simulated fleet (per-client
-  compute/latency/bandwidth/dropout; DESIGN.md §5).
+  compute/latency/bandwidth/dropout; DESIGN.md §5);
+* ``async_cfg``   — an optional :class:`repro.core.async_engine.AsyncConfig`
+  switching the server to FedBuff-style asynchronous buffered aggregation
+  with a failure model (deadlines, retry/backoff, upload quarantine;
+  DESIGN.md §8) when it runs with ``engine="async"``.
 
 plus the client-side hyperparameters (local epochs, lr, momentum, upload
 semantics, error feedback).  ``build_round`` turns a strategy into the
@@ -46,6 +50,7 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.async_engine import AsyncConfig
 from repro.core.client import ClientConfig
 from repro.core.codecs import (ChainCodec, IdentityCodec, Int8Codec,
                                SparseCodec, UploadCodec)
@@ -214,6 +219,7 @@ class FedStrategy:
     aggregator: Aggregator = FEDAVG
     sampler: ClientSampler = UniformSampler()
     hetero: HeteroModel | None = None
+    async_cfg: AsyncConfig | None = None
     local_epochs: int = 1
     learning_rate: float = 0.05
     momentum: float = 0.0
@@ -389,3 +395,26 @@ register(FedStrategy(
     name="hetero-dropout",
     sampling=StaticSampling(initial_rate=1.0, min_clients=2),
     hetero=HeteroModel(profile="flaky-mobile")))
+
+# "async-mobile": beyond-paper — fig3's dynamic c(t) on the mobile fleet,
+# aggregated asynchronously (DESIGN.md §8): flush every K = m_t/2 arrivals
+# with the FedBuff staleness discount, cut the round at the 90th arrival
+# percentile, retry lost uploads twice with backoff.
+register(FedStrategy(
+    name="async-mobile",
+    sampling=DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2),
+    hetero=HeteroModel(profile="mobile"),
+    async_cfg=AsyncConfig(buffer_frac=0.5, staleness_beta=0.5,
+                          deadline_quantile=0.9, max_retries=2,
+                          backoff_s=0.5, jitter_sigma=0.25)))
+
+# "async-flaky": the same async engine on the flaky-mobile fleet with an
+# aggressive deadline (75th percentile) and a deeper retry budget — the
+# chaos scenario the quarantine/timeout accounting is sized for.
+register(FedStrategy(
+    name="async-flaky",
+    sampling=DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2),
+    hetero=HeteroModel(profile="flaky-mobile"),
+    async_cfg=AsyncConfig(buffer_frac=0.5, staleness_beta=0.5,
+                          deadline_quantile=0.75, max_retries=3,
+                          backoff_s=0.5, jitter_sigma=0.25)))

@@ -1,0 +1,348 @@
+"""Async buffered-aggregation engine (DESIGN.md §8).
+
+The keystone property: with instant arrivals (ideal fleet), buffer
+K = m_t and no injected faults, ``engine="async"`` is BIT-exact vs the
+sync cohort engine — params, error-feedback residuals and sampler norm
+EMAs — across presets including the adaptive samplers.  On top of that:
+staleness discounting changes the math when flushes stack, deadlines cut
+rounds gracefully (untouched EF state for the cut clients), retries
+recover dropped uploads, the quarantine gate keeps NaN payloads out of
+the global model AND out of the quarantined clients' own EF residuals,
+and the full server state round-trips through the checkpoint layer
+mid-run bit-exactly.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FederatedServer, strategy
+from repro.core.async_engine import AsyncConfig, AsyncRoundRunner
+from repro.core.client import local_update_flops
+from repro.core.federated import _split_round_key
+from repro.core.hetero import HeteroModel
+from repro.core.sampling import ThresholdSampler
+
+
+@functools.lru_cache()
+def _problem(num_clients, dim=8, classes=3, num_batches=2, batch=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (num_clients, num_batches, batch, dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1),
+                           (num_clients, num_batches, batch), 0, classes)
+
+    def loss_fn(params, data):
+        xb, yb = data
+        logp = jax.nn.log_softmax(xb @ params["w"] + params["b"])
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    params = {"w": 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           (dim, classes)),
+              "b": jnp.zeros((classes,))}
+    n = np.ones((num_clients,), np.float32)
+    return loss_fn, params, (x, y), n
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _trees_differ(a, b):
+    return any(not np.array_equal(np.asarray(la), np.asarray(lb))
+               for la, lb in zip(jax.tree_util.tree_leaves(a),
+                                 jax.tree_util.tree_leaves(b)))
+
+
+IDEAL = HeteroModel(profile="ideal")
+
+
+# ---------------------------------------------------------------------------
+# AsyncConfig validation
+# ---------------------------------------------------------------------------
+def test_asyncconfig_validation():
+    with pytest.raises(ValueError, match="buffer_size / buffer_frac"):
+        AsyncConfig(buffer_size=4, buffer_frac=0.5)
+    with pytest.raises(ValueError, match="buffer_size"):
+        AsyncConfig(buffer_size=0)
+    with pytest.raises(ValueError, match="buffer_frac"):
+        AsyncConfig(buffer_frac=1.5)
+    with pytest.raises(ValueError, match="staleness_beta"):
+        AsyncConfig(staleness_beta=-0.1)
+    with pytest.raises(ValueError, match="deadline_s / deadline_quantile"):
+        AsyncConfig(deadline_s=1.0, deadline_quantile=0.9)
+    with pytest.raises(ValueError, match="deadline_s"):
+        AsyncConfig(deadline_s=0.0)
+    with pytest.raises(ValueError, match="deadline_quantile"):
+        AsyncConfig(deadline_quantile=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        AsyncConfig(max_retries=-1)
+    with pytest.raises(ValueError, match="corrupt_rate"):
+        AsyncConfig(corrupt_rate=2.0)
+
+
+def test_buffer_for():
+    assert AsyncConfig().buffer_for(7) == 7          # default: K = m_t
+    assert AsyncConfig(buffer_size=3).buffer_for(7) == 3
+    assert AsyncConfig(buffer_frac=0.5).buffer_for(7) == 4  # ceil
+    assert AsyncConfig(buffer_frac=0.01).buffer_for(7) == 1
+
+
+def test_server_rejects_unknown_engine():
+    loss_fn, params, _, _ = _problem(4)
+    with pytest.raises(ValueError, match="unknown engine"):
+        FederatedServer.from_strategy(strategy.get("fig3"), loss_fn, params,
+                                      4, engine="buffered")
+
+
+# ---------------------------------------------------------------------------
+# THE keystone: instant arrivals + K = m_t + no faults == sync, bit-exact
+# ---------------------------------------------------------------------------
+KEYSTONE_CASES = {
+    "fig3": lambda: strategy.get("fig3", hetero=IDEAL, error_feedback=True),
+    "fig5": lambda: strategy.get("fig5", hetero=IDEAL, error_feedback=True),
+    "fig3-importance": lambda: strategy.get(
+        "fig3-importance", hetero=IDEAL, error_feedback=True),
+    "fig3+threshold": lambda: strategy.get(
+        "fig3", hetero=IDEAL, error_feedback=True,
+        sampler=ThresholdSampler()),
+}
+
+
+@pytest.mark.parametrize("case", sorted(KEYSTONE_CASES))
+def test_async_degenerates_to_sync_bit_exact(case):
+    """Ideal fleet, default AsyncConfig (K = m_t, no deadline, no faults):
+    every round is dispatch + ONE flush of everyone at staleness zero, and
+    the run is bit-identical to the sync cohort engine — including the
+    adaptive samplers' norm trackers and the EF residual state."""
+    M = 10
+    loss_fn, params, batches, n = _problem(M)
+    st = KEYSTONE_CASES[case]().replace(async_cfg=AsyncConfig())
+
+    sync = FederatedServer.from_strategy(st, loss_fn, params, M, seed=3,
+                                         engine="cohort")
+    sync.run(batches, n, rounds=6)
+    bufd = FederatedServer.from_strategy(st, loss_fn, params, M, seed=3,
+                                         engine="async")
+    bufd.run(batches, n, rounds=6)
+
+    _assert_trees_equal(sync.params, bufd.params)
+    _assert_trees_equal(sync._residuals, bufd._residuals)
+    if st.sampler.adaptive:
+        np.testing.assert_array_equal(np.asarray(sync._norms),
+                                      np.asarray(bufd._norms))
+    for r in bufd.history:
+        assert r.mean_staleness == 0.0
+        assert r.flushes <= 1
+        assert r.timeouts == 0 and r.retries == 0 and r.quarantined == 0
+        assert r.arrivals == r.num_sampled
+    # loss metric is computed host-side for async: close, not bitwise
+    np.testing.assert_allclose([r.mean_loss for r in sync.history],
+                               [r.mean_loss for r in bufd.history],
+                               rtol=1e-5, atol=1e-7, equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# staleness discounting
+# ---------------------------------------------------------------------------
+def test_staleness_discount_engages_and_changes_math():
+    """K = 1 on the mobile fleet: every distinct arrival time is its own
+    flush, so later arrivals carry staleness > 0 — and a nonzero beta must
+    change the resulting params vs beta = 0 (the discount is real).
+
+    Uses the importance (Horvitz-Thompson, absolute-weight) preset on
+    purpose: all rows of one flush share the same staleness, so a
+    sum-normalizing FedAvg aggregator cancels the discount exactly — it
+    only binds under absolute weights (documented in DESIGN.md §8)."""
+    M = 10
+    loss_fn, params, batches, n = _problem(M)
+    runs = {}
+    for beta in (0.0, 1.0):
+        st = strategy.get("fig3-importance",
+                          hetero=HeteroModel(profile="mobile"),
+                          async_cfg=AsyncConfig(buffer_size=1,
+                                                staleness_beta=beta,
+                                                max_retries=0))
+        s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=4,
+                                          engine="async")
+        s.run(batches, n, rounds=3)
+        runs[beta] = s
+    hist = runs[1.0].history
+    assert any(r.flushes > 1 for r in hist)
+    assert any(r.mean_staleness > 0 for r in hist)
+    assert _trees_differ(runs[0.0].params, runs[1.0].params)
+
+
+# ---------------------------------------------------------------------------
+# deadlines: graceful degradation
+# ---------------------------------------------------------------------------
+def test_deadline_cuts_round_and_leaves_ef_state_untouched():
+    """A median-arrival deadline on the mobile fleet times out the slow
+    half; EF residuals advance ONLY for applied uploads — every other
+    client's residual row is exactly its round-entry state (zeros here).
+    The model is sized so its weight leaf clears ``min_leaf_size`` —
+    otherwise masking and the COO codec ship it dense and every residual
+    is identically zero."""
+    M = 12
+    loss_fn, params, batches, n = _problem(M, dim=32, classes=10)
+    st = strategy.get("fig5", hetero=HeteroModel(profile="mobile"),
+                      error_feedback=True,
+                      async_cfg=AsyncConfig(deadline_quantile=0.5,
+                                            max_retries=0))
+    s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=6,
+                                      engine="async")
+    s.run(batches, n, rounds=1)
+    rec = s.history[0]
+    assert rec.timeouts > 0
+    assert rec.arrivals + rec.timeouts + rec.dropped == rec.num_sampled
+    # every nonzero residual row belongs to an applied upload
+    row_nonzero = np.zeros((M,), bool)
+    for leaf in jax.tree_util.tree_leaves(s._residuals):
+        flat = np.asarray(leaf).reshape(M, -1)
+        row_nonzero |= (flat != 0).any(axis=1)
+    assert int(row_nonzero.sum()) == rec.arrivals
+    # the simulated round clock stops at the deadline, not the straggler
+    times = s._async.traits.client_time_s(
+        float(local_update_flops(batches, sum(p.size for p in
+                                              jax.tree_util.tree_leaves(params)),
+                                 st.client_config())),
+        s.client_upload_bytes)
+    assert rec.sim_round_s <= float(np.max(times))
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff
+# ---------------------------------------------------------------------------
+def test_retry_recovers_drops_and_accounting_balances():
+    """On the flaky fleet retries fire (and permanently-dropped uploads
+    only exist once the retry budget is exhausted); with the budget at 0
+    no retry is ever scheduled.  Either way the per-round event accounting
+    balances: sends = arrivals + quarantined + timeouts + retries +
+    dropped."""
+    M = 12
+    loss_fn, params, batches, n = _problem(M)
+    for max_retries in (0, 3):
+        st = strategy.get("fig3",
+                          hetero=HeteroModel(profile="flaky-mobile"),
+                          async_cfg=AsyncConfig(max_retries=max_retries,
+                                                backoff_s=0.1))
+        s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=8,
+                                          engine="async")
+        s.run(batches, n, rounds=6)
+        summ = s.summary()
+        for rec in s.history:
+            sends = rec.transport_bytes // s.client_upload_bytes
+            assert sends == (rec.arrivals + rec.quarantined + rec.timeouts
+                             + rec.retries + rec.dropped)
+        if max_retries == 0:
+            assert summ["retries"] == 0
+            assert summ["dropped_uploads"] > 0
+        else:
+            assert summ["retries"] > 0
+
+
+# ---------------------------------------------------------------------------
+# quarantine: the acceptance invariant
+# ---------------------------------------------------------------------------
+def test_quarantine_protects_global_model_and_ef_residuals():
+    """Injected-NaN uploads are rejected at the decode gate: the global
+    params stay finite and — the acceptance criterion — every corrupted
+    client's EF residual row is bit-identical to its round-entry state.
+    With the gate off, the same round poisons the params (negative
+    control)."""
+    M = 12
+    loss_fn, params, batches, n = _problem(M, dim=32, classes=10)
+    base = strategy.get("fig5", hetero=IDEAL, error_feedback=True)
+    acfg = AsyncConfig(corrupt_rate=0.5)
+
+    runner = AsyncRoundRunner(base.replace(async_cfg=acfg), loss_fn, M)
+    residuals = jax.tree.map(
+        lambda p: jnp.zeros((M,) + p.shape, p.dtype), params)
+    flops = float(local_update_flops(
+        batches, sum(p.size for p in jax.tree_util.tree_leaves(params)),
+        base.client_config()))
+    key = jax.random.PRNGKey(42)
+    m = base.sampling.num_clients_host(1, M)
+    bucket = base.sampler.cohort_bucket(base.sampling, m, M)
+    new_p, new_r, _, stats = runner.run_round(
+        params, residuals, None, batches, jnp.asarray(n), 1, key,
+        cohort_size=bucket, flops=flops,
+        wire_bytes=base.codec.wire_bytes(params))
+    assert stats["quarantined"] > 0
+    assert stats["arrivals"] > 0
+    for leaf in jax.tree_util.tree_leaves(new_p):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+    # replay the engine's corrupt draw (first consumption of the host rng,
+    # seeded from the round's drop subkey) to find the poisoned clients
+    _, _, drop_key = _split_round_key(key, True)
+    rng = np.random.default_rng(
+        [int(x) for x in np.asarray(drop_key, np.uint32).ravel()])
+    corrupt = rng.random(M) < acfg.corrupt_rate
+    assert int(corrupt.sum()) >= stats["quarantined"]
+    for leaf, old in zip(jax.tree_util.tree_leaves(new_r),
+                         jax.tree_util.tree_leaves(residuals)):
+        np.testing.assert_array_equal(np.asarray(leaf)[corrupt],
+                                      np.asarray(old)[corrupt])
+    # applied clients DID advance their residuals (gamma < 1 leaves mass)
+    row_nonzero = np.zeros((M,), bool)
+    for leaf in jax.tree_util.tree_leaves(new_r):
+        flat = np.asarray(leaf).reshape(M, -1)
+        row_nonzero |= (flat != 0).any(axis=1)
+    assert int(row_nonzero.sum()) == stats["arrivals"]
+
+    # negative control: gate off -> the same poisoned round breaks params
+    runner_off = AsyncRoundRunner(
+        base.replace(async_cfg=dataclasses.replace(acfg, quarantine=False)),
+        loss_fn, M)
+    poisoned, _, _, stats_off = runner_off.run_round(
+        params, residuals, None, batches, jnp.asarray(n), 1, key,
+        cohort_size=bucket, flops=flops,
+        wire_bytes=base.codec.wire_bytes(params))
+    assert stats_off["quarantined"] == 0
+    assert any(not np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(poisoned))
+
+
+# ---------------------------------------------------------------------------
+# crash-resume: checkpoint round-trip mid-run, bit-exact continuation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["cohort", "async"])
+def test_crash_resume_bit_exact(engine, tmp_path):
+    """8 straight rounds == 4 rounds + save_state + restore into a FRESH
+    server (different seed: everything live comes from the checkpoint) +
+    4 more rounds — params, EF residuals and norm EMAs bit-identical, and
+    the resumed history continues the round numbering."""
+    M = 10
+    loss_fn, params, batches, n = _problem(M)
+    st = strategy.get("fig3-importance", hetero=IDEAL, error_feedback=True,
+                      async_cfg=AsyncConfig())
+
+    full = FederatedServer.from_strategy(st, loss_fn, params, M, seed=7,
+                                         engine=engine)
+    full.run(batches, n, rounds=8)
+
+    first = FederatedServer.from_strategy(st, loss_fn, params, M, seed=7,
+                                          engine=engine)
+    first.run(batches, n, rounds=4)
+    first.save_state(str(tmp_path))
+
+    resumed = FederatedServer.from_strategy(st, loss_fn, params, M,
+                                            seed=999, engine=engine)
+    step = resumed.restore_state(str(tmp_path))
+    assert step == 4 and resumed._round == 4
+    resumed.run(batches, n, rounds=4)
+
+    _assert_trees_equal(full.params, resumed.params)
+    _assert_trees_equal(full._residuals, resumed._residuals)
+    np.testing.assert_array_equal(np.asarray(full._norms),
+                                  np.asarray(resumed._norms))
+    assert [r.round for r in resumed.history] == [5, 6, 7, 8]
+    np.testing.assert_allclose(
+        [r.mean_loss for r in full.history[4:]],
+        [r.mean_loss for r in resumed.history], rtol=1e-6, equal_nan=True)

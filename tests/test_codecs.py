@@ -255,3 +255,49 @@ def test_dequantize_int8_rejects_malformed():
         dequantize_int8({**good, "scale": jnp.ones((3,))})
     with pytest.raises(ValueError, match="float"):
         quantize_int8(jnp.asarray([1, 2, 3], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# decode-boundary non-finite rejection (the sync-path quarantine analogue)
+# ---------------------------------------------------------------------------
+def test_identity_decode_rejects_non_finite():
+    with pytest.raises(ValueError, match="non-finite"):
+        IdentityCodec().decode({"a": jnp.array([1.0, jnp.nan, 2.0])})
+    with pytest.raises(ValueError, match="non-finite"):
+        IdentityCodec().decode({"a": jnp.array([jnp.inf])})
+
+
+def test_sparse_decode_rejects_non_finite():
+    sc = SparseCodec(gamma=0.5, min_leaf_size=256)
+    # dense pass-through leaf (below min_leaf_size) hits the gate
+    with pytest.raises(ValueError, match="non-finite"):
+        sc.decode({"a": jnp.array([jnp.inf, 0.0])})
+    # poisoned COO value payload is caught in decode_sparse
+    wire = sc.encode({"a": jnp.zeros((512,)).at[3].set(1.0)})
+    wire["a"]["values"] = wire["a"]["values"].at[0].set(jnp.nan)
+    with pytest.raises(ValueError, match="non-finite"):
+        sc.decode(wire)
+
+
+def test_int8_decode_rejects_non_finite():
+    # non-finite scale is caught in dequantize_int8
+    q = quantize_int8(jnp.ones((8,)))
+    q["scale"] = jnp.asarray(jnp.nan, jnp.float32)
+    with pytest.raises(ValueError, match="non-finite"):
+        Int8Codec().decode({"a": q})
+    # float pass-through leaves (e.g. unquantized metadata) hit the gate
+    with pytest.raises(ValueError, match="non-finite"):
+        Int8Codec().decode({"a": jnp.array([jnp.nan])})
+
+
+def test_chain_decode_rejects_non_finite():
+    chain = ChainCodec((SparseCodec(gamma=0.5, min_leaf_size=8),
+                        Int8Codec()))
+    wire = chain.encode({"a": jnp.zeros((64,)).at[5].set(1.0)})
+    wire["a"]["scale"] = jnp.asarray(jnp.inf, jnp.float32)
+    with pytest.raises(ValueError, match="non-finite"):
+        chain.decode(wire)
+    # finite wires still decode (the gate is a pass-through, not a tax)
+    ok = chain.encode({"a": jnp.zeros((64,)).at[5].set(1.0)})
+    out = chain.decode(ok)
+    assert np.isfinite(np.asarray(out["a"])).all()

@@ -230,3 +230,40 @@ def test_threshold_scan_segments_match_per_round_dispatch():
                                   np.asarray(runs[False]._norms))
     assert [r.num_sampled for r in runs[True].history] == \
         [r.num_sampled for r in runs[False].history]
+
+
+def test_drop_rate_clamp_bounds_ht_correction():
+    """Regression for the documented MAX_DROP_RATE contract: a dropout
+    override beyond 0.5 clamps, so the Horvitz-Thompson 1/(1-q) dropout
+    correction never inflates a single surviving upload by more than 2x."""
+    from repro.core.hetero import MAX_DROP_RATE
+
+    rates = HeteroModel(profile="mobile", dropout=0.95).drop_rates(8)
+    np.testing.assert_array_equal(rates, np.full((8,), MAX_DROP_RATE))
+    assert (1.0 / (1.0 - rates) <= 2.0).all()
+    # in-range overrides pass through unclamped
+    assert (HeteroModel(profile="mobile", dropout=0.3).drop_rates(8)
+            == 0.3).all()
+    # the profile defaults themselves respect the bound
+    for name in profile_names():
+        assert (HeteroModel(profile=name).drop_rates(8)
+                <= MAX_DROP_RATE).all()
+
+
+def test_arrival_stream_ordering_and_membership():
+    """The async engine's event queue contract: one event per participant,
+    sorted by (time, client id) — id is the tie break, which is what makes
+    the ideal fleet (all arrivals simultaneous) deterministic."""
+    from repro.core.hetero import arrival_stream
+
+    part = np.array([1, 0, 1, 1, 0, 1, 1, 1], np.float32)
+    for profile in ("ideal", "mobile"):
+        traits = HeteroModel(profile=profile).client_traits(8)
+        events = list(arrival_stream(traits, part, 1e9, 4096))
+        assert sorted(cid for _, cid in events) == [0, 2, 3, 5, 6, 7]
+        assert events == sorted(events)
+        if profile == "ideal":  # simultaneous arrivals: id breaks the tie
+            assert [cid for _, cid in events] == [0, 2, 3, 5, 6, 7]
+        times = traits.arrival_times_s(1e9, 4096)
+        for t_s, cid in events:
+            assert t_s == float(times[cid])
