@@ -1,6 +1,8 @@
-"""Render EXPERIMENTS.md §Roofline tables from results/dryrun*/ JSONs.
+"""Render EXPERIMENTS.md §Roofline tables from results/dryrun*/ JSONs,
+plus the DESIGN.md §9 Byzantine-robustness grid from BENCH_robust.json.
 
   PYTHONPATH=src python -m benchmarks.make_tables [--dir results/dryrun_baseline]
+  PYTHONPATH=src python -m benchmarks.make_tables --robust BENCH_robust.json
 """
 
 import argparse
@@ -44,11 +46,47 @@ def md_table(recs, title):
     return "\n".join(lines)
 
 
+def robust_table(path):
+    """BENCH_robust[.smoke].json -> markdown grid: one row per
+    (masking, aggregator), one final-loss column per adversarial
+    fraction, plus the f = 0.3 robustness ratio against the honest
+    fleet (the §9 chaos criterion holds while ratio <= 1.10 for the
+    robust rules and >> 1 for plain fedavg)."""
+    recs = json.load(open(path))
+    fracs = sorted({r["fraction"] for r in recs})
+    cells = {}
+    for r in recs:
+        cells[(r["masking"], r["aggregator"], r["fraction"])] = r
+    keys = sorted({(r["masking"], r["aggregator"]) for r in recs})
+    head = " | ".join(f"loss f={f}" for f in fracs)
+    lines = [f"### Byzantine robustness ({os.path.basename(path)})", "",
+             f"| masking | aggregator | {head} | worst/honest |",
+             "|---|---|" + "---|" * (len(fracs) + 1)]
+    for masking, agg in keys:
+        vals, ratio = [], ""
+        for f in fracs:
+            r = cells.get((masking, agg, f))
+            vals.append(f"{r['final_loss']:.3f}" if r else "-")
+            if r and f == max(fracs):
+                ratio = f"{r.get('loss_vs_honest', float('nan')):.3f}"
+        lines.append(f"| {masking} | {agg} | " + " | ".join(vals) +
+                     f" | {ratio} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun_baseline")
     ap.add_argument("--mp-dir", default="results/dryrun")
+    ap.add_argument("--robust", default=None, metavar="JSON",
+                    help="render the Byzantine grid from this "
+                         "BENCH_robust[.smoke].json and exit")
     args = ap.parse_args()
+
+    if args.robust:
+        print(robust_table(args.robust))
+        return
 
     print(md_table(rows_from(args.dir, fed=False),
                    "Single-pod 16x16 baselines (paper-faithful system)"))

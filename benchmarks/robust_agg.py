@@ -1,0 +1,179 @@
+"""Byzantine-robust aggregation under sparse uploads (DESIGN.md §9).
+
+Sweeps the adversarial fraction x aggregation rule x upload density grid:
+every cell trains the SAME LeNet problem under amplified sign-flip
+adversaries (``AttackModel(kind="sign_flip", strength=4.0)``) so the
+curves isolate the aggregation rule — at f = 0.3 the FedAvg mean is an
+ascent direction (0.7·u − 1.2·u = −0.5·u) while the robust rules stay
+below their breakdown points:
+
+  PYTHONPATH=src python -m benchmarks.robust_agg            # full grid
+  PYTHONPATH=src python -m benchmarks.robust_agg --smoke    # CI chaos
+
+Writes ``BENCH_robust.json`` (or ``BENCH_robust.smoke.json``): one row
+per (masking, aggregator, fraction) with the per-round loss curve and the
+server's Byzantine ledger (adversarial uploads seen, quarantined rows).
+
+The smoke variant runs the fig5 sparse operating point at f ∈ {0, 0.3}
+for {fedavg, coordinate_median, multi_krum} and ASSERTS the §9 chaos
+criterion: both robust rules must land within 10% of their honest-fleet
+final loss while plain FedAvg visibly diverges — CI fails the moment a
+regression lets sign-flipped mass move a robust model.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.core import (FederatedServer, coordinate_median, multi_krum,
+                        strategy, trimmed_mean)
+from repro.core.attacks import AttackModel
+from repro.core.sampling import DynamicSampling
+from repro.models import classifier_accuracy, classifier_loss, init_lenet, \
+    lenet_forward
+
+from benchmarks.common import IMG_SIZE, NUM_CLIENTS, mnist_like
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_robust.json")
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_robust.smoke.json")
+
+FRACTIONS = (0.0, 0.1, 0.3)
+MASKINGS = ("dense", "sparse")
+# mirrors the preset quorum floor: min_clients = 5 keeps late cohorts an
+# honest majority at f = 0.3 and gives Krum its n >= f + 3 candidates
+ROBUST_SAMPLING = DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=5)
+
+
+def aggregators():
+    """The grid's rules, breakdown-ordered: none, norm-bounded, beta-trim,
+    median, geometric."""
+    return {
+        "fedavg": strategy.FEDAVG,
+        "clipped": strategy.clipped_fedavg(1.0),
+        "trimmed_mean": trimmed_mean(0.3),
+        "coordinate_median": coordinate_median(),
+        "multi_krum": multi_krum(f=2, m=2),
+    }
+
+
+def make_strategy(masking: str, agg_name: str, fraction: float):
+    """One grid cell: fig5's sparse wire or fig3's dense wire, the robust
+    quorum floor, an amplified sign-flip fleet at ``fraction``."""
+    base = strategy.get("fig5" if masking == "sparse" else "fig3",
+                        learning_rate=0.1)
+    return base.replace(
+        name=f"robust-{masking}-{agg_name}-f{fraction}",
+        sampling=ROBUST_SAMPLING,
+        aggregator=aggregators()[agg_name],
+        attack=AttackModel(kind="sign_flip", fraction=fraction,
+                           strength=4.0),
+    )
+
+
+def run_cell(masking: str, agg_name: str, fraction: float, rounds: int,
+             seed: int = 0):
+    """Train one grid cell; returns the loss curve + Byzantine ledger."""
+    batches, n, eval_data = mnist_like(seed)
+    params = init_lenet(jax.random.PRNGKey(seed), IMG_SIZE, 1)
+    loss_fn = classifier_loss(lenet_forward)
+    eval_fn = jax.jit(classifier_accuracy(lenet_forward))
+
+    strat = make_strategy(masking, agg_name, fraction)
+    server = FederatedServer.from_strategy(
+        strat, loss_fn, params, NUM_CLIENTS, eval_fn=eval_fn, seed=seed)
+    server.run(batches, n, rounds, eval_every=rounds, eval_data=eval_data)
+
+    s = server.summary()
+    loss = [r.mean_loss for r in server.history]
+    return {
+        "masking": masking,
+        "aggregator": agg_name,
+        "fraction": fraction,
+        "rounds": rounds,
+        "loss_curve": [round(v, 4) for v in loss],
+        "final_loss": round(s["final_loss"], 4),
+        "final_eval": round(s["final_eval"], 4),
+        "transport_bytes": s["transport_bytes"],
+        "quarantined": s["quarantined"],
+        "adversarial_uploads": s.get("adversarial_uploads", 0),
+        "attack": s.get("attack", "none"),
+    }
+
+
+def run(rounds: int = 16, seed: int = 0):
+    """The full grid, plus a per-(masking, aggregator) robustness ratio:
+    final loss at f = 0.3 over final loss on the honest fleet."""
+    rows = []
+    for masking in MASKINGS:
+        for agg_name in aggregators():
+            by_f = {}
+            for fraction in FRACTIONS:
+                row = run_cell(masking, agg_name, fraction, rounds,
+                               seed=seed)
+                by_f[fraction] = row
+                rows.append(row)
+            honest = by_f[0.0]["final_loss"]
+            for fraction in FRACTIONS:
+                by_f[fraction]["loss_vs_honest"] = round(
+                    by_f[fraction]["final_loss"] / honest, 4)
+    return rows
+
+
+SMOKE_AGGS = ("fedavg", "coordinate_median", "multi_krum")
+ROBUST_TOL = 1.10       # robust rules: within 10% of the honest final loss
+DIVERGE_FACTOR = 1.5    # fedavg under attack: visibly off the honest curve
+
+
+def run_smoke(rounds: int = 8, seed: int = 0):
+    """The CI chaos gate (§9 acceptance): fig5 sparse wire, f = 0.3
+    amplified sign-flip, {fedavg, median, multi-Krum} each against its own
+    honest-fleet control.  Asserts the robust rules hold and FedAvg does
+    not — a silent robustness regression fails the build."""
+    rows = []
+    finals = {}
+    for agg_name in SMOKE_AGGS:
+        for fraction in (0.0, 0.3):
+            row = run_cell("sparse", agg_name, fraction, rounds, seed=seed)
+            honest = finals.get((agg_name, 0.0), row["final_loss"])
+            row["loss_vs_honest"] = round(row["final_loss"] / honest, 4)
+            finals[(agg_name, fraction)] = row["final_loss"]
+            rows.append(row)
+        assert finals[(agg_name, 0.3)] > 0 and finals[(agg_name, 0.0)] > 0
+
+    for agg_name in ("coordinate_median", "multi_krum"):
+        ratio = finals[(agg_name, 0.3)] / finals[(agg_name, 0.0)]
+        assert ratio <= ROBUST_TOL, (
+            f"{agg_name}: f=0.3 sign-flip moved the model "
+            f"{ratio:.3f}x off the honest-fleet final loss "
+            f"(tolerance {ROBUST_TOL}x) — robustness regression")
+    fed_ratio = finals[("fedavg", 0.3)] / finals[("fedavg", 0.0)]
+    assert fed_ratio >= DIVERGE_FACTOR, (
+        f"plain fedavg under f=0.3 sign-flip should diverge "
+        f"(>= {DIVERGE_FACTOR}x honest final loss) but scored "
+        f"{fed_ratio:.3f}x — the attack injection is not biting")
+    return rows
+
+
+def main():
+    """CLI entry: full grid, or --smoke chaos rows for the CI artifact."""
+    from benchmarks.common import fmt_rows
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="8-round CI chaos smoke asserting the §9 "
+                         "criterion (writes BENCH_robust.smoke.json)")
+    args = ap.parse_args()
+    rows = run_smoke() if args.smoke else run()
+    path = SMOKE_PATH if args.smoke else OUT_PATH
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    brief = [{k: v for k, v in r.items()
+              if not k.endswith("_curve")} for r in rows]
+    print(fmt_rows(brief))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ from repro.core.sampling import (
 from repro.core.hetero import (
     ClientTraits, HeteroModel, simulate_round, profile_names,
 )
+from repro.core.attacks import AttackModel, attack_kinds
 from repro.core.masking import (
     MaskingConfig, random_mask, selective_mask_exact,
     selective_mask_threshold, mask_pytree,
@@ -37,5 +38,8 @@ from repro.core.codecs import (
 )
 from repro.core import strategy
 from repro.core.strategy import (
-    FedStrategy, MaskPolicy, Aggregator, build_round,
+    FedStrategy, MaskPolicy, Aggregator, build_round, get_aggregator,
+)
+from repro.core.robust import (
+    coordinate_median, trimmed_mean, krum, multi_krum, norm_filter,
 )

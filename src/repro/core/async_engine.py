@@ -69,8 +69,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codecs import IdentityCodec
-from repro.core.federated import (_resolve_policies, _row_l2,
-                                  _split_round_key, make_cohort_compute)
+from repro.core.federated import (_active_attack, _resolve_policies,
+                                  _row_l2, _split_round_key,
+                                  make_cohort_compute)
 from repro.core.hetero import HeteroModel, arrival_stream
 
 PyTree = Any
@@ -186,6 +187,12 @@ class AsyncRoundRunner:
         self._wire_feedback = not (strategy.codec is None
                                    or isinstance(strategy.codec, IdentityCodec))
         self._inject = self.acfg.corrupt_rate > 0.0
+        # Byzantine adversaries (DESIGN.md §9): the dispatch sweep hands us
+        # the attacked payload; its non-finite rows (e.g. the "nan" attack)
+        # land in the same quarantine gate as corrupt_rate injections.
+        self.attack = _active_attack(getattr(strategy, "attack", None))
+        self._adv = (self.attack.adversary_mask(num_clients)
+                     if self.attack is not None else None)
         # Per-client probability that ALL max_retries+1 transmissions drop;
         # HT weights divide by its complement (exact 1.0 on no-drop fleets).
         q = np.asarray(self.traits.drop_rate, np.float64)
@@ -217,7 +224,8 @@ class AsyncRoundRunner:
         if fn is None:
             fn = make_cohort_compute(
                 self.loss_fn, self.schedule, self.cfg, bucket,
-                codec=self.strategy.codec, sampler=self.smp)
+                codec=self.strategy.codec, sampler=self.smp,
+                attack=self.attack)
             self._compute_fns[bucket] = fn
         return fn
 
@@ -255,13 +263,16 @@ class AsyncRoundRunner:
         return self._agg_fn(params, cleaned, w_flush, self.cfg.client.upload)
 
     def _close_impl(self, residuals, norms, cohort_ids, cohort_res, new_res,
-                    uploads, wired, applied_c):
+                    uploads, wired, payload, applied_c):
         """Round-close state commit: EF residuals advance and norm EMAs
         update only for cohort rows whose upload was APPLIED (arrived
         before the deadline, survived quarantine, entered a flush) —
         timeouts, permanent drops and quarantined rows keep their
         round-entry state, the async analogue of the sync engines'
-        arrived-mask gating."""
+        arrived-mask gating.  EF wire-loss feedback stays on the HONEST
+        (uploads, wired) pair (a residual reflects what the client failed
+        to ship, not what an attacker forged); the norm tracker observes
+        ``payload`` — what the server actually saw."""
         if self.cfg.error_feedback:
             if self._wire_feedback:
                 new_res = jax.tree.map(
@@ -274,7 +285,7 @@ class AsyncRoundRunner:
 
             residuals = jax.tree.map(scatter, residuals, new_res, cohort_res)
         if self.smp.adaptive:
-            obs = _row_l2(wired)
+            obs = _row_l2(payload)
             old_c = jnp.take(norms, cohort_ids)
             upd = jnp.where(applied_c > 0,
                             (1.0 - self.smp.ema) * old_c + self.smp.ema * obs,
@@ -323,16 +334,20 @@ class AsyncRoundRunner:
         rng = np.random.default_rng(
             [int(x) for x in np.asarray(seed_key, np.uint32).ravel()])
 
-        # 2. chaos injection + quarantine validity flags.
+        # 2. adversary payload + chaos injection + quarantine validity
+        # flags.  ``payload`` is what the server decodes (attacked rows
+        # perturbed, possibly NaN-poisoned); ``wired`` stays the honest
+        # wire round-trip the EF state commit consumes.
         wired = out["wired"]
+        payload = out["attacked"]
         corrupt = np.zeros((M,), np.float32)
         if self._inject:
             corrupt = (rng.random(M) < acfg.corrupt_rate).astype(np.float32)
         if self._inject or acfg.quarantine:
-            gate_args = (wired, jnp.asarray(corrupt[cohort_ids]))
+            gate_args = (payload, jnp.asarray(corrupt[cohort_ids]))
             gate, dt = self._aot("gate", self._gate_impl, gate_args)
             compile_s += dt
-            wired, finite_dev = gate(*gate_args)
+            payload, finite_dev = gate(*gate_args)
             finite_c = np.asarray(finite_dev)
         else:
             finite_c = np.ones((B,), np.float32)
@@ -381,7 +396,7 @@ class AsyncRoundRunner:
             member = np.zeros((B,), np.float32)
             member[buffer_rows] = 1.0
             w_flush = jnp.asarray(base_w * member * discount)
-            flush_args = (params, wired, w_flush, keep_dev)
+            flush_args = (params, payload, w_flush, keep_dev)
             flush, dt = self._aot("flush", self._flush_impl, flush_args)
             compile_s += dt
             params = flush(*flush_args)
@@ -433,7 +448,8 @@ class AsyncRoundRunner:
         # 5. round-close state commit.
         applied_dev = jnp.asarray(applied_rows)
         close_args = (residuals, norms, out["cohort_ids"], out["cohort_res"],
-                      out["new_res"], out["uploads"], wired, applied_dev)
+                      out["new_res"], out["uploads"], wired, payload,
+                      applied_dev)
         close, dt = self._aot("close", self._close_impl, close_args)
         compile_s += dt
         residuals, norms = close(*close_args)
@@ -448,6 +464,8 @@ class AsyncRoundRunner:
         stats = {
             "mean_loss": mean_loss,
             "num_sampled": int(n_part),
+            "adversarial": (int((part * self._adv).sum())
+                            if self._adv is not None else 0),
             "arrivals": arrivals,
             "timeouts": timeouts,
             "retries": retries,

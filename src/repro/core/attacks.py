@@ -1,0 +1,182 @@
+"""Byzantine adversary simulator: who attacks, and what they upload.
+
+PR 6's failure model covers *benign* faults — stragglers, drops, the odd
+NaN payload.  This module models the *adversarial* axis (DESIGN.md §9): a
+fixed fraction ``f`` of the registered fleet is controlled by an attacker
+and perturbs its uploads before they reach the server.
+
+* :class:`AttackModel` — the analogue of :class:`repro.core.hetero.
+  HeteroModel` for adversaries: a named attack kind plus knobs and a seed.
+  Adversary assignment is deterministic in ``(seed, num_clients)`` so both
+  execution engines (and repeated runs) agree on who is Byzantine.
+* The transform applies at the **upload boundary** — post-mask,
+  post-codec-roundtrip — inside the round program: the attacker controls
+  the *payload the server decodes*, not the client's local training, so
+  attacks ride the real wire path (a Gaussian attack ships dense noise
+  even under a sparse codec, exactly what a protocol-violating client
+  would do).
+
+Attack kinds (the literature's standard zoo):
+
+* ``sign_flip``  — upload ``-strength · u``: reversed (and optionally
+  amplified) updates.  At ``strength > (1-f)/f`` the FedAvg mean becomes
+  an ascent direction and plain averaging diverges.
+* ``scale``      — upload ``strength · u``: model-replacement style
+  amplification of the adversary's own update.
+* ``gauss``      — replace the upload with ``N(0, sigma²)`` noise
+  (per-client, per-round deterministic draws).
+* ``zero``       — free-riders: upload nothing, claim participation.
+* ``nan``        — poison the payload with NaN — the chaos kind the
+  decode-boundary quarantine gate (sync and async engines) must absorb.
+
+Threading: ``FedStrategy.attack`` carries the model into every round
+builder in ``repro.core.federated`` and the async engine; the server
+meters adversarial participation per round (``RoundRecord.adversarial``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["AttackModel", "attack_kinds", "attack_keys"]
+
+ATTACK_KINDS = ("sign_flip", "scale", "gauss", "zero", "nan")
+
+# fold_in tag deriving the per-round attack key stream from the round's
+# mask key: both engines derive the identical stream without widening the
+# round-key split (which would break bit-exactness of attack-free rounds).
+_ATTACK_FOLD = 0xA77AC
+
+
+def attack_kinds() -> tuple:
+    """Attack kind names accepted by :class:`AttackModel`."""
+    return ATTACK_KINDS
+
+
+def attack_keys(mask_key: jax.Array, num_clients: int) -> jax.Array:
+    """The round's per-client attack key rows, derived from ``mask_key``.
+
+    ``fold_in`` with a fixed tag gives a stream independent of the mask
+    draws; row i is client i's key in the oracle and is gathered by
+    ``cohort_ids`` in the cohort/async engines — identical per client, so
+    randomized attacks (``gauss``) preserve cohort-vs-oracle bit-exactness.
+    """
+    return jax.random.split(
+        jax.random.fold_in(mask_key, _ATTACK_FOLD), num_clients)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackModel:
+    """Which clients are Byzantine and what they upload (DESIGN.md §9).
+
+    ``fraction`` of the registered fleet is adversarial — assignment is a
+    deterministic draw in ``(seed, num_clients)``, mirroring
+    :class:`repro.core.hetero.HeteroModel`'s trait draws.  ``strength``
+    scales the ``sign_flip`` / ``scale`` transforms; ``sigma`` is the
+    ``gauss`` replacement noise scale.  ``fraction=0`` disables the attack
+    (the round builders then keep the attack-free program, bit-identical
+    to a strategy with no attack at all).
+    """
+
+    kind: str = "sign_flip"
+    fraction: float = 0.0
+    strength: float = 1.0
+    sigma: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        """Validate the attack kind and knob ranges."""
+        if self.kind not in ATTACK_KINDS:
+            raise ValueError(
+                f"unknown attack kind {self.kind!r}; known: "
+                f"{', '.join(ATTACK_KINDS)}")
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(
+                f"fraction must be in [0, 1], got {self.fraction}")
+        if self.strength <= 0.0:
+            raise ValueError(f"strength must be > 0, got {self.strength}")
+        if self.sigma < 0.0:
+            raise ValueError(f"sigma must be >= 0, got {self.sigma}")
+
+    @property
+    def active(self) -> bool:
+        """Whether this model perturbs any upload at all."""
+        return self.fraction > 0.0
+
+    @property
+    def needs_keys(self) -> bool:
+        """Whether the transform consumes per-client PRNG keys."""
+        return self.kind == "gauss"
+
+    def num_adversaries(self, num_clients: int) -> int:
+        """How many of ``num_clients`` clients are adversarial."""
+        return int(round(self.fraction * num_clients))
+
+    def adversary_mask(self, num_clients: int) -> np.ndarray:
+        """The static 0/1 adversary assignment over all registered clients.
+
+        Deterministic in ``(seed, num_clients)``: both execution engines
+        close over the same vector, and reruns replay the same fleet.
+        """
+        mask = np.zeros((num_clients,), np.float32)
+        k = self.num_adversaries(num_clients)
+        if k > 0:
+            rng = np.random.default_rng((self.seed, num_clients, 0xBAD))
+            mask[rng.permutation(num_clients)[:k]] = 1.0
+        return mask
+
+    def apply_stacked(self, uploads, adv: jnp.ndarray,
+                      keys: jax.Array | None = None):
+        """Apply the attack to a client-stacked upload pytree.
+
+        ``uploads`` leaves carry a leading client-row axis; ``adv`` is the
+        matching 0/1 adversary mask over those rows (the full ``(M,)``
+        vector in the oracle, the cohort gather elsewhere).  ``keys`` are
+        the matching :func:`attack_keys` rows, required iff
+        :attr:`needs_keys`.  Honest rows (``adv == 0``) pass through
+        bit-exactly.
+        """
+        if self.kind == "gauss" and keys is None:
+            raise ValueError("gauss attack requires per-client keys")
+
+        def rows(mask, u):
+            return mask.reshape((-1,) + (1,) * (u.ndim - 1))
+
+        if self.kind == "sign_flip":
+            s = jnp.asarray(self.strength, jnp.float32)
+            return jax.tree.map(
+                lambda u: jnp.where(rows(adv, u) > 0, (-s * u).astype(u.dtype),
+                                    u), uploads)
+        if self.kind == "scale":
+            s = jnp.asarray(self.strength, jnp.float32)
+            return jax.tree.map(
+                lambda u: jnp.where(rows(adv, u) > 0, (s * u).astype(u.dtype),
+                                    u), uploads)
+        if self.kind == "zero":
+            return jax.tree.map(
+                lambda u: jnp.where(rows(adv, u) > 0, jnp.zeros_like(u), u),
+                uploads)
+        if self.kind == "nan":
+            return jax.tree.map(
+                lambda u: jnp.where(rows(adv, u) > 0,
+                                    jnp.full_like(u, jnp.nan), u), uploads)
+
+        # gauss: replace the row with N(0, sigma^2) draws.  Per-leaf
+        # fold_in keeps leaves independent; per-row vmap keys keep clients
+        # independent AND engine-agnostic (row key == client key).
+        sigma = jnp.asarray(self.sigma, jnp.float32)
+        leaves, treedef = jax.tree_util.tree_flatten(uploads)
+        out = []
+        for li, leaf in enumerate(leaves):
+            leaf_keys = jax.vmap(lambda k, _li=li: jax.random.fold_in(
+                k, _li))(keys)
+            noise = jax.vmap(
+                lambda k, _shape=leaf.shape[1:], _dt=leaf.dtype:
+                jax.random.normal(k, _shape, _dt))(leaf_keys)
+            out.append(jnp.where(rows(adv, leaf) > 0,
+                                 (sigma * noise).astype(leaf.dtype), leaf))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -48,6 +48,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.attacks import attack_keys
 from repro.core.client import ClientConfig, stacked_client_update
 from repro.core.codecs import roundtrip_stacked
 from repro.core.sampling import (SamplingSchedule, UniformSampler,
@@ -69,8 +70,18 @@ def _resolve_policies(codec, aggregator, normalize: bool = True):
     4-argument ``fn(params, uploads, weights, semantics)`` contract keep
     working under self-normalizing samplers; pairing one with a
     Horvitz-Thompson sampler (``normalize=False``) raises at build time
-    instead of silently re-normalizing the debiased weights.
+    instead of silently re-normalizing the debiased weights.  Aggregators
+    that declare ``ht_compatible=False`` (Krum-family: selection ignores
+    weight magnitudes, so HT debiasing cannot reach the estimate) likewise
+    raise at build time when paired with an HT sampler.
     """
+    if not normalize and aggregator is not None and not getattr(
+            aggregator, "ht_compatible", True):
+        raise TypeError(
+            f"aggregator {aggregator.name!r} is not Horvitz-Thompson "
+            "compatible but the sampler emits HT weights (normalize="
+            "False); use a weighted-rank aggregator (coordinate_median / "
+            "trimmed_mean) or a self-normalizing sampler")
     fn = aggregator.fn if aggregator is not None else fedavg_aggregate
     params = inspect.signature(fn).parameters
     takes_normalize = "normalize" in params or any(
@@ -92,11 +103,18 @@ def _resolve_policies(codec, aggregator, normalize: bool = True):
     return apply_wire, agg_fn
 
 
-def _is_plain(sampler, hetero) -> bool:
+def _is_plain(sampler, hetero, attack=None) -> bool:
     """True when the round reduces to the original schedule-only body —
-    the path kept verbatim so default rounds stay bit-identical."""
-    return hetero is None and (sampler is None
-                               or isinstance(sampler, UniformSampler))
+    the path kept verbatim so default rounds stay bit-identical.  An
+    active attack routes to the generalized body (adversary injection
+    needs the full metering path)."""
+    return (hetero is None and attack is None
+            and (sampler is None or isinstance(sampler, UniformSampler)))
+
+
+def _active_attack(attack):
+    """Normalize the optional attack: a zero-fraction model is no attack."""
+    return attack if attack is not None and attack.active else None
 
 
 def _row_l2(stacked: PyTree) -> jnp.ndarray:
@@ -105,6 +123,49 @@ def _row_l2(stacked: PyTree) -> jnp.ndarray:
                      axis=tuple(range(1, leaf.ndim)))
              for leaf in jax.tree_util.tree_leaves(stacked))
     return jnp.sqrt(sq)
+
+
+def _finite_rows(stacked: PyTree) -> jnp.ndarray:
+    """1.0 for client rows whose every leaf entry is finite, else 0.0 —
+    the decode-boundary quarantine gate, shared by both sync engines (the
+    async engine applies the same check event-by-event, DESIGN.md §8)."""
+    ok = None
+    for leaf in jax.tree_util.tree_leaves(stacked):
+        leaf_ok = jnp.all(jnp.isfinite(leaf.astype(jnp.float32)),
+                          axis=tuple(range(1, leaf.ndim)))
+        ok = leaf_ok if ok is None else ok & leaf_ok
+    return ok.astype(jnp.float32)
+
+
+def _zero_rows(stacked: PyTree, keep: jnp.ndarray) -> PyTree:
+    """Zero whole client rows where ``keep == 0``.  Quarantined uploads
+    must not reach any aggregator even zero-weighted (0 · NaN = NaN); for
+    all-finite rows ``jnp.where`` is a bit-exact pass-through, so the
+    always-on gate leaves attack-free rounds bit-identical."""
+    return jax.tree.map(
+        lambda u: jnp.where(
+            keep.reshape((-1,) + (1,) * (u.ndim - 1)) > 0,
+            u, jnp.zeros_like(u)),
+        stacked)
+
+
+def _attack_payload(attack, wired, adv, mask_key, num_clients,
+                    cohort_ids=None):
+    """What the server actually decodes: ``wired`` with adversary rows
+    transformed.  ``adv`` is the full ``(M,)`` assignment; ``cohort_ids``
+    gathers it (and the per-client attack keys) onto cohort rows so both
+    engines perturb client i identically.  Returns ``wired`` itself when
+    no attack is active — downstream ``is not`` checks stay exact."""
+    if attack is None:
+        return wired
+    keys = None
+    if attack.needs_keys:
+        keys = attack_keys(mask_key, num_clients)
+    if cohort_ids is not None:
+        adv = jnp.take(adv, cohort_ids)
+        if keys is not None:
+            keys = jnp.take(keys, cohort_ids, axis=0)
+    return attack.apply_stacked(wired, adv, keys)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,7 +244,7 @@ def _apply_dropout(part, weights, drop, drop_key, normalize):
 
 def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                          cfg: FederatedConfig, *, codec=None, aggregator=None,
-                         sampler=None, hetero=None):
+                         sampler=None, hetero=None, attack=None):
     """Build the full-population (oracle) round program.
 
     Returns ``round_fn(params, residuals, client_batches, n_samples, t, key)
@@ -203,9 +264,15 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
     participants and their aggregation weights; ``hetero`` (a
     :class:`repro.core.hetero.HeteroModel`) adds in-round upload dropout
     plus ``part_mask``/``arrived_mask`` metrics for host-side clock
-    simulation.
+    simulation; ``attack`` (a :class:`repro.core.attacks.AttackModel`)
+    perturbs the adversary rows of the decoded payload before aggregation.
+
+    Both bodies gate the decoded payload through the non-finite quarantine
+    (``metrics["quarantined"]``): a NaN/Inf upload is zero-weighted and
+    zeroed out instead of poisoning Θ, matching the async engine's gate.
     """
-    if _is_plain(sampler, hetero):
+    attack = _active_attack(attack)
+    if _is_plain(sampler, hetero, attack):
         apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
         def round_fn(params, residuals, client_batches, n_samples, t, key):
@@ -218,8 +285,10 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                 residuals, cfg.error_feedback)
 
             wired = apply_wire(uploads)
-            weights = part * n_samples
-            new_params = agg_fn(params, wired, weights, cfg.client.upload)
+            finite = _finite_rows(wired)
+            weights = part * n_samples * finite
+            new_params = agg_fn(params, _zero_rows(wired, finite), weights,
+                                cfg.client.upload)
             if cfg.error_feedback:
                 if wired is not uploads:
                     # Wire loss (int8 quantisation, slot truncation) is real
@@ -231,9 +300,12 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                         wired)
                 # Non-participants did not really run this round: keep their
                 # old residual; participants reset to the post-mask remainder.
+                # Quarantined rows count as non-participants (their whole
+                # update was discarded at the server).
+                commit = part * finite
                 new_residuals = jax.tree.map(
                     lambda old, new: jnp.where(
-                        part.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
+                        commit.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
                         new, old),
                     residuals, new_residuals)
             else:
@@ -243,6 +315,7 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                 "mean_loss": jnp.sum(losses * part)
                 / jnp.maximum(jnp.sum(part), 1.0),
                 "num_sampled": jnp.sum(part),
+                "quarantined": jnp.sum(part * (1.0 - finite)),
             }
             return new_params, new_residuals, metrics
 
@@ -250,6 +323,10 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
 
     smp, drop = _round_extras(sampler, hetero, cfg)
     apply_wire, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
+    adv = None
+    if attack is not None:
+        adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
+                          jnp.float32)
 
     def round_impl(params, residuals, norms, client_batches, n_samples, t,
                    key):
@@ -265,21 +342,30 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
             residuals, cfg.error_feedback)
 
         wired = apply_wire(uploads)
+        # What the server decodes: adversary rows perturbed, then the
+        # non-finite quarantine gate.  EF wire-loss feedback below stays on
+        # the HONEST (uploads, wired) pair — a client's residual reflects
+        # what IT failed to ship, not what an attacker forged in its name.
+        payload = _attack_payload(attack, wired, adv, mask_key, M)
+        finite = _finite_rows(payload)
         arrived, weights = _apply_dropout(part, weights, drop, drop_key,
                                           smp.normalize)
-        new_params = agg_fn(params, wired, weights, cfg.client.upload)
+        weights = weights * finite
+        new_params = agg_fn(params, _zero_rows(payload, finite), weights,
+                            cfg.client.upload)
         if cfg.error_feedback:
             if wired is not uploads:
                 new_residuals = jax.tree.map(
                     lambda r, u, w: r + (u - w), new_residuals, uploads,
                     wired)
-            # Residuals advance only for clients whose upload ARRIVED: a
-            # dropped upload discards the whole local update, so its
-            # residual must stay consistent with the global model the
-            # client re-downloads next round.
+            # Residuals advance only for clients whose upload ARRIVED (and
+            # survived quarantine): a dropped upload discards the whole
+            # local update, so its residual must stay consistent with the
+            # global model the client re-downloads next round.
+            commit = arrived * finite
             new_residuals = jax.tree.map(
                 lambda old, new: jnp.where(
-                    arrived.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
+                    commit.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
                     new, old),
                 residuals, new_residuals)
         else:
@@ -287,9 +373,13 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
 
         new_norms = norms
         if smp.adaptive:
-            obs = _row_l2(wired)
+            # The tracker observes what the server saw — attacked rows feed
+            # their forged norms in, exactly the signal a norm-adaptive
+            # sampler would really receive under attack.
+            obs = _row_l2(payload)
             new_norms = jnp.where(
-                arrived > 0, (1.0 - smp.ema) * norms + smp.ema * obs, norms)
+                arrived * finite > 0,
+                (1.0 - smp.ema) * norms + smp.ema * obs, norms)
 
         # An empty round (the threshold sampler's random count can be 0) is
         # a no-op for the params; report NaN, not a fabricated 0.0 loss.
@@ -300,7 +390,10 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                 jnp.sum(losses * part) / jnp.maximum(n_part, 1.0),
                 jnp.nan),
             "num_sampled": n_part,
+            "quarantined": jnp.sum(arrived * (1.0 - finite)),
         }
+        if attack is not None:
+            metrics["num_adversarial"] = jnp.sum(part * adv)
         if drop is not None:
             metrics["part_mask"] = part
             metrics["arrived_mask"] = arrived
@@ -360,7 +453,7 @@ def cohort_select(sample_key: jax.Array, schedule: SamplingSchedule, t,
 
 def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
                         cfg: FederatedConfig, cohort_size: int, *,
-                        codec=None, sampler=None):
+                        codec=None, sampler=None, attack=None):
     """The round's *client-side sweep*, shared between execution engines:
     selection → cohort gather → local updates → wire round-trip — and
     nothing after it (no dropout draw, no aggregation, no state commit).
@@ -377,7 +470,9 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
     (full ``(M,)`` selection mask and pre-dropout aggregation weights),
     ``cohort_ids`` (sorted ascending, padded with the lowest-id
     non-participants), ``cohort_res`` (round-entry residuals, gathered),
-    ``uploads`` / ``wired`` (pre-/post-wire stacked uploads), ``new_res``
+    ``uploads`` / ``wired`` (pre-/post-wire stacked uploads), ``attacked``
+    (the payload the server decodes: ``wired`` with adversary rows
+    perturbed — the same object when no attack is active), ``new_res``
     (post-mask residual candidates) and ``losses`` — everything a barrier
     or a buffer needs to finish the round.  Pass ``norms=None`` for
     non-adaptive samplers.
@@ -386,6 +481,11 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
     smp = sampler if sampler is not None else UniformSampler()
+    attack = _active_attack(attack)
+    adv = None
+    if attack is not None:
+        adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
+                          jnp.float32)
 
     def compute(params, residuals, norms, client_batches, n_samples, t,
                 sample_key, mask_key):
@@ -411,6 +511,8 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
             cohort_res, cfg.error_feedback)
 
         wired = roundtrip_stacked(codec, uploads)
+        attacked = _attack_payload(attack, wired, adv, mask_key, M,
+                                   cohort_ids=cohort_ids)
         return {
             "part": part,
             "weights": weights,
@@ -420,6 +522,7 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
             "new_res": new_res,
             "losses": losses,
             "wired": wired,
+            "attacked": attacked,
         }
 
     return compute
@@ -427,7 +530,8 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
 
 def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                       cfg: FederatedConfig, cohort_size: int, *,
-                      codec=None, aggregator=None, sampler=None, hetero=None):
+                      codec=None, aggregator=None, sampler=None, hetero=None,
+                      attack=None):
     """Cohort-engine form of ``make_federated_round``: same signature(s) and
     math, but client_update runs over ``cohort_size`` (static) clients
     instead of ``cfg.num_clients``.
@@ -445,8 +549,9 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
     if not (0 < cohort_size <= cfg.num_clients):
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+    attack = _active_attack(attack)
 
-    if _is_plain(sampler, hetero):
+    if _is_plain(sampler, hetero, attack):
         apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
         def round_fn(params, residuals, client_batches, n_samples, t, key):
@@ -468,8 +573,10 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                 cohort_res, cfg.error_feedback)
 
             wired = apply_wire(uploads)
-            weights = valid * jnp.take(n_samples, cohort_ids)
-            new_params = agg_fn(params, wired, weights, cfg.client.upload)
+            finite = _finite_rows(wired)
+            weights = valid * jnp.take(n_samples, cohort_ids) * finite
+            new_params = agg_fn(params, _zero_rows(wired, finite), weights,
+                                cfg.client.upload)
             if cfg.error_feedback:
                 if wired is not uploads:
                     # Same wire-loss feedback as the oracle round (bit-exact
@@ -477,8 +584,9 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                     new_res = jax.tree.map(
                         lambda r, u, w: r + (u - w), new_res, uploads, wired)
 
+                commit = valid * finite
                 def scatter(old, new, old_cohort):
-                    vm = valid.reshape((-1,) + (1,) * (new.ndim - 1))
+                    vm = commit.reshape((-1,) + (1,) * (new.ndim - 1))
                     kept = jnp.where(vm > 0, new, old_cohort)
                     return old.at[cohort_ids].set(kept)
 
@@ -491,6 +599,7 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                 "mean_loss": jnp.sum(losses * valid)
                 / jnp.maximum(jnp.sum(valid), 1.0),
                 "num_sampled": jnp.sum(valid),
+                "quarantined": jnp.sum(valid * (1.0 - finite)),
             }
             return new_params, new_residuals, metrics
 
@@ -499,20 +608,26 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
     smp, drop = _round_extras(sampler, hetero, cfg)
     _, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
     compute = make_cohort_compute(loss_fn, schedule, cfg, cohort_size,
-                                  codec=codec, sampler=sampler)
+                                  codec=codec, sampler=sampler, attack=attack)
+    adv = None
+    if attack is not None:
+        adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
+                          jnp.float32)
 
     def round_impl(params, residuals, norms, client_batches, n_samples, t,
                    key):
         sample_key, mask_key, drop_key = _split_round_key(
             key, drop is not None)
-        # The client-side sweep (selection → gather → updates → wire) is
-        # the engine-shared compute; everything below is this engine's
-        # barrier: dropout draw, one-shot aggregation, state commit.
+        # The client-side sweep (selection → gather → updates → wire →
+        # adversary injection) is the engine-shared compute; everything
+        # below is this engine's barrier: dropout draw, quarantine gate,
+        # one-shot aggregation, state commit.
         c = compute(params, residuals, norms, client_batches, n_samples, t,
                     sample_key, mask_key)
         part, cohort_ids = c["part"], c["cohort_ids"]
         uploads, new_res, wired = c["uploads"], c["new_res"], c["wired"]
-        losses = c["losses"]
+        losses, payload = c["losses"], c["attacked"]
+        finite = _finite_rows(payload)
         arrived, weights = _apply_dropout(part, c["weights"], drop, drop_key,
                                           smp.normalize)
 
@@ -521,15 +636,19 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
 
         valid = gather(part)
         arr_c = gather(arrived)
-        w_c = gather(weights)
-        new_params = agg_fn(params, wired, w_c, cfg.client.upload)
+        w_c = gather(weights) * finite
+        new_params = agg_fn(params, _zero_rows(payload, finite), w_c,
+                            cfg.client.upload)
         if cfg.error_feedback:
+            # EF feedback stays on the HONEST (uploads, wired) pair — see
+            # the oracle body.
             if wired is not uploads:
                 new_res = jax.tree.map(
                     lambda r, u, w: r + (u - w), new_res, uploads, wired)
 
+            commit = arr_c * finite
             def scatter(old, new, old_cohort):
-                am = arr_c.reshape((-1,) + (1,) * (new.ndim - 1))
+                am = commit.reshape((-1,) + (1,) * (new.ndim - 1))
                 kept = jnp.where(am > 0, new, old_cohort)
                 return old.at[cohort_ids].set(kept)
 
@@ -540,9 +659,9 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
 
         new_norms = norms
         if smp.adaptive:
-            obs = _row_l2(wired)
+            obs = _row_l2(payload)
             old_c = gather(norms)
-            upd = jnp.where(arr_c > 0,
+            upd = jnp.where(arr_c * finite > 0,
                             (1.0 - smp.ema) * old_c + smp.ema * obs, old_c)
             new_norms = norms.at[cohort_ids].set(upd)
 
@@ -554,7 +673,10 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                 jnp.sum(losses * valid) / jnp.maximum(jnp.sum(valid), 1.0),
                 jnp.nan),
             "num_sampled": n_part,
+            "quarantined": jnp.sum(arr_c * (1.0 - finite)),
         }
+        if attack is not None:
+            metrics["num_adversarial"] = jnp.sum(part * adv)
         if drop is not None:
             metrics["part_mask"] = part
             metrics["arrived_mask"] = arrived
@@ -577,7 +699,8 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
 
 def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
                      cfg: FederatedConfig, cohort_size: int, *,
-                     codec=None, aggregator=None, sampler=None, hetero=None):
+                     codec=None, aggregator=None, sampler=None, hetero=None,
+                     attack=None):
     """lax.scan-over-rounds fast path: one dispatch for a whole segment of
     rounds that share a cohort bucket.
 
@@ -592,7 +715,7 @@ def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
     kw = dict(codec=codec, aggregator=aggregator, sampler=sampler,
-              hetero=hetero)
+              hetero=hetero, attack=attack)
     if cohort_size == cfg.num_clients:
         round_fn = make_federated_round(loss_fn, schedule, cfg, **kw)
     else:

@@ -1,0 +1,281 @@
+"""Byzantine-robust aggregators (DESIGN.md §9).
+
+Every factory here returns a :class:`repro.core.strategy.Aggregator` with
+the standard five-argument contract ``fn(global_params, uploads, weights,
+upload_semantics, normalize=True)`` — a drop-in for plain FedAvg on the
+strategy's ``aggregator`` axis.  Three contract points matter more than
+the statistics themselves:
+
+* **Zero-weight rows are absent.**  The full-population oracle hands the
+  aggregator all M client rows with zero weights on non-participants; the
+  cohort/async engines hand it a padded cohort buffer.  Cohort-vs-oracle
+  bit-exactness (DESIGN.md §3.5) therefore requires *weighted*-rank
+  statistics in which a zero-weight row can never change the result: the
+  weighted median/trim masses skip them, and Krum's pairwise distances
+  and candidate set are restricted to ``weight > 0`` rows.
+* **HT-weight compatibility is declared, not assumed.**  The weighted
+  median and trimmed mean consume Horvitz-Thompson (``normalize=False``)
+  weights as sampling masses — robust but no longer unbiased (rank
+  statistics are nonlinear).  Krum ignores weight *magnitudes* entirely
+  (selection is unweighted), so ``krum``/``multi_krum`` are built with
+  ``ht_compatible=False`` and pairing them with an HT sampler
+  (importance/threshold) raises at round-build time.
+* **Construction-time validation.**  Out-of-range knobs
+  (``trimmed_mean(beta=0.6)``, ``krum(f=-1)``, ``norm_filter(0.0)``)
+  raise ``ValueError`` naming the knob instead of silently building a
+  degenerate rule.
+
+Sparse-upload caveat (§9.4): under selective masking, client supports
+differ, so a coordinate owned by fewer than half the cohort's mass has
+weighted median 0 — coordinate-wise robust rules act like an *extra*
+masking stage on sparse uploads.  Krum compares whole vectors and is
+immune to this, but needs ``n >= f + 3`` candidates — pair it with a
+sampling floor that keeps an honest majority in every cohort.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.federated import _row_l2, fedavg_aggregate
+
+__all__ = ["coordinate_median", "trimmed_mean", "krum", "multi_krum",
+           "norm_filter"]
+
+# Masked-out score/distance sentinel: a finite "infinity" (inf - inf = NaN
+# would poison cumulative sums over padded rows).
+_BIG = 1e30
+
+
+def _make_aggregator(name, fn, ht_compatible=True):
+    # Deferred import: strategy.py imports this module (registry entries),
+    # so the Aggregator record class is looked up at call time.
+    from repro.core.strategy import Aggregator
+    return Aggregator(name, fn, ht_compatible=ht_compatible)
+
+
+def _combine(global_params, contribution, upload_semantics):
+    """Fold a per-leaf aggregated contribution into the global params under
+    the strategy's upload semantics (same convention as fedavg)."""
+    def one(g, c):
+        if upload_semantics == "delta":
+            return (g + c).astype(g.dtype)
+        return c.astype(g.dtype)
+
+    return jax.tree.map(one, global_params, contribution)
+
+
+def _per_coordinate(uploads, reduce_2d):
+    """Apply ``reduce_2d((rows, coords) leaf) -> (coords,)`` to every leaf
+    of a client-stacked pytree, restoring leaf shapes."""
+    def one(u):
+        flat = u.reshape(u.shape[0], -1)
+        return reduce_2d(flat).reshape(u.shape[1:])
+
+    return jax.tree.map(one, uploads)
+
+
+def coordinate_median() -> "Aggregator":
+    """Coordinate-wise weighted median (breakdown point 1/2 of the weight
+    mass per coordinate).
+
+    Per coordinate: sort the row values, accumulate their weights, and
+    take the first value whose cumulative mass reaches half the total
+    (the lower weighted median).  Zero-weight rows carry no mass, so they
+    can never be the crossing value — the oracle's extra rows are exact
+    no-ops, and the single-row case degenerates to that row bit-exactly.
+    HT-compatible in the *weighted-estimator* sense: the weights act as
+    masses, but the median of an unbiased weighting is not itself
+    unbiased (documented bias, DESIGN.md §9.3).
+    """
+
+    def agg(global_params, uploads, weights, upload_semantics,
+            normalize=True):
+        w = weights.astype(jnp.float32)
+        total = jnp.sum(w)
+        half = 0.5 * total
+
+        def med(flat):
+            order = jnp.argsort(flat, axis=0)
+            vals = jnp.take_along_axis(flat, order, axis=0)
+            ws = jnp.take_along_axis(
+                jnp.broadcast_to(w[:, None], flat.shape), order, axis=0)
+            crossed = jnp.cumsum(ws, axis=0) >= half
+            idx = jnp.argmax(crossed, axis=0)
+            picked = jnp.take_along_axis(vals, idx[None, :], axis=0)[0]
+            # empty round (total mass 0): contribute nothing
+            return jnp.where(total > 0, picked, jnp.zeros_like(picked))
+
+        return _combine(global_params, _per_coordinate(uploads, med),
+                        upload_semantics)
+
+    return _make_aggregator("coordinate_median", agg)
+
+
+def trimmed_mean(beta: float) -> "Aggregator":
+    """Coordinate-wise ``beta``-trimmed weighted mean (breakdown point
+    ``beta`` of the weight mass per coordinate).
+
+    Per coordinate, the lowest and highest ``beta`` fractions of the
+    *weight mass* are trimmed (interval-intersection trimming, so partial
+    rows at the cut points keep their inside mass) and the remainder is
+    averaged.  ``beta=0`` returns plain ``fedavg_aggregate`` itself —
+    bit-exact honest-fleet degeneration.  Zero-weight rows have zero kept
+    mass at every coordinate, so oracle padding rows are exact no-ops.
+    Under HT weights (``normalize=False``) the kept mass is rescaled to
+    the full mass so the estimator stays on the absolute scale the
+    debiased weights encode.
+    """
+    if not 0.0 <= beta < 0.5:
+        raise ValueError(
+            f"trimmed_mean: beta must be in [0, 0.5), got {beta}")
+    if beta == 0.0:
+        return _make_aggregator(f"trimmed_mean({beta})", fedavg_aggregate)
+
+    def agg(global_params, uploads, weights, upload_semantics,
+            normalize=True):
+        w = weights.astype(jnp.float32)
+        total = jnp.sum(w)
+        lo = beta * total
+        hi = (1.0 - beta) * total
+
+        def tmean(flat):
+            order = jnp.argsort(flat, axis=0)
+            vals = jnp.take_along_axis(flat, order, axis=0)
+            ws = jnp.take_along_axis(
+                jnp.broadcast_to(w[:, None], flat.shape), order, axis=0)
+            cum = jnp.cumsum(ws, axis=0)
+            # mass of sorted row i inside the kept interval [lo, hi]
+            kept = jnp.clip(jnp.minimum(cum, hi)
+                            - jnp.maximum(cum - ws, lo), 0.0, None)
+            num = jnp.sum(kept * vals, axis=0)
+            kept_mass = jnp.maximum(jnp.sum(kept, axis=0), 1e-12)
+            if normalize:
+                out = num / kept_mass
+            else:
+                out = num * (total / kept_mass)
+            return jnp.where(total > 0, out, jnp.zeros_like(out))
+
+        return _combine(global_params, _per_coordinate(uploads, tmean),
+                        upload_semantics)
+
+    return _make_aggregator(f"trimmed_mean({beta})", agg)
+
+
+def _pairwise_sq_dists(uploads, present):
+    """(rows, rows) sum of squared distances over all leaves, with pairs
+    touching an absent (zero-weight) row or the diagonal pushed to _BIG."""
+    rows = present.shape[0]
+    d2 = jnp.zeros((rows, rows), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(uploads):
+        flat = leaf.reshape(rows, -1).astype(jnp.float32)
+        diff = flat[:, None, :] - flat[None, :, :]
+        d2 = d2 + jnp.sum(diff * diff, axis=-1)
+    pair_ok = ((present[:, None] > 0) & (present[None, :] > 0)
+               & ~jnp.eye(rows, dtype=bool))
+    return jnp.where(pair_ok, d2, _BIG)
+
+
+def _krum_scores(uploads, weights, f):
+    """Krum scores over ``weight > 0`` candidate rows: sum of squared
+    distances to each candidate's ``n - f - 2`` nearest present
+    neighbours (clamped to at least one); absent rows score +inf (strictly
+    worse than any present row — a lone candidate's score is the _BIG
+    sentinel itself, and it must still win the argmin)."""
+    present = (weights > 0).astype(jnp.float32)
+    n = jnp.sum(present)
+    dist = _pairwise_sq_dists(uploads, present)
+    ranked = jnp.sort(dist, axis=1)
+    cum = jnp.cumsum(ranked, axis=1)
+    # n - f - 2 nearest neighbours; never more than the n - 1 present ones
+    # (so the _BIG sentinels stay out of every present row's score).
+    k = jnp.clip(n - f - 2, 1, jnp.maximum(n - 1.0, 1.0)).astype(jnp.int32)
+    rows = present.shape[0]
+    score = jnp.take_along_axis(
+        cum, jnp.full((rows, 1), k - 1, jnp.int32), axis=1)[:, 0]
+    return jnp.where(present > 0, score, jnp.inf), present, n
+
+
+def krum(f: int) -> "Aggregator":
+    """Krum (Blanchard et al., 2017): apply the single most central
+    candidate upload, assuming at most ``f`` Byzantine rows.
+
+    Selection is unweighted (weight magnitudes are ignored beyond
+    presence), so this aggregator is NOT Horvitz-Thompson compatible —
+    building a round with an HT sampler raises a ``TypeError``.  Needs
+    ``n >= f + 3`` present rows for the neighbour count to be meaningful
+    (smaller cohorts clamp to the single nearest neighbour).
+    """
+    if f < 0:
+        raise ValueError(f"krum: f must be >= 0, got {f}")
+
+    def agg(global_params, uploads, weights, upload_semantics,
+            normalize=True):
+        score, present, n = _krum_scores(uploads, weights, f)
+        rows = present.shape[0]
+        sel = (jnp.arange(rows) == jnp.argmin(score)).astype(jnp.float32)
+        # empty round: no candidate, contribute nothing
+        sel = sel * (n > 0)
+        return fedavg_aggregate(global_params, uploads, sel,
+                                upload_semantics, normalize=True)
+
+    return _make_aggregator(f"krum({f})", agg, ht_compatible=False)
+
+
+def multi_krum(f: int, m: int) -> "Aggregator":
+    """Multi-Krum: weighted FedAvg over the ``m`` lowest-Krum-score
+    candidates (breakdown: tolerates up to ``f`` of ``n >= 2f + 3``).
+
+    The selected set is scored unweighted (hence ``ht_compatible=False``,
+    like :func:`krum`), but the surviving rows are averaged with their
+    sampler weights, so Eq. 2's n_i-proportional weighting still applies
+    within the trusted set.
+    """
+    if f < 0:
+        raise ValueError(f"multi_krum: f must be >= 0, got {f}")
+    if m < 1:
+        raise ValueError(f"multi_krum: m must be >= 1, got {m}")
+
+    def agg(global_params, uploads, weights, upload_semantics,
+            normalize=True):
+        score, present, n = _krum_scores(uploads, weights, f)
+        rank = jnp.argsort(jnp.argsort(score))
+        sel = (rank < jnp.minimum(float(m), n)).astype(jnp.float32) * present
+        return fedavg_aggregate(global_params, uploads, weights * sel,
+                                upload_semantics, normalize=True)
+
+    return _make_aggregator(f"multi_krum({f},{m})", agg, ht_compatible=False)
+
+
+def norm_filter(max_norm: float,
+                inner: Optional["Aggregator"] = None) -> "Aggregator":
+    """Reject (zero-weight) uploads whose L2 norm exceeds ``max_norm``,
+    then delegate to ``inner`` (plain FedAvg by default).
+
+    The hard-reject complement of ``clipped_fedavg``'s soft clip — and
+    composable with it: ``norm_filter(10.0, inner=clipped_fedavg(1.0))``
+    drops obvious outliers and clips the rest.  Zero-weight rows are
+    already absent for every aggregator in this registry, so filtering
+    preserves the cohort-vs-oracle guarantee.  HT compatibility is
+    inherited from ``inner`` (filtering censors the HT estimator — the
+    same documented bias as any rejection rule).
+    """
+    if max_norm <= 0.0:
+        raise ValueError(
+            f"norm_filter: max_norm must be > 0, got {max_norm}")
+    inner_fn = inner.fn if inner is not None else fedavg_aggregate
+    inner_ht = inner.ht_compatible if inner is not None else True
+    name = f"norm_filter({max_norm})"
+    if inner is not None:
+        name += f"+{inner.name}"
+
+    def agg(global_params, uploads, weights, upload_semantics,
+            normalize=True):
+        keep = (_row_l2(uploads) <= max_norm).astype(weights.dtype)
+        return inner_fn(global_params, uploads, weights * keep,
+                        upload_semantics, normalize=normalize)
+
+    return _make_aggregator(name, agg, ht_compatible=inner_ht)

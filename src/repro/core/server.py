@@ -109,9 +109,11 @@ class RoundRecord:
     arrivals: int = 0           # uploads accepted into a buffer flush
     timeouts: int = 0           # uploads cut by the round deadline
     retries: int = 0            # retransmissions scheduled after drops
-    quarantined: int = 0        # uploads rejected at the decode gate
+    quarantined: int = 0        # uploads rejected at the decode gate (ALL engines, §9)
     flushes: int = 0            # buffer flushes applied this round
     mean_staleness: float = 0.0  # mean flush-count staleness of applied rows
+    # --- Byzantine accounting (strategy.attack set; DESIGN.md §9) ---
+    adversarial: int = 0        # adversary-controlled participants this round
 
 
 class FederatedServer:
@@ -320,6 +322,11 @@ class FederatedServer:
 
             num_sampled = np.atleast_1d(np.asarray(metrics["num_sampled"]))
             mean_loss = np.atleast_1d(np.asarray(metrics["mean_loss"]))
+            quarantined = np.atleast_1d(np.asarray(metrics["quarantined"]))
+            adversarial = None
+            if "num_adversarial" in metrics:
+                adversarial = np.atleast_1d(
+                    np.asarray(metrics["num_adversarial"]))
             if self._traits is not None:
                 part_masks = np.atleast_2d(np.asarray(metrics["part_mask"]))
                 arrived_masks = np.atleast_2d(
@@ -336,6 +343,9 @@ class FederatedServer:
                     compile_s=compile_s if i == 0 else 0.0,
                     cohort_size=bucket,
                     flop_proxy=float(flops_per_client) * bucket,
+                    quarantined=int(quarantined[i]),
+                    adversarial=(int(adversarial[i])
+                                 if adversarial is not None else 0),
                 )
                 if self._traits is not None:
                     sim = simulate_round(self._traits, part_masks[i],
@@ -392,6 +402,7 @@ class FederatedServer:
                 quarantined=stats["quarantined"],
                 flushes=stats["flushes"],
                 mean_staleness=stats["mean_staleness"],
+                adversarial=stats["adversarial"],
             )
             if t in eval_rounds:
                 rec.eval_metric = float(self.eval_fn(self.params, eval_data))
@@ -465,7 +476,14 @@ class FederatedServer:
             "client_upload_bytes": self.client_upload_bytes,
             "compile_s": float(sum(r.compile_s for r in self.history)),
             "steady_wall_s": float(sum(r.wall_s for r in self.history)),
+            # decode-gate rejections, metered by every engine (§8/§9)
+            "quarantined": int(sum(r.quarantined for r in self.history)),
         }
+        attack = getattr(self.strategy, "attack", None)
+        if attack is not None and attack.active:
+            out["attack"] = f"{attack.kind}(f={attack.fraction})"
+            out["adversarial_uploads"] = int(
+                sum(r.adversarial for r in self.history))
         if self._traits is not None:
             out["hetero"] = self.strategy.hetero.profile
             out["sim_total_s"] = float(
@@ -479,8 +497,6 @@ class FederatedServer:
             out["arrivals"] = arrivals
             out["timeouts"] = int(sum(r.timeouts for r in self.history))
             out["retries"] = int(sum(r.retries for r in self.history))
-            out["quarantined"] = int(
-                sum(r.quarantined for r in self.history))
             out["flushes"] = int(sum(r.flushes for r in self.history))
             # staleness averaged over APPLIED uploads, not over rounds
             out["mean_staleness"] = float(

@@ -25,7 +25,11 @@ one frozen record composing four pluggable policies —
 * ``async_cfg``   — an optional :class:`repro.core.async_engine.AsyncConfig`
   switching the server to FedBuff-style asynchronous buffered aggregation
   with a failure model (deadlines, retry/backoff, upload quarantine;
-  DESIGN.md §8) when it runs with ``engine="async"``.
+  DESIGN.md §8) when it runs with ``engine="async"``;
+* ``attack``      — an optional :class:`repro.core.attacks.AttackModel`
+  making a fixed fraction of the fleet Byzantine: adversary uploads are
+  perturbed at the decode boundary of every engine (DESIGN.md §9), the
+  scenario the robust aggregators in ``repro.core.robust`` are built for.
 
 plus the client-side hyperparameters (local epochs, lr, momentum, upload
 semantics, error feedback).  ``build_round`` turns a strategy into the
@@ -51,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.async_engine import AsyncConfig
+from repro.core.attacks import AttackModel
 from repro.core.client import ClientConfig
 from repro.core.codecs import (ChainCodec, IdentityCodec, Int8Codec,
                                SparseCodec, UploadCodec)
@@ -70,6 +75,8 @@ __all__ = [
     "Aggregator",
     "FEDAVG",
     "clipped_fedavg",
+    "get_aggregator",
+    "aggregator_names",
     "FedStrategy",
     "default_codec",
     "build_round",
@@ -153,10 +160,16 @@ class Aggregator:
     ``TypeError`` at round-build time.  Must treat zero-weight rows as
     absent (the cohort/oracle equivalence relies on the oracle's extra
     zero-weight clients being no-ops).
+
+    ``ht_compatible=False`` declares the rule unable to honour HT weights
+    at all (Krum-family: candidate selection ignores weight magnitudes);
+    building a round that pairs such an aggregator with an HT sampler
+    raises a ``TypeError`` (``repro.core.federated._resolve_policies``).
     """
 
     name: str
     fn: Callable[..., PyTree]
+    ht_compatible: bool = True
 
 
 FEDAVG = Aggregator("fedavg", fedavg_aggregate)
@@ -169,6 +182,9 @@ def clipped_fedavg(max_norm: float) -> Aggregator:
     bit-exactness guarantee survives: the oracle's zero-weight rows clip to
     themselves and then drop out of the weighted sum exactly as before.
     """
+    if max_norm <= 0.0:
+        raise ValueError(
+            f"clipped_fedavg: max_norm must be > 0, got {max_norm}")
 
     def agg(global_params, uploads, weights, upload_semantics,
             normalize=True):
@@ -185,10 +201,36 @@ def clipped_fedavg(max_norm: float) -> Aggregator:
     return Aggregator(f"clipped_fedavg({max_norm})", agg)
 
 
+# Imported AFTER Aggregator is defined: robust.py builds Aggregator
+# records lazily via this module, so the import must not run at the top.
+from repro.core import robust as _robust  # noqa: E402
+
 _AGGREGATORS: Dict[str, Callable[..., Aggregator]] = {
     "fedavg": lambda: FEDAVG,
     "clipped_fedavg": clipped_fedavg,
+    "coordinate_median": _robust.coordinate_median,
+    "trimmed_mean": _robust.trimmed_mean,
+    "krum": _robust.krum,
+    "multi_krum": _robust.multi_krum,
+    "norm_filter": _robust.norm_filter,
 }
+
+
+def get_aggregator(name: str, *args, **kwargs) -> Aggregator:
+    """Build a registered aggregator by factory name (knobs as args:
+    ``get_aggregator("trimmed_mean", 0.2)``)."""
+    try:
+        factory = _AGGREGATORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown aggregator {name!r}; registered: "
+            f"{', '.join(aggregator_names())}") from None
+    return factory(*args, **kwargs)
+
+
+def aggregator_names() -> Tuple[str, ...]:
+    """Sorted factory names accepted by :func:`get_aggregator`."""
+    return tuple(sorted(_AGGREGATORS))
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +262,7 @@ class FedStrategy:
     sampler: ClientSampler = UniformSampler()
     hetero: HeteroModel | None = None
     async_cfg: AsyncConfig | None = None
+    attack: AttackModel | None = None
     local_epochs: int = 1
     learning_rate: float = 0.05
     momentum: float = 0.0
@@ -300,7 +343,8 @@ def build_round(strategy: FedStrategy, loss_fn: Callable, num_clients: int,
         raise ValueError(f"unknown round form {form!r}")
     cfg = strategy.federated_config(num_clients)
     kw = dict(codec=strategy.codec, aggregator=strategy.aggregator,
-              sampler=strategy.sampler, hetero=strategy.hetero)
+              sampler=strategy.sampler, hetero=strategy.hetero,
+              attack=strategy.attack)
     if form == "full":
         return make_federated_round(loss_fn, strategy.sampling, cfg, **kw)
     if cohort_size is None:
@@ -418,3 +462,37 @@ register(FedStrategy(
     async_cfg=AsyncConfig(buffer_frac=0.5, staleness_beta=0.5,
                           deadline_quantile=0.75, max_retries=3,
                           backoff_s=0.5, jitter_sigma=0.25)))
+
+# ---- Byzantine-robustness presets (DESIGN.md §9) --------------------------
+# All three run fig5's sparse operating point (beta = 0.1, gamma = 0.5, COO
+# wire) with a deeper sampling floor: min_clients = 5 keeps every cohort an
+# honest majority at f = 0.3 (late rounds of min_clients = 2 would hand a
+# 30% fleet a coin-flip cohort majority, and Krum needs n >= f + 3
+# candidates to score neighbours at all).
+_ROBUST_SAMPLING = DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=5)
+# Amplified sign-flip: at strength = 4 and f = 0.3 the FedAvg mean is
+# 0.7·u - 1.2·u = -0.5·u — an ascent direction, so plain averaging
+# demonstrably diverges while the robust rules hold (benchmarks/robust_agg).
+_SIGNFLIP = AttackModel(kind="sign_flip", fraction=0.3, strength=4.0)
+
+# "byzantine-signflip": the attacked baseline — fig5 sparse uploads, 30%
+# amplified sign-flip adversaries, PLAIN fedavg.  The control every robust
+# preset is measured against.
+register(get("fig5").replace(
+    name="byzantine-signflip",
+    sampling=_ROBUST_SAMPLING,
+    attack=_SIGNFLIP))
+
+# "robust-median": the same attacked fleet aggregated by the coordinate-wise
+# weighted median (breakdown point 1/2 — f = 0.3 sign-flip cannot move it).
+register(get("byzantine-signflip").replace(
+    name="robust-median",
+    aggregator=_robust.coordinate_median()))
+
+# "robust-krum": the same attacked fleet under multi-Krum (f = 2 suspected
+# Byzantine rows, average the m = 2 most central candidates) — the
+# whole-vector geometric defence, immune to the median's per-coordinate
+# sparse-support caveat (§9.4).
+register(get("byzantine-signflip").replace(
+    name="robust-krum",
+    aggregator=_robust.multi_krum(f=2, m=2)))

@@ -111,6 +111,15 @@ KEYSTONE_CASES = {
     "fig3+threshold": lambda: strategy.get(
         "fig3", hetero=IDEAL, error_feedback=True,
         sampler=ThresholdSampler()),
+    # Byzantine presets: the degeneration must hold under ACTIVE attacks
+    # too — adversary rows are injected in the shared dispatch sweep, so
+    # both engines aggregate the identical attacked payload.
+    "byzantine-signflip": lambda: strategy.get(
+        "byzantine-signflip", hetero=IDEAL, error_feedback=True),
+    "robust-median": lambda: strategy.get(
+        "robust-median", hetero=IDEAL, error_feedback=True),
+    "robust-krum": lambda: strategy.get(
+        "robust-krum", hetero=IDEAL, error_feedback=True),
 }
 
 

@@ -1,0 +1,178 @@
+"""Adversary injection (repro.core.attacks; DESIGN.md §9).
+
+Covers the deterministic adversary assignment, each transform's unit
+semantics (honest rows bit-exact pass-through), the promotion of the NaN
+quarantine gate to the sync engines (satellite of PR 7: a poisoned upload
+is zeroed and metered, in cohort and oracle alike), the cohort-vs-oracle
+equality under every attack kind, and the async engine's composition of
+attacks with its event-loop quarantine.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FederatedServer, strategy
+from repro.core.attacks import AttackModel, attack_keys
+from repro.core.hetero import HeteroModel
+
+
+@functools.lru_cache()
+def _problem(num_clients, dim=8, classes=3, num_batches=2, batch=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (num_clients, num_batches, batch, dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1),
+                           (num_clients, num_batches, batch), 0, classes)
+
+    def loss_fn(params, data):
+        xb, yb = data
+        logp = jax.nn.log_softmax(xb @ params["w"] + params["b"])
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    params = {"w": 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           (dim, classes)),
+              "b": jnp.zeros((classes,))}
+    n = np.ones((num_clients,), np.float32)
+    return loss_fn, params, (x, y), n
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# the model record
+# ---------------------------------------------------------------------------
+def test_attack_model_validation():
+    with pytest.raises(ValueError, match="kind"):
+        AttackModel(kind="bitflip")
+    with pytest.raises(ValueError, match="fraction"):
+        AttackModel(fraction=1.5)
+    with pytest.raises(ValueError, match="strength"):
+        AttackModel(strength=0.0)
+    with pytest.raises(ValueError, match="sigma"):
+        AttackModel(kind="gauss", fraction=0.5, sigma=-1.0)
+    assert not AttackModel(fraction=0.0).active
+    assert AttackModel(fraction=0.1).active
+
+
+def test_adversary_mask_deterministic_and_sized():
+    atk = AttackModel(kind="sign_flip", fraction=0.3, seed=11)
+    m1, m2 = atk.adversary_mask(20), atk.adversary_mask(20)
+    np.testing.assert_array_equal(m1, m2)
+    assert m1.sum() == atk.num_adversaries(20) == 6
+    # a different seed moves the assignment; fraction 0 empties it
+    assert not np.array_equal(
+        m1, AttackModel(kind="sign_flip", fraction=0.3, seed=12)
+        .adversary_mask(20))
+    assert AttackModel(fraction=0.0).adversary_mask(20).sum() == 0
+
+
+@pytest.mark.parametrize("kind", ["sign_flip", "scale", "gauss", "zero",
+                                  "nan"])
+def test_apply_stacked_semantics(kind):
+    """Adversary rows transform per kind; honest rows are bit-exact."""
+    atk = AttackModel(kind=kind, fraction=0.5, strength=3.0, sigma=2.0)
+    u = {"w": jnp.arange(12, dtype=jnp.float32).reshape(4, 3) + 1.0}
+    adv = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    keys = attack_keys(jax.random.PRNGKey(0), 4)
+    out = np.asarray(atk.apply_stacked(
+        u, adv, keys if atk.needs_keys else None)["w"])
+    ref = np.asarray(u["w"])
+    np.testing.assert_array_equal(out[[1, 3]], ref[[1, 3]])  # honest rows
+    if kind == "sign_flip":
+        np.testing.assert_array_equal(out[[0, 2]], -3.0 * ref[[0, 2]])
+    elif kind == "scale":
+        np.testing.assert_array_equal(out[[0, 2]], 3.0 * ref[[0, 2]])
+    elif kind == "zero":
+        np.testing.assert_array_equal(out[[0, 2]], np.zeros((2, 3)))
+    elif kind == "nan":
+        assert np.isnan(out[[0, 2]]).all()
+    else:  # gauss: replaced, deterministic in the keys
+        assert not np.array_equal(out[[0, 2]], ref[[0, 2]])
+        again = np.asarray(atk.apply_stacked(u, adv, keys)["w"])
+        np.testing.assert_array_equal(out, again)
+
+
+def test_gauss_requires_keys():
+    atk = AttackModel(kind="gauss", fraction=0.5)
+    with pytest.raises(ValueError, match="keys"):
+        atk.apply_stacked({"w": jnp.ones((2, 3))}, jnp.asarray([1.0, 0.0]))
+
+
+# ---------------------------------------------------------------------------
+# sync engines: NaN quarantine promoted from async (satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["cohort", "full"])
+def test_sync_nan_quarantine_keeps_params_finite_and_meters(engine):
+    """A 40% NaN-uploading fleet under plain fedavg: without the decode
+    gate every round would poison Θ; with it the params stay finite, the
+    poisoned rows are metered in RoundRecord.quarantined, and EF residuals
+    of quarantined clients stay at their round-entry state (zeros)."""
+    M = 10
+    loss_fn, params, batches, n = _problem(M, dim=32, classes=10)
+    st = strategy.get("fig5", error_feedback=True).replace(
+        attack=AttackModel(kind="nan", fraction=0.4))
+    s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=2,
+                                      engine=engine)
+    s.run(batches, n, rounds=4)
+    for leaf in jax.tree_util.tree_leaves(s.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert sum(r.quarantined for r in s.history) > 0
+    assert s.history[0].quarantined == s.history[0].adversarial == 4
+    adv = st.attack.adversary_mask(M).astype(bool)
+    for leaf in jax.tree_util.tree_leaves(s._residuals):
+        np.testing.assert_array_equal(
+            np.asarray(leaf)[adv], np.zeros_like(np.asarray(leaf)[adv]))
+    summ = s.summary()
+    assert summ["quarantined"] == sum(r.quarantined for r in s.history)
+    assert summ["attack"].startswith("nan")
+    assert summ["adversarial_uploads"] > 0
+
+
+@pytest.mark.parametrize("kind", ["sign_flip", "scale", "gauss", "zero",
+                                  "nan"])
+def test_cohort_matches_oracle_under_every_attack_kind(kind):
+    """Both sync engines agree bit-exactly whatever the adversaries send —
+    including the keyed (gauss) and non-finite (nan) transforms."""
+    M = 12
+    loss_fn, params, batches, n = _problem(M)
+    st = strategy.get("fig5", error_feedback=True).replace(
+        attack=AttackModel(kind=kind, fraction=0.25, strength=2.0,
+                           sigma=1.5))
+    runs = {}
+    for engine in ("cohort", "full"):
+        s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=5,
+                                          engine=engine)
+        s.run(batches, n, rounds=5)
+        runs[engine] = s
+    _assert_trees_equal(runs["cohort"].params, runs["full"].params)
+    _assert_trees_equal(runs["cohort"]._residuals, runs["full"]._residuals)
+    assert ([ (r.quarantined, r.adversarial) for r in runs["cohort"].history]
+            == [(r.quarantined, r.adversarial) for r in runs["full"].history])
+
+
+# ---------------------------------------------------------------------------
+# async engine: attacks compose with the event-loop quarantine
+# ---------------------------------------------------------------------------
+def test_async_quarantines_nan_attack():
+    """The nan attack rides the dispatch sweep into the async engine's
+    existing decode gate: adversary uploads are quarantined event-by-event,
+    params stay finite, and the Byzantine accounting lands in the stats."""
+    M = 10
+    loss_fn, params, batches, n = _problem(M)
+    st = strategy.get("fig3", hetero=HeteroModel(profile="mobile")).replace(
+        attack=AttackModel(kind="nan", fraction=0.3))
+    s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=9,
+                                      engine="async")
+    s.run(batches, n, rounds=4)
+    for leaf in jax.tree_util.tree_leaves(s.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert sum(r.quarantined for r in s.history) > 0
+    assert sum(r.adversarial for r in s.history) > 0
+    assert s.summary()["attack"] == "nan(f=0.3)"

@@ -1,0 +1,225 @@
+"""Byzantine-robust aggregators (repro.core.robust; DESIGN.md §9).
+
+Three layers: construction-time knob validation, the algebraic invariants
+the engine equivalences rely on (honest-fleet degeneration to FedAvg,
+zero-weight rows exactly absent), and the breakdown-point property — a
+fleet with f = 0.3 amplified sign-flip adversaries trains DOWN under the
+robust rules while plain FedAvg climbs.  The cohort-vs-oracle and
+async-degeneration properties for the registered robust presets live in
+tests/test_strategy.py and tests/test_async.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FederatedServer, strategy
+from repro.core.attacks import AttackModel
+from repro.core.federated import fedavg_aggregate
+from repro.core.robust import (coordinate_median, krum, multi_krum,
+                               norm_filter, trimmed_mean)
+from repro.core.sampling import ImportanceSampler
+
+
+@functools.lru_cache()
+def _problem(num_clients, dim=8, classes=3, num_batches=2, batch=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (num_clients, num_batches, batch, dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1),
+                           (num_clients, num_batches, batch), 0, classes)
+
+    def loss_fn(params, data):
+        xb, yb = data
+        logp = jax.nn.log_softmax(xb @ params["w"] + params["b"])
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    params = {"w": 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           (dim, classes)),
+              "b": jnp.zeros((classes,))}
+    n = np.ones((num_clients,), np.float32)
+    return loss_fn, params, (x, y), n
+
+
+_G = {"w": jnp.zeros((4,), jnp.float32)}
+_UPS = {"w": jnp.array([[1.0, 2.0, 3.0, 4.0],
+                        [100.0, -5.0, 0.0, 7.0],
+                        [0.5, 0.5, 0.5, 0.5]])}
+_W = jnp.array([1.0, 0.0, 2.0])
+
+ROBUST_FACTORIES = {
+    "coordinate_median": coordinate_median,
+    "trimmed_mean(0.2)": lambda: trimmed_mean(0.2),
+    "krum(0)": lambda: krum(0),
+    "multi_krum(1,2)": lambda: multi_krum(1, 2),
+    "norm_filter(5.0)": lambda: norm_filter(5.0),
+}
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+def test_factory_args_validated_at_construction():
+    with pytest.raises(ValueError, match="max_norm"):
+        strategy.clipped_fedavg(-1.0)
+    with pytest.raises(ValueError, match="max_norm"):
+        strategy.clipped_fedavg(0.0)
+    with pytest.raises(ValueError, match="beta"):
+        trimmed_mean(0.5)
+    with pytest.raises(ValueError, match="beta"):
+        trimmed_mean(-0.1)
+    with pytest.raises(ValueError, match="f"):
+        krum(-1)
+    with pytest.raises(ValueError, match="f"):
+        multi_krum(-2, 1)
+    with pytest.raises(ValueError, match="m"):
+        multi_krum(1, 0)
+    with pytest.raises(ValueError, match="max_norm"):
+        norm_filter(0.0)
+
+
+def test_get_aggregator_registry():
+    assert strategy.get_aggregator("fedavg").name == "fedavg"
+    assert strategy.get_aggregator("trimmed_mean", 0.2).name == \
+        "trimmed_mean(0.2)"
+    assert not strategy.get_aggregator("krum", 1).ht_compatible
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        strategy.get_aggregator("median-of-means")
+
+
+# ---------------------------------------------------------------------------
+# honest-fleet degeneration
+# ---------------------------------------------------------------------------
+def test_trimmed_mean_zero_beta_is_fedavg_bit_exact():
+    """beta = 0 returns the fedavg fn ITSELF — degeneration by identity."""
+    assert trimmed_mean(0.0).fn is fedavg_aggregate
+
+
+def test_median_equals_fedavg_at_single_client():
+    g = {"w": jnp.asarray([0.25, -1.5], jnp.float32)}
+    u = {"w": jnp.asarray([[0.125, 3.75]], jnp.float32)}
+    w = jnp.asarray([7.0])
+    med = coordinate_median().fn(g, u, w, "delta")
+    avg = fedavg_aggregate(g, u, w, "delta")
+    np.testing.assert_array_equal(np.asarray(med["w"]), np.asarray(avg["w"]))
+
+
+def test_weighted_median_and_trim_examples():
+    """Hand-checked values: weights [1, 0, 2] over rows [1..4], junk,
+    [0.5]*4 — the zero-weight row never matters, the w=2 row holds the
+    median, and a 0.2-trim clips one third of the heavy row's mass."""
+    med = coordinate_median().fn(_G, _UPS, _W, "delta")
+    np.testing.assert_array_equal(np.asarray(med["w"]),
+                                  np.full((4,), 0.5, np.float32))
+    tm = trimmed_mean(0.2).fn(_G, _UPS, _W, "delta")
+    # per coord: sorted masses trim 0.6 off each tail of total 3.0
+    expect = []
+    for c in range(4):
+        vals = np.asarray(_UPS["w"])[:, c]
+        order = np.argsort(vals, kind="stable")
+        ws = np.asarray(_W)[order]
+        cum = np.cumsum(ws)
+        kept = np.clip(np.minimum(cum, 2.4) - np.maximum(cum - ws, 0.6),
+                       0.0, None)
+        expect.append((kept * vals[order]).sum() / kept.sum())
+    np.testing.assert_allclose(np.asarray(tm["w"]), expect, rtol=1e-6)
+
+
+def test_krum_picks_central_candidate_and_filter_drops_outlier():
+    out = krum(0).fn(_G, _UPS, _W, "delta")
+    # row 1 (the 100-valued outlier) has weight 0 -> candidates are rows
+    # 0 and 2; both score d(0,2), argmin tie breaks to row 0.
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(_UPS["w"])[0])
+    nf = norm_filter(5.0).fn(_G, _UPS, jnp.ones((3,)), "delta")
+    # rows 0 (norm ~5.48) and 1 are rejected; only row 2 survives
+    np.testing.assert_array_equal(np.asarray(nf["w"]),
+                                  np.asarray(_UPS["w"])[2])
+
+
+# ---------------------------------------------------------------------------
+# zero-weight rows are absent (the oracle-equivalence contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(ROBUST_FACTORIES))
+def test_zero_weight_rows_are_exactly_absent(name):
+    """Appending arbitrary finite zero-weight rows — the oracle's
+    non-participants, post-quarantine — must not change a single bit."""
+    agg = ROBUST_FACTORIES[name]()
+    junk = {"w": jnp.array([[9e9, -3.0, 2.0, 1.0],
+                            [7.0, 7.0, 7.0, 7.0]])}
+    ups2 = {"w": jnp.concatenate([_UPS["w"], junk["w"]])}
+    w2 = jnp.concatenate([_W, jnp.zeros((2,))])
+    base = agg.fn(_G, _UPS, _W, "delta")
+    padded = agg.fn(_G, ups2, w2, "delta")
+    np.testing.assert_array_equal(np.asarray(base["w"]),
+                                  np.asarray(padded["w"]))
+
+
+def test_empty_round_is_noop():
+    w0 = jnp.zeros((3,))
+    for name in sorted(ROBUST_FACTORIES):
+        out = ROBUST_FACTORIES[name]().fn(_G, _UPS, w0, "delta")
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.zeros((4,), np.float32),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# HT-compat matrix: Krum x Horvitz-Thompson rejected at build time
+# ---------------------------------------------------------------------------
+def test_krum_with_ht_sampler_raises_at_build_time():
+    loss_fn, params, _, _ = _problem(8)
+    st = strategy.get("fig3-importance").replace(
+        aggregator=multi_krum(1, 2))
+    with pytest.raises(TypeError, match="Horvitz-Thompson"):
+        strategy.build_round(st, loss_fn, 8, form="full")
+    # the weighted-rank rules DO accept HT weights
+    ok = strategy.get("fig3-importance").replace(
+        aggregator=coordinate_median())
+    strategy.build_round(ok, loss_fn, 8, form="full")
+    assert isinstance(ImportanceSampler().normalize, bool)
+
+
+# ---------------------------------------------------------------------------
+# breakdown point: one aggregation step, then a short training run
+# ---------------------------------------------------------------------------
+def test_sign_flip_below_breakdown_cannot_move_median():
+    """30% of the weight mass uploads -4u: the weighted median per
+    coordinate is still an honest value, while the FedAvg mean flips sign
+    (strength 4 > (1-f)/f ≈ 2.33)."""
+    rows = jnp.concatenate([jnp.ones((7, 5)), -4.0 * jnp.ones((3, 5))])
+    g = {"w": jnp.zeros((5,), jnp.float32)}
+    w = jnp.ones((10,))
+    med = coordinate_median().fn(g, {"w": rows}, w, "delta")
+    np.testing.assert_array_equal(np.asarray(med["w"]), np.ones((5,)))
+    tm = trimmed_mean(0.3).fn(g, {"w": rows}, w, "delta")
+    np.testing.assert_allclose(np.asarray(tm["w"]), np.ones((5,)),
+                               rtol=1e-5)
+    avg = fedavg_aggregate(g, {"w": rows}, w, "delta")
+    assert float(np.asarray(avg["w"])[0]) < 0.0  # ascent direction
+    mk = multi_krum(3, 4).fn(g, {"w": rows}, w, "delta")
+    np.testing.assert_allclose(np.asarray(mk["w"]), np.ones((5,)),
+                               rtol=1e-5)
+
+
+def test_breakdown_training_run_bounded_vs_unbounded():
+    """6 attacked rounds, dense uploads: the median-aggregated model's
+    loss stays at-or-below its start while plain FedAvg's climbs — the
+    chaos criterion in miniature (the full curve grid lives in
+    benchmarks/robust_agg.py)."""
+    M = 10
+    loss_fn, params, batches, n = _problem(M)
+    attack = AttackModel(kind="sign_flip", fraction=0.3, strength=4.0)
+    finals = {}
+    for name, agg in [("fedavg", strategy.FEDAVG),
+                      ("median", coordinate_median())]:
+        st = strategy.get("fig3", learning_rate=0.3).replace(
+            attack=attack, aggregator=agg)
+        s = FederatedServer.from_strategy(st, loss_fn, params, M, seed=1)
+        s.run(batches, n, rounds=6)
+        assert any(r.adversarial > 0 for r in s.history)
+        finals[name] = [r.mean_loss for r in s.history]
+    assert finals["median"][-1] < finals["median"][0]
+    assert finals["fedavg"][-1] > finals["fedavg"][0]
