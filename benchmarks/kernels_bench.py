@@ -11,7 +11,9 @@ plus the analytic HBM-sweep accounting that matters on TPU:
   leaf-count independent — vs ``L * (iters + 2)`` for the per-leaf loop.
 
 The whole-pytree rows are also written to ``BENCH_masking.json`` at the repo
-root so the perf trajectory tracks this hot path.
+root so the perf trajectory tracks this hot path, and the wire-path section
+(DESIGN.md §10) — fused mask+pack+quantise vs the jnp mask-then-codec chain,
+plus the COO-vs-bitmap density table — to ``BENCH_wirepath.json``.
 """
 
 import json
@@ -20,7 +22,10 @@ import time
 
 import jax
 
-from repro.core.masking import selective_mask_exact, selective_mask_threshold
+from repro.core.codecs import ChainCodec, Int8Codec, SparseCodec
+from repro.core.masking import (MaskingConfig, mask_pytree,
+                                selective_mask_exact,
+                                selective_mask_threshold)
 from repro.kernels import ops
 
 ITERS = 8
@@ -29,6 +34,10 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
 # smoke runs (CI) write here so they never clobber the tracked full-run JSON
 SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
                           "BENCH_masking.smoke.json")
+WIRE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "BENCH_wirepath.json")
+WIRE_SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                               "BENCH_wirepath.smoke.json")
 
 
 def _time(fn, *args, reps=5):
@@ -71,6 +80,69 @@ def _per_leaf_mask(tree, gamma, min_leaf_size=256):
                       else ops.topk_mask(leaf, gamma, iters=ITERS,
                                          interpret=True)),
         tree)
+
+
+def _wirepath_rows(smoke: bool):
+    """Wire-path rows (DESIGN.md §10): one upload's delta -> wire payload.
+
+    Compares the fused kernel pipeline (``ops.topk_encode_pytree``: stats +
+    refine counts + ONE encode sweep emitting int8 values and the keep
+    bitmap) against the jnp chain the engines previously ran (mask_pytree
+    then ``SparseCodec``+``Int8Codec``, which re-reads the dense fp32 tree
+    three more times).  Wall-clock is interpret-mode (CPU container — the
+    analytic sweep/byte columns are the TPU-relevant numbers), HBM cost is
+    ``ops.wirepath_sweep_count`` / ``ops.wirepath_bytes_moved``.
+    """
+    gamma = 0.1
+    reps = 2 if smoke else 5
+    trees = [("paper_vgg_gru", _paper_models_pytree())]
+    if not smoke:
+        trees.append(("transformer_12L", _transformer_pytree()))
+    rows = []
+    cfg = MaskingConfig(gamma=gamma, mode="selective")
+    chain = ChainCodec((SparseCodec(gamma=gamma), Int8Codec()))
+    key = jax.random.PRNGKey(0)
+    for model, tree in trees:
+        n = int(sum(leaf.size for leaf in jax.tree_util.tree_leaves(tree)))
+        t_jnp = _time(jax.jit(
+            lambda t: chain.encode(mask_pytree(key, t, cfg))), tree,
+            reps=reps)
+        t_fused = _time(
+            lambda t: ops.topk_encode_pytree(t, gamma, quantize=True,
+                                             interpret=True), tree,
+            reps=reps)
+        s_fused = ops.wirepath_sweep_count(fused=True)
+        s_jnp = ops.wirepath_sweep_count(fused=False)
+        b_fused = ops.wirepath_bytes_moved(n, gamma, fused=True)
+        b_jnp = ops.wirepath_bytes_moved(n, gamma, fused=False)
+        rows.append({
+            "figure": "wirepath", "model": model, "n_params": n,
+            "gamma": gamma,
+            "jnp_chain_us": round(t_jnp, 1),
+            "fused_interpret_us": round(t_fused, 1),
+            "fused_hbm_sweeps": s_fused,
+            "jnp_hbm_sweeps": s_jnp,
+            "sweep_ratio": round(s_jnp / s_fused, 2),
+            "fused_hbm_bytes": b_fused["total"],
+            "jnp_hbm_bytes": b_jnp["total"],
+            "byte_ratio": round(b_jnp["total"] / b_fused["total"], 2),
+            "payload_bytes": b_fused["payload_bytes"],
+        })
+
+    # ---- COO vs bitmap wire density table (crossover at k/n = 1/32)
+    n = 1 << 16 if smoke else 1 << 20
+    for g in (0.005, 0.01, 0.02, 0.03125, 0.05, 0.1, 0.2, 0.5):
+        coo = ops.wirepath_bytes_moved(n, g, fused=True,
+                                       wire="coo")["payload_bytes"]
+        bmp = ops.wirepath_bytes_moved(n, g, fused=True,
+                                       wire="bitmap")["payload_bytes"]
+        rows.append({
+            "figure": "wirepath_density", "n_params": n, "gamma": g,
+            "coo_payload_bytes": coo, "bitmap_payload_bytes": bmp,
+            "winner": "bitmap" if bmp < coo else "coo",
+            "bitmap_saving": round(1.0 - bmp / coo, 3),
+        })
+    return rows
 
 
 def run(smoke: bool = False):
@@ -125,7 +197,11 @@ def run(smoke: bool = False):
         })
     with open(SMOKE_PATH if smoke else BENCH_PATH, "w") as f:
         json.dump(mask_rows, f, indent=1)
-    return rows + mask_rows
+
+    wire_rows = _wirepath_rows(smoke)
+    with open(WIRE_SMOKE_PATH if smoke else WIRE_PATH, "w") as f:
+        json.dump(wire_rows, f, indent=1)
+    return rows + mask_rows + wire_rows
 
 
 if __name__ == "__main__":

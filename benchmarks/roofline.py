@@ -1,9 +1,14 @@
 """Roofline reader: aggregates results/dryrun/*.json into the §Roofline
-table (EXPERIMENTS.md).  Pure report — run the dry-run first."""
+table (EXPERIMENTS.md), plus the wire-path HBM-bound floor (DESIGN.md §10)
+from ``BENCH_wirepath.json``.  Pure report — run the dry-run and
+``benchmarks.kernels_bench`` first."""
 
 import glob
 import json
 import os
+
+WIRE_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "BENCH_wirepath.json")
 
 
 def load(out_dir: str = "results/dryrun"):
@@ -38,6 +43,34 @@ def table(recs, multi_pod=False, fed=None):
     return rows
 
 
+def wirepath_table(path: str = WIRE_JSON):
+    """HBM-bound time floor for one upload's wire encode on a v5e chip.
+
+    Reads the bytes-moved model rows that ``benchmarks.kernels_bench``
+    writes to ``BENCH_wirepath.json`` and divides by the chip HBM bandwidth
+    — the fused path's floor is the bytes ratio (not the sweep ratio),
+    since its narrow int8/bitmap sweeps are cheaper than fp32 ones."""
+    from repro.launch.mesh import HBM_BW
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        recs = json.load(fh)
+    rows = []
+    for r in recs:
+        if r.get("figure") != "wirepath":
+            continue
+        rows.append({
+            "figure": "roofline_wirepath", "model": r["model"],
+            "n_params": r["n_params"],
+            "fused_hbm_us": round(r["fused_hbm_bytes"] / HBM_BW * 1e6, 1),
+            "jnp_hbm_us": round(r["jnp_hbm_bytes"] / HBM_BW * 1e6, 1),
+            "floor_speedup": round(r["jnp_hbm_bytes"]
+                                   / r["fused_hbm_bytes"], 2),
+            "sweep_ratio": r["sweep_ratio"],
+        })
+    return rows
+
+
 def run():
     recs = load()
     rows = []
@@ -45,7 +78,7 @@ def run():
         for r in table(recs, multi_pod=mp):
             rows.append({"figure": "roofline",
                          "mesh": "2x16x16" if mp else "16x16", **r})
-    return rows
+    return rows + wirepath_table()
 
 
 def main():

@@ -15,6 +15,17 @@ format.  Earlier revisions only *estimated* upload bytes
   float leaf (zeros stay exactly zero); 4 -> 1 value bytes.
 * ``ChainCodec``        — composition, e.g. sparse COO then int8 on the
   surviving values (``Chain(Sparse, Int8)``); decode runs in reverse.
+* ``BitmapCodec``       — per-leaf 1-bit/element membership bitmap + k
+  values in index order: ``ceil(n/8) + k*vb`` bytes vs COO's ``k*(4+vb)``,
+  cheaper whenever the kept density exceeds 1/32 (DESIGN.md §10).
+* ``FusedSparseCodec``  — the kernel-backed wire path (DESIGN.md §10):
+  ``encode`` runs ``repro.kernels.ops.topk_encode_pytree`` over the
+  masked delta, so the COO/bitmap payload (optionally int8-quantised) is
+  emitted by ONE fused Pallas sweep instead of the three re-reads the jnp
+  codecs above cost.  Wire layout, bytes and decoded values are identical
+  to the equivalent jnp codec (``SparseCodec`` / ``BitmapCodec`` /
+  ``ChainCodec(..., Int8Codec())``) — the jnp codecs stay verbatim as the
+  bit-exactness oracle, and ``decode`` simply delegates to them.
 
 Every codec reports **exact** wire bytes: ``wire_bytes(tree)`` traces
 ``encode`` with ``jax.eval_shape`` (no FLOPs, no device buffers) and sums
@@ -36,8 +47,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import (_is_concrete, decode_sparse,
-                                    dequantize_int8, encode_sparse,
+from repro.core.compression import (_is_concrete, decode_bitmap,
+                                    decode_sparse, dequantize_int8,
+                                    encode_bitmap, encode_sparse,
                                     quantize_int8)
 
 PyTree = Any
@@ -48,6 +60,8 @@ __all__ = [
     "SparseCodec",
     "Int8Codec",
     "ChainCodec",
+    "BitmapCodec",
+    "FusedSparseCodec",
     "tree_wire_nbytes",
     "roundtrip_stacked",
     "with_axis0_slices",
@@ -223,6 +237,137 @@ class Int8Codec(UploadCodec):
             wire, is_leaf=_is_q8)
 
 
+def _is_bitmap(leaf: Any) -> bool:
+    return isinstance(leaf, dict) and "bitmap" in leaf and "values" in leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class BitmapCodec(UploadCodec):
+    """Per-leaf bitmap wire format for masked uploads (DESIGN.md §10).
+
+    Same slot budgeting as :class:`SparseCodec` (leaves under
+    ``min_leaf_size`` ship dense, others get ``k = max(1, round(gamma*n))``
+    value slots), but membership ships as 1 bit/element instead of a 4-byte
+    index per kept value: ``ceil(n/8) + k*vb`` wire bytes vs COO's
+    ``k*(4+vb)``.  Bitmap is the cheaper wire whenever the kept density
+    exceeds ``1/32`` (~3.1%) — independent of the value width, so the
+    crossover survives int8 chaining.  Round-trip is bit-exact whenever at
+    most k nonzeros survived the mask, like the COO codec.
+    """
+
+    gamma: float = 0.1
+    min_leaf_size: int = 256
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        """Wire-format label surfaced in ``FederatedServer.summary()``."""
+        return f"bitmap(gamma={self.gamma})"
+
+    def _slots(self, size: int) -> int:
+        return max(1, int(round(self.gamma * size)))
+
+    def encode(self, tree: PyTree) -> PyTree:
+        """Bitmap-encode every maskable leaf (small leaves ship dense)."""
+        def enc(leaf):
+            if leaf.size < self.min_leaf_size or self.gamma >= 1.0:
+                return leaf
+            return encode_bitmap(leaf, min(self._slots(leaf.size), leaf.size))
+
+        return jax.tree_util.tree_map(enc, tree)
+
+    def decode(self, wire: PyTree) -> PyTree:
+        """Expand every bitmap leaf back to dense; pass dense leaves (after
+        the non-finite gate — bitmap payloads are validated in
+        decode_bitmap)."""
+        return jax.tree_util.tree_map(
+            lambda leaf: (decode_bitmap(leaf) if _is_bitmap(leaf)
+                          else _reject_nonfinite(leaf, self.name)),
+            wire, is_leaf=_is_bitmap)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSparseCodec(UploadCodec):
+    """Kernel-backed wire path: mask -> pack -> quantise in one HBM sweep.
+
+    ``encode`` routes the (already-masked) upload pytree through
+    ``repro.kernels.ops.topk_encode_pytree(assume_masked=True)`` — the
+    fused segmented Pallas sweep emits the COO (``wire="coo"``) or bitmap
+    (``wire="bitmap"``) payload, int8-quantised in the same pass when
+    ``quantized`` — instead of re-reading the masked fp32 pytree three
+    more times like the jnp codec chain (DESIGN.md §10,
+    ``ops.wirepath_sweep_count``).
+
+    The wire is structurally and byte-identical to the equivalent jnp
+    codec — ``SparseCodec`` / ``BitmapCodec``, chained with
+    :class:`Int8Codec` when ``quantized`` — and ``decode`` delegates to
+    those oracles, inheriting their malformed-payload validation.  Decoded
+    values are bit-exact vs the oracle whenever each leaf's nonzero count
+    fits its slot budget (threshold masks guarantee this off tie
+    plateaus); on an overflowing plateau the fused path sheds by highest
+    index where the oracle sheds smallest magnitude.
+
+    ``interpret=None`` auto-detects (CPU containers run the Pallas kernels
+    in interpret mode; TPU compiles them).
+    """
+
+    gamma: float = 0.1
+    min_leaf_size: int = 256
+    quantized: bool = False
+    wire: str = "coo"           # coo | bitmap
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        if self.wire not in ("coo", "bitmap"):
+            raise ValueError(f"unknown wire format {self.wire!r}")
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        """Wire-format label surfaced in ``FederatedServer.summary()``."""
+        kind = "bitmap" if self.wire == "bitmap" else "sparse"
+        suffix = "+int8" if self.quantized else ""
+        return f"fused-{kind}(gamma={self.gamma}){suffix}"
+
+    def _oracle(self) -> UploadCodec:
+        """The jnp codec whose wire this codec reproduces byte-for-byte."""
+        base: UploadCodec = (
+            BitmapCodec(gamma=self.gamma, min_leaf_size=self.min_leaf_size)
+            if self.wire == "bitmap"
+            else SparseCodec(gamma=self.gamma,
+                             min_leaf_size=self.min_leaf_size))
+        if self.quantized:
+            return ChainCodec((base, Int8Codec()))
+        return base
+
+    def encode(self, tree: PyTree) -> PyTree:
+        """One fused kernel sweep from masked delta to wire payload."""
+        from repro.kernels import ops
+
+        wire = ops.topk_encode_pytree(
+            tree, self.gamma, min_leaf_size=self.min_leaf_size,
+            quantize=self.quantized, wire=self.wire, assume_masked=True,
+            interpret=self.interpret)
+        if not self.quantized:
+            return wire
+
+        # The kernel only touches maskable leaves; quantise the small dense
+        # float pass-through leaves here so the wire is byte-identical to
+        # the ChainCodec oracle (whose Int8 stage quantises every float
+        # leaf).
+        def payload(leaf):
+            return _is_coo(leaf) or _is_bitmap(leaf)
+
+        def small(leaf):
+            if not payload(leaf) and jnp.issubdtype(leaf.dtype, jnp.floating):
+                return quantize_int8(leaf)
+            return leaf
+
+        return jax.tree_util.tree_map(small, wire, is_leaf=payload)
+
+    def decode(self, wire: PyTree) -> PyTree:
+        """Delegate to the jnp oracle codec (same wire, same validation)."""
+        return self._oracle().decode(wire)
+
+
 @dataclasses.dataclass(frozen=True)
 class ChainCodec(UploadCodec):
     """Left-to-right composition: ``encode`` folds forward through
@@ -257,7 +402,9 @@ class ChainCodec(UploadCodec):
 def with_axis0_slices(codec: UploadCodec) -> UploadCodec:
     """Re-budget every SparseCodec stage to the pod path's
     per-first-axis-slice masking granularity (see
-    ``SparseCodec.axis0_slices``); other codecs pass through unchanged."""
+    ``SparseCodec.axis0_slices``); other codecs — including the
+    whole-leaf-budgeted :class:`BitmapCodec` / :class:`FusedSparseCodec`,
+    which are simulation-engine wires — pass through unchanged."""
     if isinstance(codec, SparseCodec):
         return dataclasses.replace(codec, axis0_slices=True)
     if isinstance(codec, ChainCodec):

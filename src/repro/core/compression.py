@@ -10,6 +10,11 @@ Bitmap wins whenever gamma > value_bits/ (index_bits) ≈ 1/32 for fp32+int32,
 so the cost model picks the cheaper automatically (``encoding="auto"``).
 This byte accounting feeds the §Roofline collective term for the technique
 (DESIGN.md §3.2) and the transport-cost numbers in EXPERIMENTS.md.
+
+Both encodings are REAL wire transforms, not just byte models:
+``encode_sparse``/``decode_sparse`` back ``codecs.SparseCodec`` and
+``encode_bitmap``/``decode_bitmap`` back ``codecs.BitmapCodec`` (DESIGN.md
+§10 derives the crossover).
 """
 
 from __future__ import annotations
@@ -29,6 +34,8 @@ __all__ = [
     "pytree_payload_bytes",
     "encode_sparse",
     "decode_sparse",
+    "encode_bitmap",
+    "decode_bitmap",
     "quantize_int8",
     "dequantize_int8",
     "quantize_pytree",
@@ -207,6 +214,106 @@ def decode_sparse(payload: Dict[str, jax.Array]) -> jax.Array:
                 "sparse payload values contain non-finite entries")
     out = jnp.zeros((size,), values.dtype)
     out = out.at[indices].add(values)
+    return out.reshape(shape)
+
+
+def encode_bitmap(masked: jax.Array, k: int) -> Dict[str, jax.Array]:
+    """Bitmap-encode a masked tensor: 1 membership bit/element + k values.
+
+    The wire format behind ``repro.core.codecs.BitmapCodec`` (DESIGN.md
+    §10): ``bitmap`` packs the kept-entry membership mask LSB-first
+    (byte ``b`` bit ``j`` describes element ``8 b + j``, trailing padding
+    bits zero) and ``values`` carries the kept entries in INDEX order,
+    zero-padded to the static k slots.  Bytes: ``ceil(n / 8) + k * vb`` vs
+    COO's ``k * (4 + vb)`` — bitmap wins whenever the kept density
+    ``k / n > 1 / 32``, independent of the value width vb.
+
+    Slot selection mirrors :func:`encode_sparse`: magnitude-ranked with a
+    stable index tie-break, so a tensor overflowing its budget sheds its
+    smallest values and the round-trip is bit-exact whenever at most k
+    nonzeros survived the mask.
+    """
+    if k < 1:
+        raise ValueError(f"encode_bitmap needs k >= 1, got {k}")
+    flat = masked.reshape(-1)
+    n = flat.size
+    if k > n:
+        raise ValueError(f"encode_bitmap k={k} exceeds tensor size {n}")
+    nz = flat != 0
+    key = jnp.where(nz, -jnp.abs(flat.astype(jnp.float32)), jnp.inf)
+    order = jnp.argsort(key)
+    sel = order[:k]
+    keep = jnp.zeros((n,), bool).at[sel].set(nz[sel])
+    slot = jnp.cumsum(keep) - 1
+    dest = jnp.where(keep, slot, k)          # non-kept -> trash slot k
+    vals = jnp.zeros((k + 1,), flat.dtype).at[dest].set(
+        jnp.where(keep, flat, jnp.zeros_like(flat)))[:k]
+    pad = (-n) % 8
+    bits = jnp.pad(keep.astype(jnp.int32), (0, pad)).reshape(-1, 8)
+    bm = jnp.sum(bits * (1 << jnp.arange(8)), axis=1).astype(jnp.uint8)
+    return {"bitmap": bm, "values": vals,
+            "shape": np.asarray(masked.shape, np.int32)}
+
+
+def decode_bitmap(payload: Dict[str, jax.Array]) -> jax.Array:
+    """Decode a bitmap payload back to a dense tensor.
+
+    Mirrors :func:`decode_sparse`'s loud-failure contract: missing keys, a
+    non-uint8 or wrongly-sized bitmap, non-1-D values, more value slots
+    than elements, and — when the payload is concrete — stray bits in the
+    trailing padding, a popcount exceeding the value slots, or non-finite
+    values all raise ``ValueError``.  Traced payloads cannot raise; the
+    in-round quarantine gate (``repro.core.async_engine``) masks
+    non-finite rows instead, and an over-full traced bitmap clips to the
+    first k set bits.
+    """
+    missing = {"bitmap", "values", "shape"} - set(payload)
+    if missing:
+        raise ValueError(f"bitmap payload missing keys {sorted(missing)}")
+    bitmap = _as_array(payload["bitmap"], "bitmap payload bitmap")
+    values = _as_array(payload["values"], "bitmap payload values")
+    if bitmap.dtype != jnp.uint8:
+        raise ValueError(
+            f"bitmap payload bitmap must be uint8, got {bitmap.dtype}")
+    if getattr(bitmap, "ndim", 1) != 1 or getattr(values, "ndim", 1) != 1:
+        raise ValueError(
+            f"bitmap payload bitmap/values must be 1-D, got shapes "
+            f"{bitmap.shape} vs {values.shape}")
+    shape = tuple(int(s) for s in payload["shape"])
+    if any(s < 0 for s in shape):
+        raise ValueError(f"bitmap payload has negative shape {shape}")
+    size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    nb = (size + 7) // 8
+    if bitmap.shape[0] != nb:
+        raise ValueError(
+            f"bitmap payload has {bitmap.shape[0]} bytes for a tensor of "
+            f"{size} elements (expected {nb})")
+    k = int(values.shape[0])
+    if k < 1 or k > size:
+        raise ValueError(
+            f"bitmap payload has {k} value slots for a tensor of "
+            f"{size} elements")
+    bits = ((bitmap.astype(jnp.int32)[:, None] >> jnp.arange(8)) & 1)
+    bits = bits.reshape(-1)
+    if _is_concrete(bits):
+        b = np.asarray(bits)
+        if b[size:].any():
+            raise ValueError(
+                "bitmap payload has membership bits set in the trailing "
+                "padding")
+        if int(b[:size].sum()) > k:
+            raise ValueError(
+                f"bitmap payload popcount {int(b[:size].sum())} exceeds its "
+                f"{k} value slots")
+    if _is_concrete(values):
+        v = np.asarray(values)
+        if (np.issubdtype(v.dtype, np.floating) and v.size
+                and not np.isfinite(v).all()):
+            raise ValueError(
+                "bitmap payload values contain non-finite entries")
+    bits = bits[:size].astype(bool)
+    slot = jnp.clip(jnp.cumsum(bits) - 1, 0, k - 1)
+    out = jnp.where(bits, values[slot], jnp.zeros((), values.dtype))
     return out.reshape(shape)
 
 

@@ -57,8 +57,9 @@ import jax.numpy as jnp
 from repro.core.async_engine import AsyncConfig
 from repro.core.attacks import AttackModel
 from repro.core.client import ClientConfig
-from repro.core.codecs import (ChainCodec, IdentityCodec, Int8Codec,
-                               SparseCodec, UploadCodec)
+from repro.core.codecs import (BitmapCodec, ChainCodec, FusedSparseCodec,
+                               IdentityCodec, Int8Codec, SparseCodec,
+                               UploadCodec)
 from repro.core.federated import (FederatedConfig, fedavg_aggregate,
                                   make_cohort_round, make_cohort_scan,
                                   make_federated_round)
@@ -236,12 +237,33 @@ def aggregator_names() -> Tuple[str, ...]:
 # ---------------------------------------------------------------------------
 # the strategy record
 # ---------------------------------------------------------------------------
-def default_codec(masking: MaskPolicy, quantized: bool = False) -> UploadCodec:
+def default_codec(masking: MaskPolicy, quantized: bool = False,
+                  backend: str = "jnp", wire: str = "coo") -> UploadCodec:
     """The wire format a mask policy implies: dense uploads ship identity,
     masked uploads ship sparse COO sized to gamma; ``quantized`` chains
-    int8 on the value payload."""
+    int8 on the value payload.
+
+    ``backend``/``wire`` select the codec axis (DESIGN.md §10):
+    ``backend="jnp"`` picks the reference codecs (``SparseCodec`` for
+    ``wire="coo"``, ``BitmapCodec`` for ``wire="bitmap"``, int8 chained on
+    top when ``quantized``); ``backend="fused"`` picks the kernel-backed
+    :class:`FusedSparseCodec`, which emits the same wire (bytes and decoded
+    values) from one fused Pallas sweep.
+    """
+    if backend not in ("jnp", "fused"):
+        raise ValueError(f"unknown codec backend {backend!r}")
+    if wire not in ("coo", "bitmap"):
+        raise ValueError(f"unknown wire format {wire!r}")
     if masking.mode == "none" or masking.gamma >= 1.0:
         base: UploadCodec = IdentityCodec()
+        return ChainCodec((base, Int8Codec())) if quantized else base
+    if backend == "fused":
+        return FusedSparseCodec(gamma=masking.gamma,
+                                min_leaf_size=masking.min_leaf_size,
+                                quantized=quantized, wire=wire)
+    if wire == "bitmap":
+        base = BitmapCodec(gamma=masking.gamma,
+                           min_leaf_size=masking.min_leaf_size)
     else:
         base = SparseCodec(gamma=masking.gamma,
                            min_leaf_size=masking.min_leaf_size)
@@ -291,11 +313,14 @@ class FedStrategy:
 
     def with_masking(self, masking: MaskPolicy, **overrides) -> "FedStrategy":
         """Replace the mask policy AND re-derive a consistent codec (COO
-        slot counts track gamma), preserving int8 chaining if the current
-        codec quantises.  Pass ``codec=`` explicitly to opt out."""
+        slot counts track gamma), preserving int8 chaining and the
+        codec backend/wire axis of the current codec.  Pass ``codec=``
+        explicitly to opt out."""
         if "codec" not in overrides:
-            quantized = _quantizes(self.codec)
-            overrides["codec"] = default_codec(masking, quantized=quantized)
+            overrides["codec"] = default_codec(
+                masking, quantized=_quantizes(self.codec),
+                backend=_codec_backend(self.codec),
+                wire=_codec_wire(self.codec))
         return dataclasses.replace(self, masking=masking, **overrides)
 
     @classmethod
@@ -317,9 +342,33 @@ class FedStrategy:
 def _quantizes(codec: UploadCodec) -> bool:
     if isinstance(codec, Int8Codec):
         return True
+    if isinstance(codec, FusedSparseCodec):
+        return codec.quantized
     if isinstance(codec, ChainCodec):
         return any(_quantizes(s) for s in codec.stages)
     return False
+
+
+def _codec_backend(codec: UploadCodec) -> str:
+    """The ``default_codec`` backend axis a codec sits on."""
+    if isinstance(codec, FusedSparseCodec):
+        return "fused"
+    if isinstance(codec, ChainCodec):
+        if any(_codec_backend(s) == "fused" for s in codec.stages):
+            return "fused"
+    return "jnp"
+
+
+def _codec_wire(codec: UploadCodec) -> str:
+    """The ``default_codec`` wire axis a codec sits on (coo | bitmap)."""
+    if isinstance(codec, BitmapCodec):
+        return "bitmap"
+    if isinstance(codec, FusedSparseCodec):
+        return codec.wire
+    if isinstance(codec, ChainCodec):
+        if any(_codec_wire(s) == "bitmap" for s in codec.stages):
+            return "bitmap"
+    return "coo"
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +471,30 @@ register(get("fig5").with_masking(
     MaskPolicy.selective(0.5),
     codec=ChainCodec((SparseCodec(gamma=0.5), Int8Codec())),
     name="fig5-int8"))
+
+# "fig5-fused": fig5's operating point on the kernel-backed wire path
+# (DESIGN.md §10) — the COO payload is emitted by one fused Pallas sweep
+# (FusedSparseCodec) instead of the jnp codec's three re-reads; wire bytes
+# and decoded values are identical to fig5's, so the cohort==oracle
+# bit-exactness discipline extends to the fused backend.
+register(get("fig5").replace(
+    name="fig5-fused",
+    codec=default_codec(MaskPolicy.selective(0.5), backend="fused")))
+
+# "fig5-fused-int8": the fused wire path with int8 values quantised IN the
+# same sweep (the scale rides the stats sweep) — byte-identical to
+# fig5-int8's ChainCodec((Sparse, Int8)) wire.
+register(get("fig5").replace(
+    name="fig5-fused-int8",
+    codec=default_codec(MaskPolicy.selective(0.5), quantized=True,
+                        backend="fused")))
+
+# "fig5-bitmap": fig5 shipped over the 1-bit/coord membership bitmap wire —
+# at gamma = 0.5, far above the 1/32 density crossover, bitmap membership
+# costs n/8 bytes where COO indices cost 4*k = 2n (DESIGN.md §10).
+register(get("fig5").replace(
+    name="fig5-bitmap",
+    codec=default_codec(MaskPolicy.selective(0.5), wire="bitmap")))
 
 # "fig3-importance": beyond-paper — fig3's dynamic c(t) schedule, but the
 # m_t clients are CHOSEN by tracked update-norm importance with unbiased

@@ -25,14 +25,18 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels import packing as pk
 from repro.kernels import segmented as seg
 from repro.kernels import topk_mask as tk
+from repro.kernels.ref import EXPO_MIN
 
 PyTree = Any
 
-__all__ = ["topk_mask", "topk_mask_pytree", "pytree_sweep_count",
-           "masked_count"]
+__all__ = ["topk_mask", "topk_mask_pytree", "topk_encode_pytree",
+           "pytree_sweep_count", "wirepath_sweep_count",
+           "wirepath_bytes_moved", "masked_count"]
 
 
 def _auto_interpret(interpret):
@@ -183,6 +187,239 @@ def topk_mask_pytree(tree: PyTree, gamma: float, *,
     for i, m in zip(mask_idx, masked):
         leaves[i] = m
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------
+# Fused wire path: delta pytree -> COO / bitmap wire payload (DESIGN.md §10).
+# --------------------------------------------------------------------------
+# "Keep everything nonzero" threshold for the assume-masked path: one bin
+# below the histogram ladder's smallest edge, matching the underfull branch
+# of seg.select_thresholds — magnitudes below 2^(EXPO_MIN-1) (~6e-30 for the
+# default EXPO_MIN = -96) are treated as zero on the wire, the same floor
+# the masking subsystem already applies.
+_WIRE_FLOOR_TAU = float(2.0 ** (EXPO_MIN - 1))
+
+
+def _leaf_wire(flat_vals, flat_bm, ls, seg_index, gamma, wire, scales):
+    """Compact ONE packed leaf's fused-sweep outputs into its wire payload.
+
+    Reads the (already int8/bitmap-width) ``segmented_encode`` outputs only:
+    expands the leaf's keep-bits, assigns each surviving entry its
+    index-order slot via a cumulative sum (overflow beyond the k-slot budget
+    is shed by highest index — the jnp oracle sheds smallest magnitude
+    instead, an observable difference only on tie plateaus that overflow
+    the budget), and scatters values/indices into the static k-slot wire
+    arrays.  No sort, no re-read of fp32 data.
+    """
+    size = ls.size
+    k = min(max(1, int(round(gamma * size))), size)
+    v = jax.lax.slice_in_dim(flat_vals, ls.offset, ls.offset + size)
+    byte0 = ls.offset // 8                       # offset is a SEG_LANE multiple
+    nb = (size + 7) // 8
+    bb = jax.lax.slice_in_dim(flat_bm, byte0, byte0 + nb)
+    bits = ((bb.astype(jnp.int32)[:, None] >> jnp.arange(8)) & 1)
+    bits = bits.reshape(-1)[:size].astype(bool)  # LSB-first, trailing pad = 0
+
+    slot = jnp.cumsum(bits) - 1                  # index-order slot per entry
+    live = bits & (slot < k)
+    dest = jnp.where(live, slot, k)              # overflow -> trash slot k
+    val_buf = jnp.zeros((k + 1,), v.dtype).at[dest].set(
+        jnp.where(live, v, jnp.zeros_like(v)))
+    if scales is not None:
+        values = {"q": val_buf[:k],
+                  "scale": scales[seg_index].astype(jnp.float32)}
+    else:
+        values = val_buf[:k].astype(ls.dtype)
+    shape = np.asarray(ls.shape, np.int32)
+
+    if wire == "coo":
+        idx_buf = jnp.zeros((k + 1,), jnp.int32).at[dest].set(
+            jnp.where(live, jnp.arange(size, dtype=jnp.int32), 0))
+        return {"indices": idx_buf[:k], "values": values, "shape": shape}
+    # bitmap wire: repack the budget-capped bits so the popcount can never
+    # exceed the value slots (byte-identical to compression.encode_bitmap).
+    pad = (-size) % 8
+    capped = jnp.pad(live.astype(jnp.int32), (0, pad)).reshape(-1, 8)
+    bm = jnp.sum(capped * (1 << jnp.arange(8)), axis=1).astype(jnp.uint8)
+    return {"bitmap": bm, "values": values, "shape": shape}
+
+
+def topk_encode_pytree(tree: PyTree, gamma: float, *,
+                       min_leaf_size: int = 256,
+                       refine_sweeps: int = DEFAULT_REFINE_SWEEPS,
+                       candidates: int = DEFAULT_CANDIDATES,
+                       quantize: bool = False,
+                       wire: str = "coo",
+                       assume_masked: bool = False,
+                       interpret: bool | None = None,
+                       slab_rows: int | None = None) -> PyTree:
+    """Delta pytree -> upload wire payload in one fused kernel pipeline.
+
+    The wire-path successor of :func:`topk_mask_pytree` (DESIGN.md §10):
+    instead of materialising a masked dense pytree for ``core.codecs`` to
+    re-read three more times, the final segmented sweep
+    (``seg.segmented_encode``) emits int8-quantised values, a 1-bit/element
+    keep-bitmap and kept counts directly, and the per-leaf compaction into
+    static ``k = max(1, round(gamma * size))``-slot payloads reads only
+    those narrow outputs.  HBM cost: ``wirepath_sweep_count`` /
+    ``wirepath_bytes_moved``.
+
+    Per maskable leaf (``size >= min_leaf_size``) the returned pytree holds
+
+    * ``wire="coo"``    — ``{"indices", "values", "shape"}``, decoded by
+      ``core.compression.decode_sparse``;
+    * ``wire="bitmap"`` — ``{"bitmap", "values", "shape"}`` (LSB-first
+      membership bits), decoded by ``core.compression.decode_bitmap``;
+
+    with ``values = {"q": int8, "scale": f32}`` when ``quantize`` (the scale
+    is ``max|leaf| / 127``, computed by the stats sweep — identical to
+    ``compression.quantize_int8`` because top-k keeps the max-magnitude
+    entry).  Smaller leaves pass through dense and UNQUANTISED — the codec
+    layer (``core.codecs.FusedSparseCodec``) owns small-leaf quantisation so
+    wire bytes match the jnp ``ChainCodec`` oracle exactly.
+
+    ``assume_masked=True`` skips threshold selection (the input is already a
+    masked delta, e.g. inside the codec layer): every entry with magnitude
+    above the masking subsystem's floor (2^(EXPO_MIN-1)) is shipped, so the
+    pipeline costs 1 sweep (2 with ``quantize``, for the scale) instead of
+    ``refine_sweeps + 2``.  Decoded payloads are then bit-exact vs the jnp
+    ``SparseCodec``/``Int8Codec`` oracle whenever each leaf's nonzero count
+    fits its slot budget — which threshold masks guarantee off tie plateaus
+    (property-tested in tests/test_wirepath.py).
+
+    Note the packed buffer is fp32 (``kernels.packing``): non-float leaves
+    are shipped through the same f32 cast the masking path applies, and
+    ``quantize`` treats every maskable leaf as float.
+
+    Deliberately NOT ``@jax.jit``-wrapped: each payload's ``"shape"`` entry
+    is a static numpy constant (like ``PackSpec``), which a whole-function
+    jit would turn into a traced array and break the decoders' static
+    shape handling.  Jit the enclosing computation instead — the round
+    engines do (``codecs.roundtrip_stacked`` under the round's jit/vmap).
+    """
+    if wire not in ("coo", "bitmap"):
+        raise ValueError(f"unknown wire format {wire!r}")
+    interpret = _auto_interpret(interpret)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    mask_idx = [i for i, leaf in enumerate(leaves)
+                if leaf.size >= min_leaf_size]
+    if gamma >= 1.0 or not mask_idx:
+        return tree
+
+    sel = [leaves[i] for i in mask_idx]
+    x2d, spec = pk.pack_leaves(sel)
+    x2d, seg_ids = seg.pad_rows(x2d, jnp.asarray(spec.seg_ids()),
+                                interpret=interpret, slab_rows=slab_rows)
+    S = spec.num_segments
+
+    scales = None
+    if assume_masked:
+        tau = jnp.full((S,), _WIRE_FLOOR_TAU, jnp.float32)
+        if quantize:
+            _, amax = seg.segmented_stats(x2d, seg_ids, S,
+                                          interpret=interpret,
+                                          slab_rows=slab_rows)
+            scales = jnp.maximum(amax[:, 0] / 127.0, 1e-12)
+    else:
+        k = jnp.asarray([max(1, int(round(gamma * ls.size)))
+                         for ls in spec.leaves], jnp.int32)
+        hist, amax = seg.segmented_stats(x2d, seg_ids, S, interpret=interpret,
+                                         slab_rows=slab_rows)
+        lo, hi, cnt_lo, cnt_hi = seg.select_thresholds(hist, k)
+        for sweep in range(refine_sweeps):
+            cand = seg.candidate_taus(lo, hi, candidates,
+                                      geometric=(sweep == 0))
+            counts = seg.segmented_count(x2d, seg_ids, cand,
+                                         interpret=interpret,
+                                         slab_rows=slab_rows)
+            lo, hi, cnt_lo, cnt_hi = seg.shrink_brackets(
+                lo, hi, cnt_lo, cnt_hi, cand, counts, k)
+        tau = jnp.where(cnt_hi >= 1, hi, lo)
+        if quantize:
+            scales = jnp.maximum(amax[:, 0] / 127.0, 1e-12)
+
+    out2d, bm2d, _kept = seg.segmented_encode(
+        x2d, seg_ids, tau, scales, interpret=interpret, slab_rows=slab_rows)
+    flat_vals = out2d[:spec.rows].reshape(-1)
+    flat_bm = bm2d[:spec.rows].reshape(-1)
+    for s, (i, ls) in enumerate(zip(mask_idx, spec.leaves)):
+        leaves[i] = _leaf_wire(flat_vals, flat_bm, ls, s, gamma, wire, scales)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def wirepath_sweep_count(*, fused: bool,
+                         refine_sweeps: int = DEFAULT_REFINE_SWEEPS,
+                         assume_masked: bool = False,
+                         quantize: bool = True) -> int:
+    """Full-width HBM passes over an n-param delta to build ONE upload's
+    wire payload (DESIGN.md §10).
+
+    A "sweep" is a read or write of the full fp32 packed buffer; the fused
+    path's narrow int8/bitmap writes and its k-slot compaction reads
+    (1.125 bytes/param vs 4) are sub-width and accounted in
+    :func:`wirepath_bytes_moved`, not here.
+
+    * fused      — 1 stats (histogram + absmax) + ``refine_sweeps`` counts
+      + 1 fused encode; with ``assume_masked`` the selection sweeps vanish
+      (1 encode, + 1 absmax sweep when ``quantize``).
+    * jnp oracle — the same masking front half PLUS a dense fp32 write
+      (apply), then the codec re-reads the masked tree three more times
+      (sort-key build, argsort, gather) to build the COO payload.
+    """
+    if fused:
+        if assume_masked:
+            return 2 if quantize else 1
+        return 1 + refine_sweeps + 1
+    select = 0 if assume_masked else 1 + refine_sweeps
+    return select + 2 + 3
+
+
+def wirepath_bytes_moved(n_params: int, gamma: float, *, fused: bool,
+                         quantize: bool = True, wire: str = "coo",
+                         refine_sweeps: int = DEFAULT_REFINE_SWEEPS,
+                         assume_masked: bool = False) -> dict:
+    """Analytic HBM bytes (reads + writes) to wire-encode one n-param delta.
+
+    The roofline companion of :func:`wirepath_sweep_count` — every term is a
+    byte count over the packed fp32 buffer (4 bytes/param) or the fused
+    sweep's narrow outputs (1 byte/param int8, 1 bit/param bitmap), so
+    ``total / hbm_bandwidth`` is the wire path's HBM-bound time floor
+    (benchmarks/roofline.py).  Returns a dict with ``reads``, ``writes``,
+    ``total``, ``payload_bytes`` and the per-stage ``breakdown``.
+    """
+    n = int(n_params)
+    dense = 4 * n
+    k = min(max(1, int(round(gamma * n))), n)
+    vb = 1 if quantize else 4
+    payload = (k * (4 + vb)) if wire == "coo" else (k * vb + (n + 7) // 8)
+    if quantize:
+        payload += 4                                   # fp32 scale
+    breakdown = {}
+    if not assume_masked:
+        breakdown["select_reads"] = (1 + refine_sweeps) * dense
+    elif fused and quantize:
+        breakdown["select_reads"] = dense              # absmax-only sweep
+    if fused:
+        narrow = (n if quantize else dense) + (n + 7) // 8
+        breakdown["encode_read"] = dense
+        breakdown["encode_writes"] = narrow            # int8/fp32 + bitmap
+        breakdown["compact_reads"] = narrow            # never fp32 again
+        breakdown["payload_writes"] = payload
+    else:
+        breakdown["apply_read"] = dense
+        breakdown["apply_write"] = dense               # masked fp32 pytree
+        breakdown["codec_rereads"] = 3 * dense         # key, argsort, gather
+        breakdown["payload_writes"] = payload
+    reads = (breakdown.get("select_reads", 0)
+             + breakdown.get("encode_read", 0)
+             + breakdown.get("compact_reads", 0)
+             + breakdown.get("apply_read", 0)
+             + breakdown.get("codec_rereads", 0))
+    writes = (breakdown.get("encode_writes", 0)
+              + breakdown.get("apply_write", 0)
+              + breakdown.get("payload_writes", 0))
+    return {"reads": reads, "writes": writes, "total": reads + writes,
+            "payload_bytes": payload, "breakdown": breakdown}
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -71,13 +71,16 @@ class PackSpec:
 
     @property
     def num_segments(self) -> int:
+        """Number of packed leaves (segments)."""
         return len(self.leaves)
 
     @property
     def rows(self) -> int:
+        """Total SEG_LANE-wide rows in the packed buffer."""
         return self.total_rows
 
     def seg_ids(self) -> np.ndarray:
+        """(rows, 1) int32 row -> segment map, as a numpy constant."""
         out = np.empty((self.total_rows, 1), np.int32)
         for s, leaf in enumerate(self.leaves):
             start = leaf.offset // SEG_LANE
@@ -85,6 +88,7 @@ class PackSpec:
         return out
 
     def sizes(self) -> np.ndarray:
+        """(num_segments,) int32 element counts per leaf."""
         return np.asarray([leaf.size for leaf in self.leaves], np.int32)
 
 

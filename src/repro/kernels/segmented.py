@@ -21,6 +21,14 @@ sweeps:
    4-octave bracket, later sweeps linear).
 3. ``segmented_apply``      — fused threshold-apply + kept-count in one sweep
    using the final per-segment taus.
+4. ``segmented_stats``      — the histogram sweep extended with a per-segment
+   max|x| reduction, so the int8 wire scale (``max|x| / 127``) rides the
+   sweep that was already bracketing thresholds (DESIGN.md §10).
+5. ``segmented_encode``     — the *wire-path* sweep: threshold-apply,
+   optional int8 quantisation against per-segment scales, a packed 1-bit/
+   element keep-bitmap, and kept counts, all emitted from ONE read of the
+   packed buffer.  ``ops.topk_encode_pytree`` compacts the outputs into
+   COO / bitmap payloads without ever re-reading the fp32 data.
 
 Grid/tiling: each grid step processes a ``(slab_rows, SEG_LANE)`` slab.  The
 per-row segment ids ride along as an (R, 1) int32 input; inside the kernel
@@ -43,6 +51,8 @@ never issue an extra counting sweep.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -56,6 +66,8 @@ __all__ = [
     "segmented_histogram",
     "segmented_count",
     "segmented_apply",
+    "segmented_stats",
+    "segmented_encode",
     "select_thresholds",
     "candidate_taus",
     "shrink_brackets",
@@ -258,6 +270,180 @@ def segmented_apply(x2d: jax.Array, seg_ids: jax.Array, taus: jax.Array,
         ),
         interpret=interpret,
     )(x2d, seg_ids, taus.reshape(S, 1).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Kernel 4: histogram + per-segment absmax — the stats sweep of the fused
+# wire path (DESIGN.md §10).  Identical HBM traffic to segmented_histogram;
+# the absmax reduction rides along so the int8 wire scale needs no extra
+# sweep.
+# --------------------------------------------------------------------------
+def _seg_stats_kernel(x_ref, seg_ref, hist_ref, amax_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        amax_ref[...] = jnp.zeros_like(amax_ref)
+
+    rows = x_ref.shape[0]
+    S = hist_ref.shape[0]
+
+    def chunk(c, carry):
+        acc, amax = carry
+        xc = jax.lax.dynamic_slice_in_dim(
+            x_ref[...], c * CHUNK_ROWS, CHUNK_ROWS, 0).astype(jnp.float32)
+        sc = jax.lax.dynamic_slice_in_dim(
+            seg_ref[...], c * CHUNK_ROWS, CHUNK_ROWS, 0)
+        row_hist = _row_bin_hist(xc)                      # (chunk, SEG_NBINS)
+        seg_hot = _seg_onehot(sc, S)                      # (chunk, S)
+        acc = acc + jax.lax.dot_general(
+            seg_hot, row_hist, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        # scatter-max rows -> segments: the one-hot zeroes other segments'
+        # contributions, and |x| >= 0 makes max-with-zero harmless.
+        row_amax = jnp.max(jnp.abs(xc), axis=1, keepdims=True)  # (chunk, 1)
+        amax = jnp.maximum(amax, jnp.max(seg_hot * row_amax, axis=0))
+        return acc, amax
+
+    acc, amax = jax.lax.fori_loop(
+        0, rows // CHUNK_ROWS, chunk,
+        (jnp.zeros(hist_ref.shape, jnp.float32), jnp.zeros((S,), jnp.float32)))
+    hist_ref[...] += acc.astype(jnp.int32)
+    amax_ref[...] = jnp.maximum(amax_ref[...], amax[:, None])
+
+
+def segmented_stats(x2d: jax.Array, seg_ids: jax.Array,
+                    num_segments: int, *, interpret: bool,
+                    slab_rows: int | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Histogram + per-segment max|x| in one sweep of the packed buffer.
+
+    Same contract as :func:`segmented_histogram`, additionally returning the
+    (num_segments, 1) fp32 per-segment absolute maximum.  Because top-k
+    masking always keeps each segment's largest-magnitude entry, this absmax
+    equals the masked segment's absmax — the exact quantity the int8 wire
+    scale ``max|x| / 127`` needs (DESIGN.md §10), at zero extra sweeps.
+    """
+    slab = _slab(x2d.shape[0], slab_rows, interpret)
+    return pl.pallas_call(
+        _seg_stats_kernel,
+        grid=(x2d.shape[0] // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, SEG_LANE), lambda i: (i, 0)),
+            pl.BlockSpec((slab, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((num_segments, SEG_NBINS), lambda i: (0, 0)),
+            pl.BlockSpec((num_segments, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((num_segments, SEG_NBINS), jnp.int32),
+            jax.ShapeDtypeStruct((num_segments, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x2d, seg_ids)
+
+
+# --------------------------------------------------------------------------
+# Kernel 5: fused wire-path encode — threshold-apply + int8 quantise +
+# packed keep-bitmap + kept counts, all from ONE read of the packed buffer.
+# --------------------------------------------------------------------------
+def _bit_group_weights() -> jax.Array:
+    """(SEG_LANE, SEG_LANE // 8) block-diagonal bit-packing weights.
+
+    ``weights[i, i // 8] = 2^(i % 8)`` (zero elsewhere), so a keep-mask row
+    matmul'd against it yields one byte per 8 lanes with LSB-first bit
+    order — the same layout ``np.packbits(bitorder="little")`` produces.
+    Sums are <= 255, exact in fp32 (and in bf16 MXU accumulation: integers
+    up to 256 are representable).
+    """
+    i = jax.lax.broadcasted_iota(jnp.int32, (SEG_LANE, SEG_LANE // 8), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (SEG_LANE, SEG_LANE // 8), 1)
+    w = jnp.exp2((i % 8).astype(jnp.float32))
+    return jnp.where(i // 8 == j, w, 0.0)
+
+
+def _seg_encode_kernel(x_ref, seg_ref, tau_ref, scale_ref,
+                       out_ref, bm_ref, cnt_ref, *, quantize):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    S = tau_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32)
+    seg_hot = _seg_onehot(seg_ref[...], S)                # (rows, S)
+    tau_row = seg_hot @ tau_ref[...]                      # gather: (rows, 1)
+    keep = (jnp.abs(x) >= tau_row).astype(jnp.float32)
+    masked = x * keep
+    if quantize:
+        # Same formula as compression.quantize_int8 (round then clip), with
+        # the per-segment scale gathered through the one-hot — zeros stay
+        # exactly zero, so the bitmap still describes the nonzero support.
+        scale_row = seg_hot @ scale_ref[...]              # (rows, 1)
+        out_ref[...] = jnp.clip(
+            jnp.round(masked / scale_row), -127, 127).astype(jnp.int8)
+    else:
+        out_ref[...] = masked.astype(out_ref.dtype)
+    bm = jax.lax.dot(keep, _bit_group_weights(),
+                     preferred_element_type=jnp.float32)
+    bm_ref[...] = bm.astype(jnp.uint8)
+    row_kept = jnp.sum(keep, axis=1, keepdims=True)
+    cnt_ref[...] += jax.lax.dot_general(
+        seg_hot, row_kept, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(jnp.int32)
+
+
+def segmented_encode(x2d: jax.Array, seg_ids: jax.Array, taus: jax.Array,
+                     scales: jax.Array | None = None, *, interpret: bool,
+                     slab_rows: int | None = None
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The fused wire-path sweep (DESIGN.md §10): one read of the packed
+    buffer emits everything the upload payload needs.
+
+    Applies the per-segment thresholds ``taus`` ((S,) fp32, > 0) and returns
+
+    * ``out``   — (R, SEG_LANE) masked values; int8-quantised against the
+      per-segment ``scales`` ((S,) fp32, > 0) when given, else the masked
+      fp32 values (``segmented_apply`` semantics);
+    * ``bitmap`` — (R, SEG_LANE // 8) uint8 keep-mask, LSB-first within each
+      byte (byte ``b`` bit ``j`` describes lane ``8 b + j``);
+    * ``kept``  — (S, 1) int32 surviving-entry counts per segment.
+
+    The downstream COO/bitmap compaction (``ops.topk_encode_pytree``) reads
+    only these outputs — 1.125 bytes/param for the int8 wire instead of the
+    4 bytes/param the jnp codec path re-reads three times over.
+    """
+    slab = _slab(x2d.shape[0], slab_rows, interpret)
+    S = taus.shape[0]
+    quantize = scales is not None
+    if scales is None:
+        scales = jnp.ones((S,), jnp.float32)
+    out_dtype = jnp.int8 if quantize else x2d.dtype
+    return pl.pallas_call(
+        functools.partial(_seg_encode_kernel, quantize=quantize),
+        grid=(x2d.shape[0] // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, SEG_LANE), lambda i: (i, 0)),
+            pl.BlockSpec((slab, 1), lambda i: (i, 0)),
+            pl.BlockSpec((S, 1), lambda i: (0, 0)),
+            pl.BlockSpec((S, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((slab, SEG_LANE), lambda i: (i, 0)),
+            pl.BlockSpec((slab, SEG_LANE // 8), lambda i: (i, 0)),
+            pl.BlockSpec((S, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(x2d.shape, out_dtype),
+            jax.ShapeDtypeStruct((x2d.shape[0], SEG_LANE // 8), jnp.uint8),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x2d, seg_ids, taus.reshape(S, 1).astype(jnp.float32),
+      scales.reshape(S, 1).astype(jnp.float32))
 
 
 # --------------------------------------------------------------------------
