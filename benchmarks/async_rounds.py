@@ -20,7 +20,6 @@ fails if a poisoned upload ever reaches the global model.
 
 import argparse
 import dataclasses
-import json
 import os
 
 import jax
@@ -135,8 +134,8 @@ def main():
     corrupt = 0.3 if args.smoke else 0.0
     rows = run(rounds=rounds, corrupt_rate=corrupt)
     path = SMOKE_PATH if args.smoke else OUT_PATH
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import write_bench
+    write_bench(path, "async", rows)
     brief = [{k: v for k, v in r.items()
               if not k.endswith("_curve")} for r in rows]
     print(fmt_rows(brief))

@@ -1,0 +1,190 @@
+"""Client-state store scaling benchmark (DESIGN.md §11): dense (M, …)
+server state vs the retention-window sharded store, at fleet sizes where
+the dense footprint stops fitting.
+
+  PYTHONPATH=src python -m benchmarks.client_store            # full sweep
+  PYTHONPATH=src python -m benchmarks.client_store --smoke    # CI gate
+
+The full sweep runs M in {1k, 10k, 100k, 1M}.  The dense backend actually
+RUNS only while its residual footprint fits ``DENSE_BUDGET`` (past that it
+reports the analytic footprint with ``oom_estimated=True`` — allocating
+5 GB of residuals to prove a point would kill the runner, which IS the
+point).  The sharded backend runs every M through a batch *provider*
+callable, so neither the residual stack nor the batch stack ever
+materializes at (M, …); its footprint column stays flat in M up to the
+O(M) norm/version vectors.
+
+The M = 100k sharded row is the PR's acceptance run: 20 fig5-style rounds
+(EF residuals + adaptive importance sampling, dynamic c(t) rescaled so
+cohorts are ~256 clients) asserting
+
+  residual_bytes <= (retention / M) * dense_equiv_bytes  + slack
+  total store    <= that + O(M) vectors
+
+Writes ``BENCH_store.json`` (or ``BENCH_store.smoke.json``) in the shared
+envelope; CI diffs the smoke artifact against
+``benchmarks/baselines/BENCH_store.smoke.json`` via ``benchmarks.compare``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DynamicSampling, FederatedServer, strategy
+from repro.core.client_store import DenseStore, ShardedStore
+from repro.core.sampling import ImportanceSampler
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_store.json")
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_store.smoke.json")
+
+# Above this dense per-client footprint (residual row + batch rows — the
+# dense engines close over BOTH full (M, …) stacks) we stop pretending:
+# report the analytic bytes instead of allocating them.  256 MB leaves
+# headroom on a CI runner for params and XLA working copies.
+DENSE_BUDGET = 256 * 1024 * 1024
+
+DIM = 64          # model: DIM-dim linear regression -> DIM+1 params
+NUM_BATCHES = 2
+BATCH = 8
+POOL = 512        # distinct client datasets; client i serves pool[i % POOL]
+
+
+def _problem(seed=0):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (POOL, NUM_BATCHES, BATCH, DIM))
+    w_true = jnp.linspace(-1.0, 1.0, DIM)
+    ys = jnp.einsum("mnbd,d->mnb", xs, w_true)
+    params = {"w": jnp.zeros((DIM,)), "b": jnp.zeros(())}
+
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"] + p["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    def provider(ids):
+        idx = jnp.asarray(np.asarray(ids) % POOL)
+        return {"x": jnp.take(xs, idx, axis=0), "y": jnp.take(ys, idx, axis=0)}
+
+    dense_batches = provider(np.arange(POOL))  # for small dense runs
+    return loss_fn, params, provider, dense_batches
+
+
+def _strategy_for(M: int, cohort_target: int = 256):
+    """fig5's operating point (selective masking gamma=0.5, sparse codec,
+    EF, importance sampling) with the dynamic schedule rescaled so round-1
+    cohorts are ~cohort_target clients regardless of M."""
+    rate = min(1.0, cohort_target / M)
+    return strategy.get(
+        "fig5",
+        sampling=DynamicSampling(initial_rate=rate, beta=0.05,
+                                 min_clients=min(32, M)),
+        sampler=ImportanceSampler(),
+        error_feedback=True)
+
+
+def run_backend(M: int, backend: str, rounds: int, retention: int,
+                seed: int = 0):
+    """One federated run at fleet size M on the given store backend;
+    returns the row dict (footprint + steady wall + transport)."""
+    loss_fn, params, provider, dense_batches = _problem(seed)
+    strat = _strategy_for(M)
+
+    per_client = sum(leaf.nbytes for leaf in
+                     jax.tree_util.tree_leaves(params))
+    batch_per_client = sum(
+        leaf.nbytes for leaf in jax.tree_util.tree_leaves(
+            jax.tree.map(lambda x: x[0], dense_batches)))
+    dense_bytes = per_client * M
+    if backend == "dense" and (per_client + batch_per_client) * M \
+            > DENSE_BUDGET:
+        return {
+            "figure": "store_scaling", "backend": "dense",
+            "num_clients": M, "rounds": 0,
+            "oom_estimated": True,
+            "residual_bytes": dense_bytes,
+            "store_bytes": dense_bytes,
+            "dense_equiv_bytes": dense_bytes,
+        }
+
+    if backend == "dense":
+        store = DenseStore(M, params, track_norms=True)
+        batches = jax.tree.map(
+            lambda x: jnp.take(x, jnp.arange(M) % POOL, axis=0),
+            dense_batches)
+    else:
+        store = ShardedStore(M, params, retention=retention,
+                             track_norms=True)
+        batches = provider
+    server = FederatedServer.from_strategy(
+        strat, loss_fn, params, M, seed=seed, engine="cohort", store=store)
+    n_samples = np.full((M,), NUM_BATCHES * BATCH, np.float64)
+    t0 = time.time()
+    server.run(batches, n_samples, rounds)
+    wall = time.time() - t0
+    s = server.summary()
+    mem = store.memory_bytes()
+    row = {
+        "figure": "store_scaling", "backend": backend,
+        "num_clients": M, "rounds": rounds,
+        "oom_estimated": False,
+        "final_loss": round(s["final_loss"], 4),
+        "transport_bytes": s["transport_bytes"],
+        "steady_wall_s": round(s["steady_wall_s"], 4),
+        "compile_s": round(s["compile_s"], 2),
+        "wall_s": round(wall, 2),
+        "residual_bytes": mem["residual_bytes"],
+        "store_bytes": mem["residual_bytes"] + mem["vector_bytes"],
+        "vector_bytes": mem["vector_bytes"],
+        "dense_equiv_bytes": mem["dense_equiv_bytes"],
+    }
+    if backend == "sharded":
+        row["retention"] = retention
+        row["evictions"] = mem["evictions"]
+        # The PR's acceptance bound: residual backing stays inside the
+        # retention window's share of the dense footprint (+1 slot for the
+        # zero sentinel); everything else the store holds is O(M) vectors.
+        bound = (retention + 1) / M * mem["dense_equiv_bytes"]
+        assert mem["residual_bytes"] <= bound + per_client, (
+            f"sharded residual backing {mem['residual_bytes']} exceeds the "
+            f"retention bound {bound:.0f} at M={M}")
+    return row
+
+
+def run(smoke: bool = False):
+    retention = 1024
+    if smoke:
+        cases = [(100_000, "sharded", 6)]
+    else:
+        cases = []
+        for M in (1_000, 10_000, 100_000, 1_000_000):
+            rounds = 20 if M == 100_000 else 8
+            cases.append((M, "dense", rounds))
+            cases.append((M, "sharded", rounds))
+    rows = []
+    for M, backend, rounds in cases:
+        rows.append(run_backend(M, backend, rounds,
+                                retention=min(retention, M)))
+    return rows
+
+
+def main():
+    from benchmarks.common import fmt_rows, write_bench
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="M=100k sharded CI gate "
+                         "(writes BENCH_store.smoke.json)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    write_bench(SMOKE_PATH if args.smoke else OUT_PATH, "store", rows)
+    print(fmt_rows(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,11 @@ them as CSV and writes results/benchmarks.json.
 from __future__ import annotations
 
 import functools
+import json
+import os
+import subprocess
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -122,6 +125,92 @@ def run_strategy(model: str, strat: FedStrategy, rounds: int,
         "steady_wall_s": round(s["steady_wall_s"], 4),
         "compile_s": round(s["compile_s"], 2),
     }
+
+
+# ---- the shared BENCH_*.json envelope --------------------------------------
+# Every benchmark writes the SAME top-level shape so benchmarks/compare.py
+# can diff any smoke artifact against its tracked baseline without
+# per-figure knowledge:
+#
+#   {"schema": 1, "name": ..., "commit": ..., "rows": [...],
+#    "totals": {"steady_wall_s": ..., "transport_bytes": ...}}
+#
+# ``rows`` keeps each figure's own columns; only the envelope is unified.
+BENCH_SCHEMA = 1
+
+
+def _git_commit() -> Optional[str]:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except OSError:
+        return None
+
+
+def _row_steady_s(row: Dict) -> float:
+    """Best-effort steady wall seconds of one row (0.0 when the row carries
+    no timing) — compile time is metered separately everywhere, so these
+    are comparable across commits."""
+    for key, scale in (("steady_wall_s", 1.0), ("wall_s", 1.0),
+                       ("wall_ms", 1e-3), ("steady_wall_ms_per_round", None),
+                       ("segmented_us", 1e-6)):
+        v = row.get(key)
+        if isinstance(v, (int, float)):
+            if scale is None:  # per-round milliseconds
+                return float(v) * 1e-3 * float(row.get("rounds", 1))
+            return float(v) * scale
+    return 0.0
+
+
+def _row_bytes(row: Dict) -> int:
+    for key, scale in (("transport_bytes", 1), ("transport_GB", 1e9),
+                       ("wire_bytes", 1)):
+        v = row.get(key)
+        if isinstance(v, (int, float)):
+            return int(float(v) * scale)
+    curve = row.get("cum_bytes_curve")
+    if isinstance(curve, list) and curve:
+        return int(curve[-1])
+    return 0
+
+
+def bench_totals(rows: List[Dict]) -> Dict:
+    return {
+        "steady_wall_s": round(sum(_row_steady_s(r) for r in rows), 4),
+        "transport_bytes": sum(_row_bytes(r) for r in rows),
+    }
+
+
+def write_bench(path: str, name: str, rows: List[Dict],
+                totals: Optional[Dict] = None) -> Dict:
+    """Write one BENCH_*.json in the shared envelope; returns the envelope."""
+    env = {
+        "schema": BENCH_SCHEMA,
+        "name": name,
+        "commit": _git_commit(),
+        "rows": rows,
+        "totals": totals if totals is not None else bench_totals(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(env, f, indent=1)
+    return env
+
+
+def read_bench(path: str) -> Dict:
+    """Read a BENCH_*.json; pre-envelope files (a bare row list) are wrapped
+    into a schema-0 envelope so every reader sees one shape."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, list):
+        name = os.path.basename(path).split(".")[0]
+        if name.startswith("BENCH_"):
+            name = name[len("BENCH_"):]
+        return {"schema": 0, "name": name, "commit": None, "rows": data,
+                "totals": bench_totals(data)}
+    return data
 
 
 def fmt_rows(rows: List[Dict]) -> str:

@@ -1,0 +1,113 @@
+"""Regression gate for BENCH_*.json artifacts (the shared envelope in
+``benchmarks.common.write_bench``): diff a freshly produced smoke JSON
+against the tracked baseline and exit non-zero when steady wall-clock
+regresses past the threshold.
+
+  PYTHONPATH=src python -m benchmarks.compare \
+      BENCH_store.smoke.json benchmarks/baselines/BENCH_store.smoke.json
+
+Rows are matched by their identity columns (every string/bool field the two
+files share — figure, preset, backend, M, ...); each matched pair compares
+its per-row steady wall seconds, and the envelope totals are compared as
+the headline.  Byte fields are checked for EXACT equality — wire accounting
+is deterministic, so any byte drift is a correctness change, not noise.
+Only regressions fail; speedups and added/removed rows are reported but
+pass (new rows are new coverage, not a regression).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Tuple
+
+from benchmarks.common import _row_bytes, _row_steady_s, read_bench
+
+DEFAULT_THRESHOLD = 0.15
+
+
+def _identity(row: Dict) -> Tuple:
+    """Hashable identity of one row: its non-measurement fields.  Ints are
+    included (sizes, round counts, client counts are configuration, not
+    measurement) unless they look like byte/time measurements."""
+    key = []
+    for k in sorted(row):
+        v = row[k]
+        if isinstance(v, bool) or isinstance(v, str):
+            key.append((k, v))
+        elif isinstance(v, int) and not any(
+                s in k for s in ("bytes", "_us", "_ms", "_s", "wall",
+                                 "flop", "timeout", "retr", "quarantin",
+                                 "dropped", "flush", "evict")):
+            key.append((k, v))
+    return tuple(key)
+
+
+def compare(cur_path: str, base_path: str,
+            threshold: float = DEFAULT_THRESHOLD) -> List[str]:
+    """Returns the list of failure messages (empty = pass), printing the
+    per-row report as a side effect."""
+    cur = read_bench(cur_path)
+    base = read_bench(base_path)
+    failures: List[str] = []
+
+    cur_rows = {_identity(r): r for r in cur["rows"]}
+    base_rows = {_identity(r): r for r in base["rows"]}
+    matched = sorted(set(cur_rows) & set(base_rows))
+    print(f"{cur['name']}: {len(matched)} matched rows "
+          f"({len(cur_rows) - len(matched)} new, "
+          f"{len(base_rows) - len(matched)} gone) "
+          f"vs baseline commit {base.get('commit')}")
+
+    for key in matched:
+        c, b = cur_rows[key], base_rows[key]
+        label = " ".join(f"{k}={v}" for k, v in key) or "<row>"
+        tc, tb = _row_steady_s(c), _row_steady_s(b)
+        if tb > 0:
+            ratio = tc / tb
+            flag = ""
+            if ratio > 1.0 + threshold:
+                flag = "  <-- REGRESSION"
+                failures.append(
+                    f"{label}: steady wall {tb:.4f}s -> {tc:.4f}s "
+                    f"({ratio:.2f}x, threshold {1 + threshold:.2f}x)")
+            print(f"  {label}: {tb:.4f}s -> {tc:.4f}s ({ratio:.2f}x){flag}")
+        bc, bb = _row_bytes(c), _row_bytes(b)
+        if bc != bb:
+            failures.append(
+                f"{label}: wire bytes changed {bb} -> {bc} (byte "
+                "accounting is deterministic — this is a semantic change)")
+
+    tc = float(cur.get("totals", {}).get("steady_wall_s") or 0.0)
+    tb = float(base.get("totals", {}).get("steady_wall_s") or 0.0)
+    if tb > 0:
+        ratio = tc / tb
+        print(f"totals: steady wall {tb:.4f}s -> {tc:.4f}s ({ratio:.2f}x)")
+        if ratio > 1.0 + threshold:
+            failures.append(
+                f"totals: steady wall {tb:.4f}s -> {tc:.4f}s "
+                f"({ratio:.2f}x, threshold {1 + threshold:.2f}x)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a BENCH smoke JSON against its tracked baseline")
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("baseline", help="tracked baseline BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fractional steady-wall regression tolerance "
+                         "(default 0.15 = +15%%)")
+    args = ap.parse_args()
+    failures = compare(args.current, args.baseline, args.threshold)
+    if failures:
+        print("\nFAIL:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("OK: within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

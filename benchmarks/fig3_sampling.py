@@ -14,7 +14,6 @@ fail fast without tying up a runner.
 """
 
 import argparse
-import json
 import os
 
 import jax
@@ -136,8 +135,8 @@ def run_cohort(Ms=(64, 256, 1024), rounds=8, smoke=False):
             "flop_proxy": r.flop_proxy,
         })
 
-    with open(SMOKE_PATH if smoke else BENCH_PATH, "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import write_bench
+    write_bench(SMOKE_PATH if smoke else BENCH_PATH, "cohort", rows)
     return rows
 
 

@@ -16,7 +16,6 @@ byte metering) on every push.
 """
 
 import argparse
-import json
 import os
 
 from repro.core import strategy
@@ -70,8 +69,8 @@ def run_strategy_smoke(rounds=4):
                 1e3 * r["steady_wall_s"] / rounds, 3),
             "compile_s": r["compile_s"],
         })
-    with open(SMOKE_PATH, "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import write_bench
+    write_bench(SMOKE_PATH, "strategy", rows)
     return rows
 
 

@@ -17,7 +17,6 @@ run's final loss (bytes-to-target-loss).
 """
 
 import argparse
-import json
 import os
 
 import jax
@@ -108,8 +107,8 @@ def main():
     rounds = 3 if args.smoke else 24
     rows = run(rounds=rounds)
     path = SMOKE_PATH if args.smoke else OUT_PATH
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import write_bench
+    write_bench(path, "hetero", rows)
     brief = [{k: v for k, v in r.items()
               if not k.endswith("_curve")} for r in rows]
     print(fmt_rows(brief))

@@ -16,7 +16,6 @@ root so the perf trajectory tracks this hot path, and the wire-path section
 plus the COO-vs-bitmap density table — to ``BENCH_wirepath.json``.
 """
 
-import json
 import os
 import time
 
@@ -195,12 +194,12 @@ def run(smoke: bool = False):
             "per_leaf_kernel_launches": maskable * (ITERS + 2),
             "segmented_kernel_launches": ops.DEFAULT_REFINE_SWEEPS + 2,
         })
-    with open(SMOKE_PATH if smoke else BENCH_PATH, "w") as f:
-        json.dump(mask_rows, f, indent=1)
+    from benchmarks.common import write_bench
+    write_bench(SMOKE_PATH if smoke else BENCH_PATH, "masking", mask_rows)
 
     wire_rows = _wirepath_rows(smoke)
-    with open(WIRE_SMOKE_PATH if smoke else WIRE_PATH, "w") as f:
-        json.dump(wire_rows, f, indent=1)
+    write_bench(WIRE_SMOKE_PATH if smoke else WIRE_PATH, "wirepath",
+                wire_rows)
     return rows + mask_rows + wire_rows
 
 

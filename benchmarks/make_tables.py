@@ -52,7 +52,8 @@ def robust_table(path):
     fraction, plus the f = 0.3 robustness ratio against the honest
     fleet (the §9 chaos criterion holds while ratio <= 1.10 for the
     robust rules and >> 1 for plain fedavg)."""
-    recs = json.load(open(path))
+    from benchmarks.common import read_bench
+    recs = read_bench(path)["rows"]
     fracs = sorted({r["fraction"] for r in recs})
     cells = {}
     for r in recs:

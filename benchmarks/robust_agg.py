@@ -22,7 +22,6 @@ regression lets sign-flipped mass move a robust model.
 """
 
 import argparse
-import json
 import os
 
 import jax
@@ -168,8 +167,8 @@ def main():
     args = ap.parse_args()
     rows = run_smoke() if args.smoke else run()
     path = SMOKE_PATH if args.smoke else OUT_PATH
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import write_bench
+    write_bench(path, "robust", rows)
     brief = [{k: v for k, v in r.items()
               if not k.endswith("_curve")} for r in rows]
     print(fmt_rows(brief))

@@ -53,8 +53,8 @@ def wirepath_table(path: str = WIRE_JSON):
     from repro.launch.mesh import HBM_BW
     if not os.path.exists(path):
         return []
-    with open(path) as fh:
-        recs = json.load(fh)
+    from benchmarks.common import read_bench
+    recs = read_bench(path)["rows"]
     rows = []
     for r in recs:
         if r.get("figure") != "wirepath":

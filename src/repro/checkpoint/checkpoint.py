@@ -17,7 +17,8 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "read_manifest"]
 
 _SEP = "||"
 
@@ -76,6 +77,20 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
              if d.startswith("step_") and not d.endswith(".tmp")]
     return max(steps) if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """The manifest dict of one step (latest unless pinned) WITHOUT loading
+    the array payload — cheap pre-restore validation (e.g. the server
+    checking the checkpoint's ``extra["num_clients"]`` against its own
+    before touching any residual state)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore_checkpoint(ckpt_dir: str, like: PyTree,

@@ -27,6 +27,10 @@ from repro.core.client import (
 from repro.core.federated import (
     FederatedConfig, make_federated_round, make_cohort_round,
     make_cohort_scan, cohort_select, fedavg_aggregate,
+    make_store_selection, make_store_compute, make_store_round, StoreRound,
+)
+from repro.core.client_store import (
+    ClientStateStore, DenseStore, ShardedStore, make_store,
 )
 from repro.core.server import FederatedServer, RoundRecord
 from repro.core.compression import (

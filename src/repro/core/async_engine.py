@@ -71,7 +71,8 @@ import numpy as np
 from repro.core.codecs import IdentityCodec
 from repro.core.federated import (_active_attack, _resolve_policies,
                                   _row_l2, _split_round_key,
-                                  make_cohort_compute)
+                                  make_cohort_compute, make_store_compute,
+                                  make_store_selection)
 from repro.core.hetero import HeteroModel, arrival_stream
 
 PyTree = Any
@@ -93,6 +94,16 @@ class AsyncConfig:
     ``jitter_sigma`` adds per-round lognormal arrival jitter;
     ``corrupt_rate`` injects NaN payloads (chaos testing) and
     ``quarantine`` turns the decode-boundary validation gate on/off.
+
+    ``max_round_stale`` switches staleness from flush-distance to
+    **cross-round** distance (DESIGN.md §11.1): with S > 0, uploads cut by
+    the deadline are not dropped but *carried* into subsequent rounds and
+    applied with weight ``w/(1+s)^beta`` where ``s = t' - version[i]`` is
+    the number of rounds since client i pulled its base model (the
+    client-state store's per-client version vector).  An upload older than
+    S rounds expires as a timeout; a carried upload superseded by a fresh
+    dispatch of the same client is discarded.  S = 0 (default) keeps the
+    original within-round flush-count staleness bit-identically.
     """
 
     buffer_size: int | None = None
@@ -105,6 +116,7 @@ class AsyncConfig:
     jitter_sigma: float = 0.0
     corrupt_rate: float = 0.0
     quarantine: bool = True
+    max_round_stale: int = 0
 
     def __post_init__(self):
         """Reject contradictory or out-of-range knob combinations."""
@@ -139,6 +151,9 @@ class AsyncConfig:
         if not 0.0 <= self.corrupt_rate <= 1.0:
             raise ValueError(
                 f"corrupt_rate must be in [0, 1], got {self.corrupt_rate}")
+        if self.max_round_stale < 0:
+            raise ValueError(
+                f"max_round_stale must be >= 0, got {self.max_round_stale}")
 
     def buffer_for(self, m: int) -> int:
         """Flush threshold K for a round expecting ``m`` participants."""
@@ -161,7 +176,7 @@ class AsyncRoundRunner:
     """
 
     def __init__(self, strategy, loss_fn, num_clients: int,
-                 async_cfg: AsyncConfig | None = None):
+                 async_cfg: AsyncConfig | None = None, store=None):
         self.strategy = strategy
         self.loss_fn = loss_fn
         self.num_clients = num_clients
@@ -169,6 +184,21 @@ class AsyncRoundRunner:
         if acfg is None:
             acfg = getattr(strategy, "async_cfg", None)
         self.acfg = acfg if acfg is not None else AsyncConfig()
+        # The client-state store (DESIGN.md §11).  A sharded store reroutes
+        # dispatch through the store-form sweep (residual gather/scatter
+        # outside the program); cross-round staleness needs the store's
+        # per-client version vector either way.
+        self.store = store
+        self._crossround = self.acfg.max_round_stale > 0
+        if self._crossround and store is None:
+            raise ValueError(
+                "max_round_stale > 0 (cross-round staleness) requires a "
+                "ClientStateStore — the per-client model-version state "
+                "lives there")
+        # In-flight uploads carried across round boundaries (cross-round
+        # mode): one dict per upload with its payload/residual rows, base
+        # weight, dispatch round and remaining lateness.
+        self._pending: list = []
         self.schedule = strategy.sampling
         self.smp = strategy.sampler
         self.cfg = strategy.federated_config(num_clients)
@@ -199,6 +229,8 @@ class AsyncRoundRunner:
         self._survival = (1.0 - q ** (self.acfg.max_retries + 1)).astype(
             np.float32)
         self._compute_fns: Dict[int, Any] = {}
+        self._select_fns: Dict[int, Any] = {}
+        self._store_compute = None
         self._aot_cache: Dict[Any, Any] = {}
 
     # ---- compiled-program plumbing ----------------------------------------
@@ -228,6 +260,25 @@ class AsyncRoundRunner:
                 attack=self.attack)
             self._compute_fns[bucket] = fn
         return fn
+
+    def _select_fn(self, bucket: int):
+        """Store-form selection head for one cohort bucket (sharded
+        dispatch only — the residual gather happens OUTSIDE the program,
+        through ``self.store``)."""
+        fn = self._select_fns.get(bucket)
+        if fn is None:
+            fn = make_store_selection(self.schedule, self.cfg, bucket,
+                                      sampler=self.smp)
+            self._select_fns[bucket] = fn
+        return fn
+
+    def _store_compute_fn(self):
+        """Store-form sweep on pre-gathered cohort residual rows."""
+        if self._store_compute is None:
+            self._store_compute = make_store_compute(
+                self.loss_fn, self.cfg, codec=self.strategy.codec,
+                attack=self.attack)
+        return self._store_compute
 
     # ---- jitted round pieces ----------------------------------------------
     def _gate_impl(self, wired, corrupt_c):
@@ -293,6 +344,24 @@ class AsyncRoundRunner:
             norms = norms.at[cohort_ids].set(upd)
         return residuals, norms
 
+    def _close_rows_impl(self, norms, cohort_ids, new_res, uploads, wired,
+                         payload, applied_c):
+        """Cohort-level round close for the store-form path: same math as
+        :meth:`_close_impl`, but the commit-masked scatter is the store's
+        job — this just finalizes the residual candidate rows (wire-loss
+        feedback folded in) and the cohort's norm-EMA rows."""
+        if self.cfg.error_feedback and self._wire_feedback:
+            new_res = jax.tree.map(
+                lambda r, u, w: r + (u - w), new_res, uploads, wired)
+        norm_upd = None
+        if self.smp.adaptive:
+            obs = _row_l2(payload)
+            old_c = jnp.take(norms, cohort_ids)
+            norm_upd = jnp.where(
+                applied_c > 0,
+                (1.0 - self.smp.ema) * old_c + self.smp.ema * obs, old_c)
+        return new_res, norm_upd
+
     # ---- the round --------------------------------------------------------
     def run_round(self, params, residuals, norms, client_batches, n_samples,
                   t: int, key, *, cohort_size: int, flops: float,
@@ -305,28 +374,64 @@ class AsyncRoundRunner:
         ``stats`` dict the server turns into a ``RoundRecord``.
         ``cohort_size`` must upper-bound the sampler's participant count
         for round ``t`` (use ``ClientSampler.cohort_bucket``).
+
+        On a sharded store the dispatch reroutes through the store-form
+        sweep (``residuals`` is ignored — pass None) and ALL state commits
+        go through ``self.store``; the returned ``residuals`` is None.  In
+        cross-round mode (``max_round_stale > 0``) deadline-cut uploads
+        are carried into later rounds instead of timing out — see
+        :class:`AsyncConfig`.
         """
         acfg = self.acfg
         M = self.num_clients
         compile_s = 0.0
+        sharded = self.store is not None and self.store.kind != "dense"
 
         # 1. dispatch: identical key split + client-side sweep to the sync
-        # cohort engine.
+        # cohort engine.  The sharded path runs the same math split at the
+        # store boundary (selection → store gather → cohort-shaped sweep).
         sample_key, mask_key, drop_key = _split_round_key(
             jnp.asarray(key), self._with_drop)
         t_arr = jnp.asarray(t, jnp.float32)
-        compute_args = (params, residuals, norms, client_batches, n_samples,
-                        t_arr, sample_key, mask_key)
-        compute, dt = self._aot(("compute", cohort_size),
-                                self._compute_fn(cohort_size), compute_args)
-        compile_s += dt
-        out = compute(*compute_args)
+        if sharded:
+            sel_args = (norms, n_samples, t_arr, sample_key)
+            sel, dt = self._aot(("select", cohort_size),
+                                self._select_fn(cohort_size), sel_args)
+            compile_s += dt
+            part_dev, weights_dev, ids_dev = sel(*sel_args)
+            ids_np = np.asarray(ids_dev)
+            cohort_res = self.store.gather(ids_np)
+            if callable(client_batches):
+                cohort_batches = client_batches(ids_np)
+            else:
+                cohort_batches = jax.tree.map(
+                    lambda x: jnp.take(x, ids_dev, axis=0), client_batches)
+            cargs = (params, cohort_res, cohort_batches, ids_dev, mask_key)
+            comp, dt = self._aot("store-compute", self._store_compute_fn(),
+                                 cargs)
+            compile_s += dt
+            out = dict(comp(*cargs))
+            out.update(part=part_dev, weights=weights_dev,
+                       cohort_ids=ids_dev, cohort_res=cohort_res)
+        else:
+            compute_args = (params, residuals, norms, client_batches,
+                            n_samples, t_arr, sample_key, mask_key)
+            compute, dt = self._aot(("compute", cohort_size),
+                                    self._compute_fn(cohort_size),
+                                    compute_args)
+            compile_s += dt
+            out = compute(*compute_args)
 
         part = np.asarray(out["part"])
         cohort_ids = np.asarray(out["cohort_ids"])
         losses = np.asarray(out["losses"], np.float64)
         B = int(cohort_ids.shape[0])
         row_of = {int(cid): i for i, cid in enumerate(cohort_ids)}
+        # Θ_t went out to this round's participants: record the model
+        # version each carries — what cross-round staleness measures
+        # against (s = 0 for everything applied within the round).
+        if self.store is not None:
+            self.store.mark_dispatched(np.flatnonzero(part > 0), t)
 
         # Host-side randomness (corrupt draws, arrival jitter, drop draws)
         # is seeded from the round's drop subkey so reruns are exact replays.
@@ -362,7 +467,11 @@ class AsyncRoundRunner:
             deadline = float(np.quantile(
                 np.asarray([ts for ts, _ in first], np.float64),
                 acfg.deadline_quantile))
-        heap: list = [(ts, cid, 0) for ts, cid in first]
+        # Heap entries are ``(time, client, attempt, carried_idx)`` with
+        # carried_idx = -1 for this round's own transmissions; cross-round
+        # mode injects last rounds' still-in-flight uploads at their
+        # remaining lateness.
+        heap: list = [(ts, cid, 0, -1) for ts, cid in first]
         heapq.heapify(heap)
 
         q = np.asarray(self.traits.drop_rate, np.float64)
@@ -379,29 +488,101 @@ class AsyncRoundRunner:
                                else np.ones((B,), np.float32))
 
         applied_rows = np.zeros((B,), np.float32)
-        buffer_rows: list = []
+        buffer_rows: list = []       # ("cur", cohort_row) | ("carried", idx)
+        carried_applied: list = []
         arrivals = timeouts = retries = quarantined = dropped = sends = 0
         flushes = 0
         staleness_sum = 0.0
         applied_times: list = []
         close_time = 0.0
 
+        # Cross-round carry-in: last rounds' deadline-cut uploads re-enter
+        # the event queue at their remaining lateness, unless superseded by
+        # a fresh dispatch of the same client (it re-downloaded Θ and
+        # recomputed — the in-flight upload is obsolete) or expired past
+        # the max_round_stale window; both count as timeouts.
+        carried_in: list = []
+        if self._crossround and self._pending:
+            participants = set(np.flatnonzero(part > 0).tolist())
+            for e in self._pending:
+                s = int(self.store.staleness(np.asarray([e["cid"]]), t)[0])
+                if e["cid"] in participants or s > acfg.max_round_stale:
+                    timeouts += 1
+                    continue
+                heapq.heappush(
+                    heap, (e["lateness"], e["cid"], 0, len(carried_in)))
+                carried_in.append(e)
+            self._pending = []
+
+        def carry_entry(row, cid, lateness):
+            """Snapshot one cohort row as an in-flight cross-round upload:
+            the decoded payload row (aggregation + norm observation), the
+            finalized EF residual candidate (wire-loss feedback folded
+            in), its base weight, quarantine flag and dispatch round."""
+            res_row = None
+            if self.cfg.error_feedback:
+                if self._wire_feedback:
+                    res_row = jax.tree.map(
+                        lambda n, u, w: n[row] + (u[row] - w[row]),
+                        out["new_res"], out["uploads"], wired)
+                else:
+                    res_row = jax.tree.map(lambda x: x[row], out["new_res"])
+            return {"cid": int(cid), "w": float(base_w[row]),
+                    "finite": float(finite_c[row]), "round": int(t),
+                    "lateness": float(lateness),
+                    "payload": jax.tree.map(lambda x: x[row], payload),
+                    "res": res_row}
+
         def do_flush():
-            """Aggregate the current buffer at the current staleness."""
+            """Aggregate the current buffer at the current staleness:
+            flush-count discount in the classic mode, per-row round
+            distance ``1/(1+s)^beta`` (s from the store's version vector)
+            in cross-round mode, where carried rows join the same flush as
+            this round's arrivals."""
             nonlocal params, flushes, staleness_sum, compile_s
             if not buffer_rows:
                 return
-            s = flushes
-            discount = np.float32(1.0 / (1.0 + s) ** acfg.staleness_beta)
+            cur = [i for kind, i in buffer_rows if kind == "cur"]
+            car = [i for kind, i in buffer_rows if kind == "carried"]
             member = np.zeros((B,), np.float32)
-            member[buffer_rows] = 1.0
-            w_flush = jnp.asarray(base_w * member * discount)
-            flush_args = (params, payload, w_flush, keep_dev)
+            member[cur] = 1.0
+            if self._crossround:
+                # Fresh rows pulled Θ this round: s = 0, discount exactly
+                # 1.0 — the keystone degeneration survives cross-round
+                # mode untouched.
+                w_flush = jnp.asarray(base_w * member)
+                flush_payload, keep = payload, keep_dev
+                if car:
+                    cids = np.asarray([carried_in[i]["cid"] for i in car])
+                    s_car = self.store.staleness(cids, t).astype(np.float64)
+                    d_car = 1.0 / (1.0 + s_car) ** acfg.staleness_beta
+                    w_car = (np.asarray([carried_in[i]["w"] for i in car],
+                                        np.float64) * d_car)
+                    car_payload = jax.tree.map(
+                        lambda *rows: jnp.stack(rows),
+                        *[carried_in[i]["payload"] for i in car])
+                    flush_payload = jax.tree.map(
+                        lambda a, b: jnp.concatenate([a, b]),
+                        payload, car_payload)
+                    w_flush = jnp.concatenate(
+                        [w_flush, jnp.asarray(w_car, jnp.float32)])
+                    # carried rows were quarantine-gated at arrival, so
+                    # every buffered one is finite
+                    keep = jnp.concatenate(
+                        [keep_dev, jnp.ones((len(car),), jnp.float32)])
+                    staleness_sum += float(s_car.sum())
+            else:
+                s = flushes
+                discount = np.float32(1.0 / (1.0 + s) ** acfg.staleness_beta)
+                w_flush = jnp.asarray(base_w * member * discount)
+                flush_payload, keep = payload, keep_dev
+                staleness_sum += float(s) * len(buffer_rows)
+            flush_args = (params, flush_payload, w_flush, keep)
             flush, dt = self._aot("flush", self._flush_impl, flush_args)
             compile_s += dt
             params = flush(*flush_args)
-            applied_rows[buffer_rows] = 1.0
-            staleness_sum += float(s) * len(buffer_rows)
+            applied_rows[cur] = 1.0
+            carried_applied.extend(carried_in[i] for i in car)
             flushes += 1
             buffer_rows.clear()
 
@@ -409,26 +590,49 @@ class AsyncRoundRunner:
         while heap:
             t_now = heap[0][0]
             if t_now > deadline:
-                # Deadline cut: everything still pending timed out.  The
-                # clients DID transmit (bytes were spent); the server just
-                # stops listening.
+                # Deadline cut: the clients DID transmit (bytes were
+                # spent); the server just stops listening.  Classic mode
+                # times everything pending out; cross-round mode carries
+                # it — this round's own rows snapshot their computed
+                # upload, already-carried rows keep riding.
                 while heap:
-                    heapq.heappop(heap)
+                    ev_t, cid, _, ci = heapq.heappop(heap)
+                    if ci >= 0:
+                        self._pending.append(
+                            dict(carried_in[ci], lateness=ev_t - deadline))
+                        continue
                     sends += 1
-                    timeouts += 1
+                    if self._crossround:
+                        self._pending.append(carry_entry(
+                            row_of[int(cid)], cid, ev_t - deadline))
+                    else:
+                        timeouts += 1
                 close_time = max(close_time, deadline)
                 break
             # Drain every event sharing this exact timestamp before any
             # flush check — simultaneous arrivals join the same flush,
             # which is what collapses the ideal fleet to one sync step.
             while heap and heap[0][0] == t_now:
-                _, cid, attempt = heapq.heappop(heap)
+                _, cid, attempt, ci = heapq.heappop(heap)
+                if ci >= 0:
+                    # A carried upload lands: no drop draw (its transport
+                    # already happened last round), same quarantine gate.
+                    e = carried_in[ci]
+                    close_time = max(close_time, t_now)
+                    if acfg.quarantine and e["finite"] == 0.0:
+                        quarantined += 1
+                        continue
+                    arrivals += 1
+                    applied_times.append(t_now)
+                    buffer_rows.append(("carried", ci))
+                    continue
                 sends += 1
                 if q[cid] > 0.0 and rng.random() < q[cid]:
                     if attempt < acfg.max_retries:
                         delay = (acfg.backoff_s * (2.0 ** attempt)
                                  + float(resend[cid]))
-                        heapq.heappush(heap, (t_now + delay, cid, attempt + 1))
+                        heapq.heappush(
+                            heap, (t_now + delay, cid, attempt + 1, -1))
                         retries += 1
                     else:
                         dropped += 1
@@ -440,23 +644,68 @@ class AsyncRoundRunner:
                     continue
                 arrivals += 1
                 applied_times.append(t_now)
-                buffer_rows.append(row)
+                buffer_rows.append(("cur", row))
             if len(buffer_rows) >= K:
                 do_flush()
         do_flush()  # leftovers (buffer below K at round close) flush once
 
-        # 5. round-close state commit.
+        # 5. round-close state commit.  The sharded path finalizes
+        # cohort-shaped rows and commits them through the store; the dense
+        # path scatters into the full (M, …) arrays in-program, exactly as
+        # before.
         applied_dev = jnp.asarray(applied_rows)
-        close_args = (residuals, norms, out["cohort_ids"], out["cohort_res"],
-                      out["new_res"], out["uploads"], wired, payload,
-                      applied_dev)
-        close, dt = self._aot("close", self._close_impl, close_args)
-        compile_s += dt
-        residuals, norms = close(*close_args)
+        if sharded:
+            close_args = (norms, out["cohort_ids"], out["new_res"],
+                          out["uploads"], wired, payload, applied_dev)
+            close, dt = self._aot("close-rows", self._close_rows_impl,
+                                  close_args)
+            compile_s += dt
+            rows, norm_upd = close(*close_args)
+            if self.cfg.error_feedback:
+                self.store.scatter(ids_np, rows, applied_rows, t)
+            if self.smp.adaptive:
+                self.store.update_norms(ids_np, norm_upd)
+                norms = self.store.norms
+            residuals = None
+        else:
+            close_args = (residuals, norms, out["cohort_ids"],
+                          out["cohort_res"], out["new_res"], out["uploads"],
+                          wired, payload, applied_dev)
+            close, dt = self._aot("close", self._close_impl, close_args)
+            compile_s += dt
+            residuals, norms = close(*close_args)
+
+        # Late commits for carried uploads applied this round: EF residual
+        # and norm EMA advance at APPLY time.  Their owners were not
+        # redispatched this round (supersession dropped those), so these
+        # writes touch rows the round-close commit left untouched.
+        for e in carried_applied:
+            cid = e["cid"]
+            if e["res"] is not None:
+                if sharded:
+                    self.store.scatter(
+                        np.asarray([cid]),
+                        jax.tree.map(lambda x: x[None], e["res"]),
+                        np.ones((1,), np.float32), t)
+                else:
+                    residuals = jax.tree.map(
+                        lambda old, r: old.at[cid].set(r),
+                        residuals, e["res"])
+            if self.smp.adaptive:
+                obs = _row_l2(
+                    jax.tree.map(lambda x: x[None], e["payload"]))[0]
+                upd = ((1.0 - self.smp.ema) * norms[cid]
+                       + self.smp.ema * obs)
+                if sharded:
+                    self.store.update_norms(np.asarray([cid]),
+                                            jnp.asarray([upd]))
+                    norms = self.store.norms
+                else:
+                    norms = norms.at[cid].set(upd)
 
         valid = part[cohort_ids].astype(np.float64)
         n_part = float(part.sum())
-        n_applied = float(applied_rows.sum())
+        n_applied = float(applied_rows.sum()) + len(carried_applied)
         mean_loss = (float((losses * valid).sum() / max(valid.sum(), 1.0))
                      if n_part > 0 else float("nan"))
         median_applied = (float(np.median(np.asarray(applied_times)))
@@ -474,6 +723,8 @@ class AsyncRoundRunner:
             "sends": sends,
             "flushes": flushes,
             "buffer_size": K,
+            "carried": len(carried_applied),
+            "pending": len(self._pending),
             "mean_staleness": (staleness_sum / n_applied
                                if n_applied > 0 else 0.0),
             "sim_round_s": close_time,

@@ -1,0 +1,479 @@
+"""Sharded client-state store: per-client server state at fleet scale.
+
+Everything the server remembers *per client* — error-feedback residuals
+absorbing wire loss, the adaptive samplers' update-norm EMAs, and the
+model-version each client last pulled — used to live as dense ``(M, …) +
+model`` stacked arrays owned by ``FederatedServer``.  That representation
+is the memory wall on the road to M = 10^6 registered clients: residuals
+alone cost ``M × model_bytes`` whether or not error feedback is even on,
+and long before a million clients the host (let alone the device) runs out.
+
+This module makes the state-ownership layer a pluggable subsystem
+(DESIGN.md §11) with two interchangeable backends behind one
+:class:`ClientStateStore` contract:
+
+* :class:`DenseStore` — the original ``(M, …)`` stacked arrays, kept as
+  the **bit-exact oracle**.  Gather/scatter are the same ``jnp.take`` /
+  ``.at[ids].set`` ops the round programs used to run inline, so a server
+  on a ``DenseStore`` reproduces the pre-store code paths to the bit.
+* :class:`ShardedStore` — residuals held **sparsely**, only for clients
+  whose upload committed within a configurable *retention window* of
+  ``retention`` client slots.  The backing is a fixed-capacity slot pool
+  (``(retention + 1, …)`` per leaf; the extra row is a permanent zero row
+  that gather misses read), plus compact O(M) vectors: the norm EMA
+  ``(M,)`` float32 and the per-client model-version ``(M,)`` int64 the
+  async engine's cross-round staleness discount feeds on.  When the pool
+  is full, the least-recently-committed client is **evicted to zero** —
+  its residual is forgotten, exactly as if it had never shipped the lost
+  mass (a safe degradation for error feedback: the residual is a
+  correction, not required state).
+
+Equivalence contract (property-tested in ``tests/test_client_store.py``):
+as long as no eviction occurs (``retention`` covers every client that has
+ever committed), a run on a ``ShardedStore`` is bit-identical to the same
+run on a ``DenseStore`` — params, EF residuals and norm EMAs — under
+every strategy preset in the registry.  Eviction is the documented
+divergence point.
+
+The O(M) vectors are the only state that must exist for all M clients;
+:meth:`ClientStateStore.shard_over` places them (and the sharded slot
+pool's client axis) over a mesh's data axes via ``jax.sharding`` so even
+they distribute at pod scale (``launch/shardings.py`` conventions).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["ClientStateStore", "DenseStore", "ShardedStore", "make_store"]
+
+
+def _ids_array(ids) -> np.ndarray:
+    """Normalize a gather/scatter id argument to a 1-D int64 numpy array."""
+    out = np.asarray(ids)
+    if out.ndim != 1:
+        raise ValueError(f"ids must be 1-D, got shape {out.shape}")
+    return out.astype(np.int64)
+
+
+def _per_client_bytes(template: PyTree) -> int:
+    """Residual bytes ONE client costs under ``template``'s shapes."""
+    return int(sum(np.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree_util.tree_leaves(template)))
+
+
+class ClientStateStore:
+    """Backend-agnostic contract for per-client server state.
+
+    Residual rows move through :meth:`gather` (cohort ids → stacked
+    ``(B, …)`` rows; unknown clients read as zeros on sparse backends) and
+    :meth:`scatter` (write back the rows whose ``commit`` mask is set —
+    the round's "this upload actually applied" gate).  Norm EMAs and
+    model versions are compact ``(M,)`` vectors with their own accessors.
+    :meth:`state` / :meth:`load_state` expose a static-shaped pytree for
+    the checkpoint layer, and :meth:`memory_bytes` is the accounting the
+    scaling benchmark (``benchmarks/client_store.py``) meters.
+    """
+
+    kind: str = "abstract"
+
+    def __init__(self, num_clients: int, template: PyTree,
+                 track_norms: bool = False):
+        if num_clients < 1:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        self.num_clients = int(num_clients)
+        self.template = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), template)
+        self._norms: Optional[jnp.ndarray] = (
+            jnp.ones((num_clients,), jnp.float32) if track_norms else None)
+        # Model-version vector: the round number of the Θ each client last
+        # pulled (0 = never dispatched).  Host-side int64 — the async
+        # engine's staleness math consumes it between device dispatches.
+        self.versions = np.zeros((num_clients,), np.int64)
+
+    # ---- residual rows ---------------------------------------------------
+    def gather(self, ids) -> PyTree:
+        """Stacked residual rows for ``ids`` (zeros where unknown)."""
+        raise NotImplementedError
+
+    def scatter(self, ids, rows: PyTree, commit, round: int) -> None:
+        """Write back ``rows[i]`` for every i with ``commit[i] > 0``.
+
+        Rows with ``commit[i] == 0`` are untouched (the client's upload
+        was dropped / quarantined / timed out, so its residual must stay
+        consistent with the model it will re-download)."""
+        raise NotImplementedError
+
+    def residuals_dense(self) -> PyTree:
+        """The full ``(M, …)`` stacked residuals.  O(M × model) memory —
+        the representation this subsystem exists to avoid; kept for the
+        oracle engine, small-M tests and debugging."""
+        raise NotImplementedError
+
+    # ---- compact (M,) vectors --------------------------------------------
+    @property
+    def norms(self) -> Optional[jnp.ndarray]:
+        """The adaptive samplers' per-client update-norm EMA (or None)."""
+        return self._norms
+
+    def set_norms(self, norms) -> None:
+        """Replace the whole norm-EMA vector (dense engines hand back the
+        full updated vector)."""
+        if self._norms is None:
+            raise ValueError(f"{self.kind} store was built without norm "
+                             "tracking (track_norms=False)")
+        self._norms = jnp.asarray(norms, jnp.float32)
+
+    def update_norms(self, ids, values) -> None:
+        """Set norm rows at ``ids`` to ``values`` (cohort-sized update)."""
+        if self._norms is None:
+            raise ValueError(f"{self.kind} store was built without norm "
+                             "tracking (track_norms=False)")
+        idx = jnp.asarray(_ids_array(ids))
+        self._norms = self._norms.at[idx].set(
+            jnp.asarray(values, jnp.float32))
+
+    def mark_dispatched(self, ids, round: int) -> None:
+        """Record that ``ids`` pulled Θ_{round} this round — the version
+        state cross-round staleness (DESIGN.md §11.3) measures against."""
+        self.versions[_ids_array(ids)] = int(round)
+
+    def staleness(self, ids, round: int) -> np.ndarray:
+        """Round-distance ``round - version[id]`` for each id (>= 0)."""
+        return np.maximum(int(round) - self.versions[_ids_array(ids)], 0)
+
+    # ---- checkpointing / accounting ---------------------------------------
+    def state(self) -> Dict[str, Any]:
+        """Static-shaped state pytree for ``checkpoint.save_checkpoint``."""
+        raise NotImplementedError
+
+    def load_state(self, tree: Dict[str, Any]) -> None:
+        """Restore :meth:`state`'s pytree (inverse of :meth:`state`)."""
+        raise NotImplementedError
+
+    def memory_bytes(self) -> Dict[str, int]:
+        """Exact client-state footprint: residual backing, O(M) vectors,
+        and what a dense ``(M, …)`` store would cost for comparison."""
+        client = _per_client_bytes(self.template)
+        vectors = int(self.versions.nbytes)
+        if self._norms is not None:
+            vectors += int(np.dtype(np.float32).itemsize * self.num_clients)
+        return {
+            "backend": self.kind,
+            "client_bytes": client,
+            "vector_bytes": vectors,
+            "residual_bytes": self._residual_backing_bytes(),
+            "dense_equiv_bytes": client * self.num_clients,
+        }
+
+    def _residual_backing_bytes(self) -> int:
+        raise NotImplementedError
+
+    def shard_over(self, mesh) -> None:
+        """Distribute the store's arrays over ``mesh``'s data axes
+        (``launch.mesh.data_axes``): the O(M) norm vector and — for the
+        sharded backend — the slot pool's client axis.  Dims that do not
+        divide the data-axis product stay replicated, matching
+        ``launch/shardings.py``'s fallback rule."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import data_axes
+
+        axes = data_axes(mesh)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+        def put_vec(v):
+            if v is None or size <= 1 or v.shape[0] % size:
+                return v
+            return jax.device_put(v, NamedSharding(mesh, P(axes)))
+
+        self._norms = put_vec(self._norms)
+        self._shard_backing(put_vec)
+
+    def _shard_backing(self, put_vec) -> None:
+        """Backend hook for :meth:`shard_over` (vectors already placed)."""
+
+
+class DenseStore(ClientStateStore):
+    """The original dense ``(M, …)`` stacked residual arrays — the
+    bit-exact oracle backend, and the default the server constructs.
+
+    ``gather``/``scatter`` run the identical ``jnp.take`` /
+    ``where(commit) → .at[ids].set`` ops the pre-store round programs ran
+    inline, so dense-store runs reproduce the historical engines bit for
+    bit (tier-1's cohort==oracle and async-degeneration suites all run on
+    this backend).
+    """
+
+    kind = "dense"
+
+    def __init__(self, num_clients: int, template: PyTree,
+                 track_norms: bool = False):
+        super().__init__(num_clients, template, track_norms)
+        self.residuals = jax.tree.map(
+            lambda p: jnp.zeros((num_clients,) + tuple(p.shape), p.dtype),
+            template)
+
+    def gather(self, ids) -> PyTree:
+        """``jnp.take`` of the stacked rows (exact op the engines used)."""
+        idx = jnp.asarray(_ids_array(ids))
+        return jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                            self.residuals)
+
+    def scatter(self, ids, rows: PyTree, commit, round: int) -> None:
+        """Commit-masked row write-back, identical math to the in-program
+        scatter of ``make_cohort_round`` (gather old rows, ``where`` on
+        the commit mask, one ``.at[ids].set``)."""
+        idx = jnp.asarray(_ids_array(ids))
+        commit = jnp.asarray(commit, jnp.float32)
+
+        def put(old, new):
+            keep = commit.reshape((-1,) + (1,) * (new.ndim - 1))
+            old_rows = jnp.take(old, idx, axis=0)
+            return old.at[idx].set(jnp.where(keep > 0, new, old_rows))
+
+        self.residuals = jax.tree.map(put, self.residuals, rows)
+
+    def residuals_dense(self) -> PyTree:
+        """The backing arrays themselves (no copy)."""
+        return self.residuals
+
+    def set_dense(self, residuals: PyTree) -> None:
+        """Replace the whole stacked array — the dense engines' fast path
+        (their round programs already did gather/scatter in-program)."""
+        self.residuals = residuals
+
+    def state(self) -> Dict[str, Any]:
+        """Checkpoint tree: stacked residuals + versions (+ norms)."""
+        tree: Dict[str, Any] = {
+            "residuals": self.residuals,
+            "versions": jnp.asarray(self.versions),
+        }
+        if self._norms is not None:
+            tree["norms"] = self._norms
+        return tree
+
+    def load_state(self, tree: Dict[str, Any]) -> None:
+        """Restore the checkpoint tree written by :meth:`state`."""
+        self.residuals = tree["residuals"]
+        self.versions = np.asarray(tree["versions"], np.int64).copy()
+        if self._norms is not None:
+            self._norms = jnp.asarray(tree["norms"], jnp.float32)
+
+    def _residual_backing_bytes(self) -> int:
+        return int(sum(leaf.nbytes for leaf in
+                       jax.tree_util.tree_leaves(self.residuals)))
+
+    def _shard_backing(self, put_vec) -> None:
+        self.residuals = jax.tree.map(put_vec, self.residuals)
+
+
+class ShardedStore(ClientStateStore):
+    """Fixed-capacity sparse residual pool + compact O(M) vectors.
+
+    ``retention`` is the window measured in **client slots**: residual
+    rows exist only for the (at most) ``retention`` clients that committed
+    most recently.  Layout per residual leaf: ``(retention + 1, …)`` — slot
+    ``retention`` is a permanent zero row, so a gather of an unknown (or
+    evicted) client is a plain ``jnp.take`` at the sentinel index, one
+    gather per leaf with no branching.
+
+    Eviction: when a committing client needs a slot and none is free, the
+    slot whose owner committed least recently is reassigned (ties broken
+    by slot index — deterministic).  The evicted client's residual is
+    forgotten ("evicted to zero"); slots owned by clients committing in
+    the SAME round are never victims.  A single round committing more than
+    ``retention`` clients cannot be represented and raises ``ValueError``
+    — size the window at or above the largest cohort.
+
+    Peak residual memory is ``(retention + 1)/M`` of the dense footprint
+    plus the O(M) vectors, the bound ``benchmarks/client_store.py``
+    asserts (BENCH_store.json).
+    """
+
+    kind = "sharded"
+
+    def __init__(self, num_clients: int, template: PyTree,
+                 retention: int, track_norms: bool = False):
+        super().__init__(num_clients, template, track_norms)
+        if not 0 < retention <= num_clients:
+            raise ValueError(
+                f"retention must be in (0, num_clients={num_clients}], "
+                f"got {retention}")
+        self.retention = int(retention)
+        self.slots = jax.tree.map(
+            lambda p: jnp.zeros((self.retention + 1,) + tuple(p.shape),
+                                p.dtype),
+            template)
+        # Host-side slot directory: owner id per slot (-1 = free), the
+        # round its owner last committed (LRU key), and the id -> slot map.
+        self._slot_ids = np.full((self.retention,), -1, np.int64)
+        self._slot_round = np.zeros((self.retention,), np.int64)
+        self._slot_of: Dict[int, int] = {}
+        self.evictions = 0
+
+    # ---- slot bookkeeping -------------------------------------------------
+    def _slot_index(self, ids: np.ndarray) -> np.ndarray:
+        """Slot per id; the zero-sentinel slot ``retention`` on a miss."""
+        return np.asarray([self._slot_of.get(int(i), self.retention)
+                           for i in ids], np.int64)
+
+    def _assign_slots(self, cids: np.ndarray, round: int) -> np.ndarray:
+        """Slots for this round's committing clients, evicting LRU owners
+        as needed.  Raises if the commit set exceeds the window."""
+        if len(cids) > self.retention:
+            raise ValueError(
+                f"round {round} commits {len(cids)} clients but the "
+                f"sharded store retains only {self.retention} slots; "
+                "raise retention above the largest cohort")
+        pinned = set()
+        assigned = np.empty((len(cids),), np.int64)
+        misses = []
+        for i, cid in enumerate(cids):
+            slot = self._slot_of.get(int(cid))
+            if slot is not None:
+                assigned[i] = slot
+                pinned.add(slot)
+            else:
+                misses.append(i)
+        if misses:
+            free = [s for s in range(self.retention)
+                    if self._slot_ids[s] < 0]
+            # LRU victims among non-free, non-pinned slots, oldest first.
+            victims = sorted(
+                (s for s in range(self.retention)
+                 if self._slot_ids[s] >= 0 and s not in pinned),
+                key=lambda s: (self._slot_round[s], s))
+            for i in misses:
+                if free:
+                    slot = free.pop(0)
+                else:
+                    slot = victims.pop(0)
+                    del self._slot_of[int(self._slot_ids[slot])]
+                    self.evictions += 1
+                assigned[i] = slot
+                pinned.add(slot)
+        for i, cid in enumerate(cids):
+            slot = int(assigned[i])
+            self._slot_of[int(cid)] = slot
+            self._slot_ids[slot] = int(cid)
+            self._slot_round[slot] = int(round)
+        return assigned
+
+    # ---- ClientStateStore API ---------------------------------------------
+    def gather(self, ids) -> PyTree:
+        """One ``jnp.take`` per leaf; misses read the zero sentinel row."""
+        idx = jnp.asarray(self._slot_index(_ids_array(ids)))
+        return jax.tree.map(lambda s: jnp.take(s, idx, axis=0), self.slots)
+
+    def scatter(self, ids, rows: PyTree, commit, round: int) -> None:
+        """Write committed rows into their (possibly newly-evicted) slots.
+
+        Only the ``commit > 0`` subset touches the pool: uncommitted rows
+        neither allocate slots nor refresh the LRU clock, so a client that
+        was merely *sampled* (dropped, quarantined, padded) costs no
+        retention."""
+        ids = _ids_array(ids)
+        commit = np.asarray(commit)
+        pos = np.flatnonzero(commit > 0)
+        if pos.size == 0:
+            return
+        slot_idx = self._assign_slots(ids[pos], round)
+        pos_dev = jnp.asarray(pos)
+        slot_dev = jnp.asarray(slot_idx)
+        self.slots = jax.tree.map(
+            lambda s, r: s.at[slot_dev].set(jnp.take(r, pos_dev, axis=0)),
+            self.slots, rows)
+
+    def residuals_dense(self) -> PyTree:
+        """Materialize the full ``(M, …)`` view — zeros except occupied
+        slots.  O(M × model): test/debug only, never on the hot path."""
+        occupied = np.flatnonzero(self._slot_ids >= 0)
+        owner = jnp.asarray(self._slot_ids[occupied])
+        slot = jnp.asarray(occupied)
+
+        def densify(s, spec):
+            out = jnp.zeros((self.num_clients,) + tuple(spec.shape),
+                            spec.dtype)
+            if occupied.size == 0:
+                return out
+            return out.at[owner].set(jnp.take(s, slot, axis=0))
+
+        return jax.tree.map(densify, self.slots, self.template)
+
+    def state(self) -> Dict[str, Any]:
+        """Checkpoint tree: slot pool + slot directory + versions (+
+        norms) — all static shapes, so the checkpoint layer's structure
+        validation works unchanged."""
+        tree: Dict[str, Any] = {
+            "slots": self.slots,
+            "slot_ids": jnp.asarray(self._slot_ids),
+            "slot_round": jnp.asarray(self._slot_round),
+            "versions": jnp.asarray(self.versions),
+        }
+        if self._norms is not None:
+            tree["norms"] = self._norms
+        return tree
+
+    def load_state(self, tree: Dict[str, Any]) -> None:
+        """Restore :meth:`state` and rebuild the host slot directory."""
+        self.slots = tree["slots"]
+        self._slot_ids = np.asarray(tree["slot_ids"], np.int64).copy()
+        self._slot_round = np.asarray(tree["slot_round"], np.int64).copy()
+        self.versions = np.asarray(tree["versions"], np.int64).copy()
+        self._slot_of = {int(cid): s for s, cid in enumerate(self._slot_ids)
+                         if cid >= 0}
+        if self._norms is not None:
+            self._norms = jnp.asarray(tree["norms"], jnp.float32)
+
+    def memory_bytes(self) -> Dict[str, int]:
+        """Dense accounting plus the slot directory and window size."""
+        out = super().memory_bytes()
+        out["vector_bytes"] += int(self._slot_ids.nbytes
+                                   + self._slot_round.nbytes)
+        out["retention"] = self.retention
+        out["evictions"] = self.evictions
+        return out
+
+    def _residual_backing_bytes(self) -> int:
+        return int(sum(leaf.nbytes for leaf in
+                       jax.tree_util.tree_leaves(self.slots)))
+
+    def _shard_backing(self, put_vec) -> None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # The slot axis is the sharded store's "client" axis; reuse the
+        # same divisibility-or-replicate rule via a leading-dim put.
+        def put_slots(s):
+            probe = put_vec(jnp.zeros((s.shape[0],), jnp.float32))
+            sharding = getattr(probe, "sharding", None)
+            if sharding is None or not isinstance(sharding, NamedSharding):
+                return s
+            spec = sharding.spec
+            return jax.device_put(
+                s, NamedSharding(sharding.mesh,
+                                 P(spec[0], *([None] * (s.ndim - 1)))))
+
+        self.slots = jax.tree.map(put_slots, self.slots)
+
+
+def make_store(kind: str, num_clients: int, template: PyTree, *,
+               retention: int | None = None,
+               track_norms: bool = False) -> ClientStateStore:
+    """Build a store backend by name: ``"dense"`` (the oracle) or
+    ``"sharded"`` (requires ``retention``, the client-slot window)."""
+    if kind == "dense":
+        return DenseStore(num_clients, template, track_norms=track_norms)
+    if kind == "sharded":
+        if retention is None:
+            raise ValueError("sharded store requires retention= (the "
+                             "client-slot window)")
+        return ShardedStore(num_clients, template, retention,
+                            track_norms=track_norms)
+    raise ValueError(f"unknown store kind {kind!r}; use 'dense' | 'sharded'")

@@ -58,7 +58,8 @@ PyTree = Any
 
 __all__ = ["FederatedConfig", "make_federated_round", "make_cohort_round",
            "make_cohort_scan", "make_cohort_compute", "cohort_select",
-           "fedavg_aggregate"]
+           "fedavg_aggregate", "make_store_selection", "make_store_compute",
+           "make_store_round", "StoreRound"]
 
 
 def _resolve_policies(codec, aggregator, normalize: bool = True):
@@ -750,3 +751,212 @@ def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
             return params, residuals, metrics
 
     return scan_fn
+
+
+# ---------------------------------------------------------------------------
+# Store-form round (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# The two engines above close over the full (M, …) residual arrays: gather
+# and scatter happen INSIDE the round program, so the dense stack must exist
+# as a program input.  The store form splits the round at exactly that
+# boundary so residual ownership can move into a
+# ``repro.core.client_store.ClientStateStore`` (dense oracle or sharded slot
+# pool) and the program only ever sees cohort-shaped rows:
+#
+#     select(norms, n_samples, t, sample_key)          [jit, (M,) arrays]
+#         -> part, weights, cohort_ids
+#     store.gather(cohort_ids)                          [host boundary]
+#         -> cohort_res
+#     body(params, cohort_res, cohort_batches, cohort_ids,
+#          part, weights, norms, mask_key, drop_key)    [jit, cohort-shaped]
+#         -> new_params, new_rows, commit, norm_upd, metrics
+#     store.scatter(cohort_ids, new_rows, commit)       [host boundary]
+#     store.update_norms(cohort_ids, norm_upd)
+#
+# Equivalence with the in-program engines is by the same construction
+# argument as cohort-vs-oracle: the participant set, per-client mask keys
+# and all per-row math are identical; cohort ids are sorted ascending so
+# weighted reductions visit participants in client-id order (padding rows
+# contribute exact zeros); and the store's commit-masked scatter is the very
+# ``where(commit, new, old) → at[ids].set`` the in-program scatter ran.
+# Padding rows never commit, so a sharded gather returning zeros for a
+# client the window forgot can only differ from dense on rows whose output
+# is masked out of every reduction and never written back.
+
+
+def make_store_selection(schedule: SamplingSchedule, cfg: FederatedConfig,
+                         cohort_size: int, *, sampler=None):
+    """The round's *selection head*, jittable in isolation.
+
+    Returns ``select(norms, n_samples, t, sample_key) -> (part, weights,
+    cohort_ids)``: the participation draw on the full ``(M,)`` arrays
+    (identical ops to the in-program selection of
+    :func:`make_cohort_compute`) plus the sorted cohort-id buffer —
+    everything the host needs to gather residual rows through a
+    :class:`~repro.core.client_store.ClientStateStore` before dispatching
+    the cohort-shaped body.  Pass ``norms=None`` for non-adaptive samplers.
+    """
+    if not (0 < cohort_size <= cfg.num_clients):
+        raise ValueError(
+            f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+    smp = sampler if sampler is not None else UniformSampler()
+
+    def select(norms, n_samples, t, sample_key):
+        M = cfg.num_clients
+        part, weights = smp.select(sample_key, schedule, t, M, n_samples,
+                                   norms)
+        ids = jnp.arange(M, dtype=jnp.int32)
+        order = jnp.argsort(jnp.where(part > 0, ids, ids + M))
+        cohort_ids = jnp.sort(order[:cohort_size])
+        return part, weights, cohort_ids
+
+    return select
+
+
+def make_store_compute(loss_fn: Callable, cfg: FederatedConfig, *,
+                       codec=None, attack=None):
+    """Cohort-shaped client sweep over PRE-GATHERED residual rows.
+
+    The store-form sibling of :func:`make_cohort_compute`: selection and
+    the residual gather already happened outside the program, so this is
+    the pure sweep — local updates → wire round-trip → adversary
+    injection.  Returns ``compute(params, cohort_res, cohort_batches,
+    cohort_ids, mask_key) -> dict`` with keys ``uploads`` / ``wired`` /
+    ``attacked`` / ``new_res`` / ``losses`` (same meanings as
+    :func:`make_cohort_compute`'s).  Per-client mask keys are row i of
+    ``split(mask_key, M)`` exactly as in every other engine, so client i's
+    masking draw does not depend on which execution form ran it.
+    """
+    attack = _active_attack(attack)
+    adv = None
+    if attack is not None:
+        adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
+                          jnp.float32)
+
+    def compute(params, cohort_res, cohort_batches, cohort_ids, mask_key):
+        M = cfg.num_clients
+        mask_keys = jnp.take(
+            jax.random.split(mask_key, M), cohort_ids, axis=0)
+        uploads, new_res, losses = stacked_client_update(
+            loss_fn, params, cohort_batches, mask_keys, cfg.client,
+            cohort_res, cfg.error_feedback)
+        wired = roundtrip_stacked(codec, uploads)
+        attacked = _attack_payload(attack, wired, adv, mask_key, M,
+                                   cohort_ids=cohort_ids)
+        return {
+            "uploads": uploads,
+            "new_res": new_res,
+            "losses": losses,
+            "wired": wired,
+            "attacked": attacked,
+        }
+
+    return compute
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreRound:
+    """The store-form round program, split at the store boundary.
+
+    ``select`` and ``body`` are independently jittable; the driver
+    (``FederatedServer._run_store``) moves residual rows between them
+    through a :class:`~repro.core.client_store.ClientStateStore`.  The
+    flags tell the driver which optional state the pieces consume."""
+
+    select: Callable   # (norms, n_samples, t, sample_key) -> (part, w, ids)
+    body: Callable     # cohort-shaped barrier; see make_store_round
+    adaptive: bool     # body consumes/updates the (M,) norm EMA
+    with_drop: bool    # round key splits 3 ways (hetero dropout draw)
+    error_feedback: bool  # new_rows/commit are meaningful (scatter needed)
+
+
+def make_store_round(loss_fn: Callable, schedule: SamplingSchedule,
+                     cfg: FederatedConfig, cohort_size: int, *,
+                     codec=None, aggregator=None, sampler=None, hetero=None,
+                     attack=None) -> StoreRound:
+    """Store-form sibling of :func:`make_cohort_round`.
+
+    Same math as the generalized cohort body, but residual gather/scatter
+    are OUTSIDE the program: ``body(params, cohort_res, cohort_batches,
+    cohort_ids, part, weights, norms, mask_key, drop_key) -> (new_params,
+    new_rows, commit, norm_upd, metrics)`` where ``new_rows`` are the
+    finalized post-round residual candidates (wire-loss feedback already
+    folded in), ``commit`` is the per-cohort-row "this upload applied"
+    mask the store's scatter gates on, and ``norm_upd`` is the cohort's
+    updated norm-EMA rows (None for non-adaptive samplers; rows with no
+    arrival carry the old value, so setting them back is a no-op).
+
+    Unlike the in-program engines there is no separate plain path: the
+    generalized body IS bit-exact for plain rounds too — the uniform
+    sampler's selection draw matches ``participation_mask``, and the only
+    difference from ``cohort_select``'s buffer is WHICH non-participants
+    pad the cohort, rows that contribute exact zeros to every reduction
+    and never commit.
+    """
+    if not (0 < cohort_size <= cfg.num_clients):
+        raise ValueError(
+            f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
+    attack = _active_attack(attack)
+    smp, drop = _round_extras(sampler, hetero, cfg)
+    _, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
+    compute = make_store_compute(loss_fn, cfg, codec=codec, attack=attack)
+    select = make_store_selection(schedule, cfg, cohort_size, sampler=sampler)
+    adv = None
+    if attack is not None:
+        adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
+                          jnp.float32)
+
+    def body(params, cohort_res, cohort_batches, cohort_ids, part, weights,
+             norms, mask_key, drop_key):
+        c = compute(params, cohort_res, cohort_batches, cohort_ids, mask_key)
+        uploads, new_res, wired = c["uploads"], c["new_res"], c["wired"]
+        losses, payload = c["losses"], c["attacked"]
+        finite = _finite_rows(payload)
+        arrived, weights = _apply_dropout(part, weights, drop, drop_key,
+                                          smp.normalize)
+
+        def gather(x):
+            return jnp.take(x, cohort_ids, axis=0)
+
+        valid = gather(part)
+        arr_c = gather(arrived)
+        w_c = gather(weights) * finite
+        new_params = agg_fn(params, _zero_rows(payload, finite), w_c,
+                            cfg.client.upload)
+        commit = jnp.zeros_like(valid)
+        if cfg.error_feedback:
+            # EF feedback on the HONEST (uploads, wired) pair, exactly as
+            # in the in-program engines.
+            if wired is not uploads:
+                new_res = jax.tree.map(
+                    lambda r, u, w: r + (u - w), new_res, uploads, wired)
+            commit = arr_c * finite
+
+        norm_upd = None
+        if smp.adaptive:
+            obs = _row_l2(payload)
+            old_c = gather(norms)
+            norm_upd = jnp.where(arr_c * finite > 0,
+                                 (1.0 - smp.ema) * old_c + smp.ema * obs,
+                                 old_c)
+
+        n_part = jnp.sum(part)
+        metrics = {
+            "mean_loss": jnp.where(
+                n_part > 0,
+                jnp.sum(losses * valid) / jnp.maximum(jnp.sum(valid), 1.0),
+                jnp.nan),
+            "num_sampled": n_part,
+            "quarantined": jnp.sum(arr_c * (1.0 - finite)),
+        }
+        if attack is not None:
+            metrics["num_adversarial"] = jnp.sum(part * adv)
+        if drop is not None:
+            metrics["part_mask"] = part
+            metrics["arrived_mask"] = arrived
+            metrics["num_arrived"] = jnp.sum(arrived)
+        return new_params, new_res, commit, norm_upd, metrics
+
+    return StoreRound(select=select, body=body, adaptive=smp.adaptive,
+                      with_drop=drop is not None,
+                      error_feedback=cfg.error_feedback)

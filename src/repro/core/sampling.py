@@ -308,11 +308,19 @@ class ImportanceSampler(ClientSampler):
         Horvitz-Thompson count weights)."""
         m = schedule.num_clients(t, num_registered)
         p = self.probabilities(norms)
-        draws = jax.random.categorical(key, jnp.log(p), shape=(num_registered,))
+        # Inverse-CDF multinomial slot draws.  Both the obvious routes are
+        # quadratic in M — ``random.categorical(key, logits, shape=(M,))``
+        # materializes an (M, M) Gumbel matrix and ``one_hot(draws, M)`` an
+        # (M, M) indicator — 40 GB each at M = 10^5.  CDF inversion plus a
+        # scatter-add is O(M log M) and draws from the identical
+        # distribution (p has the exploration floor, so every bin is
+        # non-empty).
+        cdf = jnp.cumsum(p)
+        u = jax.random.uniform(key, (num_registered,))
+        draws = jnp.clip(jnp.searchsorted(cdf, u * cdf[-1], side="right"),
+                         0, num_registered - 1)
         active = (jnp.arange(num_registered) < m).astype(jnp.float32)
-        counts = jnp.sum(
-            jax.nn.one_hot(draws, num_registered, dtype=jnp.float32)
-            * active[:, None], axis=0)
+        counts = jnp.zeros((num_registered,), jnp.float32).at[draws].add(active)
         part = (counts > 0).astype(jnp.float32)
         n_total = jnp.maximum(jnp.sum(n_samples), 1e-12)
         weights = counts * n_samples / (

@@ -73,8 +73,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client import local_update_flops
+from repro.core.client_store import ClientStateStore, DenseStore
 from repro.core.compression import pytree_num_params
-from repro.core.federated import FederatedConfig
+from repro.core.federated import FederatedConfig, _split_round_key
 from repro.core.hetero import simulate_round
 from repro.core.sampling import SamplingSchedule
 
@@ -112,6 +113,9 @@ class RoundRecord:
     quarantined: int = 0        # uploads rejected at the decode gate (ALL engines, §9)
     flushes: int = 0            # buffer flushes applied this round
     mean_staleness: float = 0.0  # mean flush-count staleness of applied rows
+    # --- cross-round staleness (max_round_stale > 0 only; DESIGN.md §11.1) ---
+    carried: int = 0            # deadline-cut uploads applied from earlier rounds
+    pending: int = 0            # uploads still parked for a later round
     # --- Byzantine accounting (strategy.attack set; DESIGN.md §9) ---
     adversarial: int = 0        # adversary-controlled participants this round
 
@@ -123,7 +127,8 @@ class FederatedServer:
                  cfg: FederatedConfig = None, init_params: PyTree = None,
                  eval_fn: Optional[Callable] = None, seed: int = 0,
                  engine: str = "cohort", scan_rounds: bool = True, *,
-                 strategy=None, num_clients: int = None):
+                 strategy=None, num_clients: int = None,
+                 store: Optional[ClientStateStore] = None):
         """Legacy kwargs constructor — DEPRECATED shim for one release.
 
         Prefer :meth:`from_strategy`.  The ``(schedule, cfg)`` pair is
@@ -165,15 +170,32 @@ class FederatedServer:
         self._loss_fn = loss_fn
         self._key = jax.random.PRNGKey(seed)
         self._compiled: Dict[tuple, Any] = {}   # (bucket, seg_len) -> executable
-        self._residuals = jax.tree.map(
-            lambda p: jnp.zeros((num_clients,) + p.shape, p.dtype),
-            init_params)
-        # Adaptive samplers (importance/threshold) feed on a per-client
-        # EMA of observed post-wire update norms; ones = "everyone looks
-        # equally important" until data arrives, so round 1 ~ uniform.
+        self._store_programs: Dict[int, Any] = {}  # bucket -> StoreRound
+        # All per-client server state — EF residuals, the adaptive
+        # samplers' norm EMAs (ones = "everyone looks equally important"
+        # until data arrives, so round 1 ~ uniform), model versions —
+        # lives in a ClientStateStore (DESIGN.md §11).  The default dense
+        # backend reproduces the historical (M, …) arrays bit for bit; a
+        # sharded store holds residuals only inside its retention window
+        # and routes sync rounds through _run_store.
         self._adaptive = strategy.sampler.adaptive
-        self._norms = (jnp.ones((num_clients,), jnp.float32)
-                       if self._adaptive else None)
+        if store is None:
+            store = DenseStore(num_clients, init_params,
+                               track_norms=self._adaptive)
+        if store.num_clients != num_clients:
+            raise ValueError(
+                f"store was built for {store.num_clients} clients but the "
+                f"server registers {num_clients}")
+        if self._adaptive and store.norms is None:
+            raise ValueError(
+                f"strategy {strategy.name!r} uses an adaptive sampler; "
+                "build the store with track_norms=True")
+        if engine == "full" and store.kind != "dense":
+            raise ValueError(
+                "engine='full' materializes every client's state per round "
+                f"— incompatible with a {store.kind!r} store; use "
+                "engine='cohort' or 'async'")
+        self.store = store
         # Simulated-fleet traits (static per-client draws) for the hetero
         # round clock; None on the paper's ideal homogeneous fleet.
         self._traits = (strategy.hetero.client_traits(num_clients)
@@ -184,7 +206,8 @@ class FederatedServer:
         self._async = None
         if engine == "async":
             from repro.core.async_engine import AsyncRoundRunner
-            self._async = AsyncRoundRunner(strategy, loss_fn, num_clients)
+            self._async = AsyncRoundRunner(strategy, loss_fn, num_clients,
+                                           store=self.store)
         self.history: List[RoundRecord] = []
         self._num_params = pytree_num_params(init_params)
         # Exact per-client-upload wire bytes: the codec's encode traced
@@ -195,13 +218,40 @@ class FederatedServer:
     def from_strategy(cls, strategy, loss_fn: Callable, init_params: PyTree,
                       num_clients: int, eval_fn: Optional[Callable] = None,
                       seed: int = 0, engine: str = "cohort",
-                      scan_rounds: bool = True) -> "FederatedServer":
+                      scan_rounds: bool = True,
+                      store: Optional[ClientStateStore] = None
+                      ) -> "FederatedServer":
         """Build a server from one :class:`FedStrategy` — sampling, masking,
         wire codec, aggregator and client hyperparameters all come from the
-        strategy record (e.g. ``strategy.get("fig5")``)."""
+        strategy record (e.g. ``strategy.get("fig5")``).  ``store`` picks
+        the client-state backend (``repro.core.client_store``); None means
+        a dense oracle store, reproducing the historical behaviour."""
         return cls(loss_fn, init_params=init_params, eval_fn=eval_fn,
                    seed=seed, engine=engine, scan_rounds=scan_rounds,
-                   strategy=strategy, num_clients=num_clients)
+                   strategy=strategy, num_clients=num_clients, store=store)
+
+    # ---- per-client state (delegated to the store) -----------------------
+    @property
+    def _residuals(self) -> PyTree:
+        """Dense ``(M, …)`` view of the store's EF residuals.  On the
+        dense backend this is the backing array itself (the in-program
+        engines consume and reassign it); a sharded store materializes it
+        on demand — test/debug only."""
+        return self.store.residuals_dense()
+
+    @_residuals.setter
+    def _residuals(self, value: PyTree) -> None:
+        self.store.set_dense(value)
+
+    @property
+    def _norms(self) -> Optional[jnp.ndarray]:
+        return self.store.norms
+
+    @_norms.setter
+    def _norms(self, value) -> None:
+        if value is None and self.store.norms is None:
+            return
+        self.store.set_norms(value)
 
     # ---- engine dispatch -------------------------------------------------
     def _round_program(self, bucket: int, seg_len: int):
@@ -273,13 +323,29 @@ class FederatedServer:
         history list.  Rounds are numbered from the server's persistent
         round counter, so a run on a ``restore_state``-d server continues
         where the checkpoint left off.
+
+        On a sharded store (any engine), ``client_batches`` may instead be
+        a *provider* callable ``provider(ids) -> cohort_batches`` (leading
+        axes ``(len(ids), num_batches, B, ...)``) so the full ``(M, …)``
+        batch stack never has to exist either — the scaling benchmark's
+        path to M = 10^6.
         """
         gamma = self.cfg.client.masking.gamma \
             if self.cfg.client.masking.mode != "none" else 1.0
         wire_bytes = self.client_upload_bytes
         n_samples = jnp.asarray(n_samples, jnp.float32)
-        flops_per_client = local_update_flops(
-            client_batches, self._num_params, self.cfg.client)
+        if callable(client_batches):
+            if self.store.kind == "dense":
+                raise ValueError(
+                    "a client_batches provider callable requires a sharded "
+                    "store (the dense engines close over the full batch "
+                    "stack)")
+            probe = client_batches(np.zeros((1,), np.int64))
+            flops_per_client = local_update_flops(
+                probe, self._num_params, self.cfg.client)
+        else:
+            flops_per_client = local_update_flops(
+                client_batches, self._num_params, self.cfg.client)
         start = self._round
 
         eval_rounds = set()
@@ -289,6 +355,10 @@ class FederatedServer:
 
         if self.engine == "async":
             return self._run_async(client_batches, n_samples, rounds,
+                                   eval_rounds, eval_data, gamma, wire_bytes,
+                                   flops_per_client)
+        if self.store.kind != "dense":
+            return self._run_store(client_batches, n_samples, rounds,
                                    eval_rounds, eval_data, gamma, wire_bytes,
                                    flops_per_client)
 
@@ -370,17 +440,25 @@ class FederatedServer:
         included — because those bytes crossed the uplink either way."""
         M = self.cfg.num_clients
         sampler = self.strategy.sampler
+        # On a sharded store the runner gathers/commits residual rows and
+        # norm EMAs through the store itself — never materialize the dense
+        # (M, …) view here.
+        sharded = self.store.kind != "dense"
         for _ in range(rounds):
             t = self._round + 1
             self._key, sub = jax.random.split(self._key)
             m = self.schedule.num_clients_host(t, M)
             bucket = sampler.cohort_bucket(self.schedule, m, M)
             t0 = time.perf_counter()
-            (self.params, self._residuals, self._norms,
+            res_in = None if sharded else self._residuals
+            (self.params, res_out, norms_out,
              stats) = self._async.run_round(
-                self.params, self._residuals, self._norms, client_batches,
+                self.params, res_in, self._norms, client_batches,
                 n_samples, t, sub, cohort_size=bucket,
                 flops=float(flops_per_client), wire_bytes=wire_bytes)
+            if not sharded:
+                self._residuals = res_out
+                self._norms = norms_out
             jax.block_until_ready(self.params)
             wall = max(0.0, time.perf_counter() - t0 - stats["compile_s"])
             rec = RoundRecord(
@@ -402,8 +480,127 @@ class FederatedServer:
                 quarantined=stats["quarantined"],
                 flushes=stats["flushes"],
                 mean_staleness=stats["mean_staleness"],
+                carried=stats.get("carried", 0),
+                pending=stats.get("pending", 0),
                 adversarial=stats["adversarial"],
             )
+            if t in eval_rounds:
+                rec.eval_metric = float(self.eval_fn(self.params, eval_data))
+            self.history.append(rec)
+            self._round = t
+        return self.history
+
+    # ---- store engine (sharded sync; DESIGN.md §11) ----------------------
+    def _store_program(self, bucket: int):
+        """The (cached) store-form round program for one cohort bucket."""
+        prog = self._store_programs.get(bucket)
+        if prog is None:
+            from repro.core.strategy import build_round
+            prog = build_round(self.strategy, self._loss_fn,
+                               self.cfg.num_clients, form="store",
+                               cohort_size=bucket)
+            self._store_programs[bucket] = prog
+        return prog
+
+    def _aot(self, tag: str, bucket: int, fn, args):
+        """AOT-compile ``fn`` once per (tag, bucket, input avals); returns
+        ``(executable, compile_s)`` — same caching discipline as
+        :meth:`_get_compiled`, keyed separately because the store-form
+        round is two programs, not one."""
+        avals = tuple((tuple(leaf.shape), str(leaf.dtype))
+                      for leaf in jax.tree_util.tree_leaves(args))
+        cache_key = (tag, bucket, avals)
+        hit = self._compiled.get(cache_key)
+        if hit is not None:
+            return hit, 0.0
+        t0 = time.perf_counter()
+        compiled = jax.jit(fn).lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        self._compiled[cache_key] = compiled
+        return compiled, compile_s
+
+    def _run_store(self, client_batches, n_samples, rounds, eval_rounds,
+                   eval_data, gamma, wire_bytes, flops_per_client):
+        """Sync round loop through the client-state store: selection and
+        the cohort-shaped barrier run as separate AOT programs, with the
+        residual gather/scatter between them going through ``self.store``
+        — the full ``(M, …)`` residual stack never exists.  Per-round key
+        splits are identical to the in-program engines (bit-exactness of
+        dense-vs-sharded runs depends on it)."""
+        M = self.cfg.num_clients
+        sampler = self.strategy.sampler
+        store = self.store
+        provider = client_batches if callable(client_batches) else None
+        for _ in range(rounds):
+            t = self._round + 1
+            self._key, sub = jax.random.split(self._key)
+            m = self.schedule.num_clients_host(t, M)
+            bucket = sampler.cohort_bucket(self.schedule, m, M)
+            prog = self._store_program(bucket)
+            sample_key, mask_key, drop_key = _split_round_key(
+                sub, prog.with_drop)
+            t_arg = jnp.asarray(t, jnp.float32)
+            norms = store.norms if prog.adaptive else None
+
+            sel_args = (norms, n_samples, t_arg, sample_key)
+            sel_fn, compile_s = self._aot("store-sel", bucket, prog.select,
+                                          sel_args)
+            t0 = time.perf_counter()
+            part, weights, cohort_ids = sel_fn(*sel_args)
+            ids_np = np.asarray(cohort_ids)
+            cohort_res = store.gather(ids_np)
+            if provider is not None:
+                cohort_batches = provider(ids_np)
+            else:
+                cohort_batches = jax.tree.map(
+                    lambda x: jnp.take(x, cohort_ids, axis=0),
+                    client_batches)
+            gather_s = time.perf_counter() - t0
+
+            body_args = (self.params, cohort_res, cohort_batches, cohort_ids,
+                         part, weights, norms, mask_key, drop_key)
+            body_fn, body_compile_s = self._aot("store-body", bucket,
+                                                prog.body, body_args)
+            compile_s += body_compile_s
+            t0 = time.perf_counter()
+            (self.params, new_rows, commit, norm_upd,
+             metrics) = body_fn(*body_args)
+            jax.block_until_ready(self.params)
+            wall = gather_s + (time.perf_counter() - t0)
+
+            part_np = np.asarray(part)
+            # Θ_t went out to the true participants this round — the
+            # version state cross-round staleness measures against.
+            store.mark_dispatched(ids_np[part_np[ids_np] > 0], t)
+            if prog.error_feedback:
+                store.scatter(ids_np, new_rows, np.asarray(commit), t)
+            if prog.adaptive:
+                store.update_norms(ids_np, norm_upd)
+
+            m_t = float(np.asarray(metrics["num_sampled"]))
+            rec = RoundRecord(
+                round=t,
+                num_sampled=int(m_t),
+                mean_loss=float(np.asarray(metrics["mean_loss"])),
+                transport_units=m_t * gamma,
+                transport_bytes=int(m_t) * wire_bytes,
+                wall_s=wall,
+                compile_s=compile_s,
+                cohort_size=bucket,
+                flop_proxy=float(flops_per_client) * bucket,
+                quarantined=int(np.asarray(metrics["quarantined"])),
+                adversarial=int(np.asarray(
+                    metrics["num_adversarial"]))
+                if "num_adversarial" in metrics else 0,
+            )
+            if self._traits is not None:
+                sim = simulate_round(self._traits,
+                                     np.asarray(metrics["part_mask"]),
+                                     np.asarray(metrics["arrived_mask"]),
+                                     float(flops_per_client), wire_bytes)
+                rec.sim_round_s = sim["sim_round_s"]
+                rec.straggler_s = sim["straggler_s"]
+                rec.dropped = sim["dropped"]
             if t in eval_rounds:
                 rec.eval_metric = float(self.eval_fn(self.params, eval_data))
             self.history.append(rec)
@@ -413,37 +610,55 @@ class FederatedServer:
     # ---- checkpoint / resume --------------------------------------------
     def state(self) -> Dict[str, Any]:
         """The complete resumable training state as one pytree: global
-        params, EF residuals, the sampler's norm EMAs (adaptive samplers
-        only) and the server RNG key.  The round counter rides in the
-        checkpoint's ``extra`` manifest."""
-        tree: Dict[str, Any] = {
+        params, the server RNG key, and the store's per-client state (EF
+        residuals — dense stack or sharded slot pool —, sampler norm EMAs,
+        model versions).  The round counter rides in the checkpoint's
+        ``extra`` manifest."""
+        return {
             "key": self._key,
             "params": self.params,
-            "residuals": self._residuals,
+            **self.store.state(),
         }
-        if self._norms is not None:
-            tree["norms"] = self._norms
-        return tree
 
     def save_state(self, ckpt_dir: str) -> str:
-        """Checkpoint :meth:`state` (atomically) at the current round."""
+        """Checkpoint :meth:`state` (atomically) at the current round.
+        The manifest's ``extra`` records the round counter plus the
+        population size and store backend, so a mismatched restore fails
+        loudly before any state is touched."""
         from repro.checkpoint.checkpoint import save_checkpoint
         return save_checkpoint(ckpt_dir, self._round, self.state(),
-                               extra={"round": self._round})
+                               extra={"round": self._round,
+                                      "num_clients": self.cfg.num_clients,
+                                      "store": self.store.kind})
 
     def restore_state(self, ckpt_dir: str, step: Optional[int] = None) -> int:
         """Restore :meth:`state` from ``ckpt_dir`` (latest step unless
         pinned) and continue the round numbering where the checkpoint left
         off; the next ``run()`` resumes bit-identically to the run that
-        wrote it.  Returns the restored step."""
-        from repro.checkpoint.checkpoint import restore_checkpoint
+        wrote it.  Returns the restored step.
+
+        Validates the checkpoint against this server BEFORE assigning
+        anything: a checkpoint written for a different population size or
+        store backend raises ``ValueError`` naming both values instead of
+        silently loading mismatched per-client state."""
+        from repro.checkpoint.checkpoint import (read_manifest,
+                                                 restore_checkpoint)
+        extra = read_manifest(ckpt_dir, step).get("extra", {})
+        ckpt_m = extra.get("num_clients")
+        if ckpt_m is not None and int(ckpt_m) != self.cfg.num_clients:
+            raise ValueError(
+                f"checkpoint was written for num_clients={int(ckpt_m)} but "
+                f"this server registers num_clients={self.cfg.num_clients}")
+        ckpt_store = extra.get("store")
+        if ckpt_store is not None and ckpt_store != self.store.kind:
+            raise ValueError(
+                f"checkpoint holds a {ckpt_store!r} store but this server "
+                f"owns a {self.store.kind!r} store")
         restored, step, extra = restore_checkpoint(ckpt_dir, self.state(),
                                                    step)
-        self._key = jnp.asarray(restored["key"])
-        self.params = restored["params"]
-        self._residuals = restored["residuals"]
-        if self._norms is not None:
-            self._norms = jnp.asarray(restored["norms"])
+        self._key = jnp.asarray(restored.pop("key"))
+        self.params = restored.pop("params")
+        self.store.load_state(restored)
         self._round = int(extra.get("round", step))
         return step
 
@@ -502,4 +717,5 @@ class FederatedServer:
             out["mean_staleness"] = float(
                 sum(r.mean_staleness * r.arrivals for r in self.history)
                 / arrivals) if arrivals else 0.0
+            out["carried"] = int(sum(r.carried for r in self.history))
         return out

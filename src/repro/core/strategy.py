@@ -62,7 +62,7 @@ from repro.core.codecs import (BitmapCodec, ChainCodec, FusedSparseCodec,
                                UploadCodec)
 from repro.core.federated import (FederatedConfig, fedavg_aggregate,
                                   make_cohort_round, make_cohort_scan,
-                                  make_federated_round)
+                                  make_federated_round, make_store_round)
 from repro.core.hetero import HeteroModel
 from repro.core.masking import MaskingConfig
 from repro.core.sampling import (ClientSampler, DynamicSampling,
@@ -381,14 +381,18 @@ def build_round(strategy: FedStrategy, loss_fn: Callable, num_clients: int,
     ``form``: ``"full"`` — the all-clients vmap oracle; ``"cohort"`` — the
     bucketed cohort engine (requires ``cohort_size``); ``"scan"`` — the
     lax.scan-over-rounds fast path (requires ``cohort_size``; a
-    ``cohort_size == num_clients`` scan wraps the oracle).  The strategy's
-    codec, aggregator, client sampler and hetero model are threaded into
-    the round body, so every form runs the same math.  When
+    ``cohort_size == num_clients`` scan wraps the oracle); ``"store"`` —
+    the round split at the client-state-store boundary (requires
+    ``cohort_size``; returns a ``repro.core.federated.StoreRound`` whose
+    residual gather/scatter run OUTSIDE the program, through a
+    ``repro.core.client_store.ClientStateStore``).  The strategy's codec,
+    aggregator, client sampler and hetero model are threaded into the
+    round body, so every form runs the same math.  When
     ``strategy.sampler.adaptive`` the returned program takes/returns an
     extra ``norms`` state vector after ``residuals`` (see
     ``repro.core.federated.make_federated_round``).
     """
-    if form not in ("full", "cohort", "scan"):
+    if form not in ("full", "cohort", "scan", "store"):
         raise ValueError(f"unknown round form {form!r}")
     cfg = strategy.federated_config(num_clients)
     kw = dict(codec=strategy.codec, aggregator=strategy.aggregator,
@@ -401,6 +405,9 @@ def build_round(strategy: FedStrategy, loss_fn: Callable, num_clients: int,
     if form == "cohort":
         return make_cohort_round(loss_fn, strategy.sampling, cfg,
                                  cohort_size, **kw)
+    if form == "store":
+        return make_store_round(loss_fn, strategy.sampling, cfg,
+                                cohort_size, **kw)
     return make_cohort_scan(loss_fn, strategy.sampling, cfg,
                             cohort_size, **kw)
 
@@ -524,6 +531,21 @@ register(FedStrategy(
     async_cfg=AsyncConfig(buffer_frac=0.5, staleness_beta=0.5,
                           deadline_quantile=0.9, max_retries=2,
                           backoff_s=0.5, jitter_sigma=0.25)))
+
+# "async-crossround": beyond-paper — async-mobile with a HARSH deadline
+# (median arrival) and cross-round staleness (DESIGN.md §11): uploads cut
+# at the deadline stay in flight and land in a later round, discounted by
+# w/(1+s)^beta where s counts ROUNDS since the client pulled Θ, expiring
+# past s = 3.  Requires a ClientStateStore (any backend) for the
+# per-client model-version vector.
+register(FedStrategy(
+    name="async-crossround",
+    sampling=DynamicSampling(initial_rate=1.0, beta=0.1, min_clients=2),
+    hetero=HeteroModel(profile="mobile"),
+    async_cfg=AsyncConfig(buffer_frac=0.5, staleness_beta=0.5,
+                          deadline_quantile=0.5, max_retries=2,
+                          backoff_s=0.5, jitter_sigma=0.25,
+                          max_round_stale=3)))
 
 # "async-flaky": the same async engine on the flaky-mobile fleet with an
 # aggressive deadline (75th percentile) and a deeper retry budget — the

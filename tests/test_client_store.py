@@ -1,0 +1,389 @@
+"""Client-state store (DESIGN.md §11): DenseStore/ShardedStore semantics,
+Dense-vs-Sharded bit-exactness across the strategy registry, eviction
+divergence, checkpoint round-trips with pre-restore validation, and the
+async engine's cross-round staleness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DynamicSampling, FederatedServer, strategy
+from repro.core.async_engine import AsyncConfig, AsyncRoundRunner
+from repro.core.client_store import DenseStore, ShardedStore, make_store
+from repro.core.hetero import HeteroModel
+
+# D exceeds the presets' masking/codec min_leaf_size (256), so selective
+# masking binds and EF residuals carry real mass — with a smaller leaf the
+# wire is lossless and every residual comparison would be vacuously 0 == 0.
+M, NB, B, D = 16, 2, 4, 320
+
+
+def _problem(num_clients=M, seed=0):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (num_clients, NB, B, D))
+    w_true = jnp.arange(1.0, D + 1.0)
+    ys = jnp.einsum("mnbd,d->mnb", xs, w_true)
+    params = {"w": jnp.zeros((D,)), "b": jnp.zeros(())}
+
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"] + p["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    batches = {"x": xs, "y": ys}
+    n = np.full((num_clients,), NB * B, np.float64)
+    return loss_fn, params, batches, n
+
+
+def _run(name, *, store=None, num_clients=M, rounds=3, engine=None,
+         seed=0, **overrides):
+    loss_fn, params, batches, n = _problem(num_clients, seed)
+    strat = strategy.get(name, **overrides) if overrides \
+        else strategy.get(name)
+    if engine is None:
+        engine = "async" if strat.async_cfg is not None else "cohort"
+    server = FederatedServer.from_strategy(
+        strat, loss_fn, params, num_clients, seed=seed, engine=engine,
+        store=store)
+    server.run(batches, n, rounds)
+    return server
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _template():
+    return {"w": jnp.zeros((D,)), "b": jnp.zeros(())}
+
+
+# ---- backend semantics ----------------------------------------------------
+def test_make_store_kinds_and_validation():
+    t = _template()
+    assert make_store("dense", M, t).kind == "dense"
+    sh = make_store("sharded", M, t, retention=4)
+    assert sh.kind == "sharded" and sh.retention == 4
+    with pytest.raises(ValueError, match="unknown store kind"):
+        make_store("mmap", M, t)
+
+
+def test_sharded_gather_zero_on_miss():
+    sh = ShardedStore(M, _template(), retention=4)
+    rows = sh.gather(np.asarray([3, 7, 11]))
+    for leaf in jax.tree_util.tree_leaves(rows):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+def test_sharded_scatter_commit_mask_and_roundtrip():
+    sh = ShardedStore(M, _template(), retention=4)
+    ids = np.asarray([2, 5])
+    rows = {"w": jnp.ones((2, D)), "b": jnp.full((2,), 3.0)}
+    sh.scatter(ids, rows, np.asarray([1.0, 0.0], np.float32), 1)
+    got = sh.gather(ids)
+    np.testing.assert_array_equal(np.asarray(got["w"][0]), 1.0)
+    np.testing.assert_array_equal(np.asarray(got["b"][0]), 3.0)
+    # commit=0 row never landed: client 5 still reads zeros
+    np.testing.assert_array_equal(np.asarray(got["w"][1]), 0.0)
+
+
+def test_sharded_lru_eviction_and_counter():
+    sh = ShardedStore(M, _template(), retention=2)
+    one = {"w": jnp.ones((1, D)), "b": jnp.ones((1,))}
+    keep = np.ones((1,), np.float32)
+    sh.scatter(np.asarray([0]), one, keep, 1)
+    sh.scatter(np.asarray([1]), one, keep, 2)
+    assert sh.evictions == 0
+    sh.scatter(np.asarray([2]), one, keep, 3)   # evicts client 0 (oldest)
+    assert sh.evictions == 1
+    np.testing.assert_array_equal(np.asarray(sh.gather([0])["w"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(sh.gather([1])["w"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(sh.gather([2])["w"]), 1.0)
+
+
+def test_sharded_over_capacity_raises():
+    sh = ShardedStore(M, _template(), retention=2)
+    rows = {"w": jnp.ones((3, D)), "b": jnp.ones((3,))}
+    with pytest.raises(ValueError, match="retains only"):
+        sh.scatter(np.asarray([0, 1, 2]), rows, np.ones((3,), np.float32), 1)
+
+
+def test_version_vector_and_staleness():
+    sh = ShardedStore(M, _template(), retention=4)
+    sh.mark_dispatched(np.asarray([1, 4]), 3)
+    s = sh.staleness(np.asarray([1, 4]), 7)
+    np.testing.assert_array_equal(s, [4, 4])
+    sh.mark_dispatched(np.asarray([4]), 7)
+    s = sh.staleness(np.asarray([1, 4]), 7)
+    np.testing.assert_array_equal(s, [4, 0])
+
+
+def test_memory_bytes_retention_bound():
+    retention = 4
+    sh = ShardedStore(M, _template(), retention=retention)
+    mem = sh.memory_bytes()
+    per_client = mem["client_bytes"]
+    assert mem["dense_equiv_bytes"] == per_client * M
+    # slot pool = retention + 1 sentinel rows, regardless of M
+    assert mem["residual_bytes"] == per_client * (retention + 1)
+    assert mem["residual_bytes"] <= \
+        (retention + 1) / M * mem["dense_equiv_bytes"] + per_client
+
+
+def test_shard_over_single_device_mesh_is_noop_safe():
+    from jax.sharding import Mesh
+    sh = ShardedStore(M, _template(), retention=4, track_norms=True)
+    one = {"w": jnp.ones((1, D)), "b": jnp.ones((1,))}
+    sh.scatter(np.asarray([3]), one, np.ones((1,), np.float32), 1)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    sh.shard_over(mesh)
+    np.testing.assert_array_equal(np.asarray(sh.gather([3])["w"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(sh.norms), 1.0)
+
+
+# ---- Dense vs Sharded bit-exactness across the registry -------------------
+@pytest.mark.parametrize("preset", strategy.names())
+def test_dense_vs_sharded_bit_exact(preset):
+    """With retention covering every client, the sharded store reproduces
+    the dense engines bit for bit — params, EF residuals, norm EMAs and
+    version vectors — on every registry preset, under whichever engine the
+    preset targets (async presets run the async engine)."""
+    strat = strategy.get(preset)
+    dense = _run(preset)
+    sh = ShardedStore(M, _template(), retention=M,
+                      track_norms=strat.sampler.adaptive)
+    sharded = _run(preset, store=sh)
+    assert sh.evictions == 0
+    _tree_equal(dense.params, sharded.params)
+    _tree_equal(dense.store.residuals_dense(),
+                sharded.store.residuals_dense())
+    if strat.async_cfg is not None:
+        # both backends share the async runner, which versions dispatches
+        np.testing.assert_array_equal(dense.store.versions,
+                                      sharded.store.versions)
+    else:
+        # the sync dense engines keep the historical scan path (no version
+        # bookkeeping); the store program marks dispatches, so the sharded
+        # run must have versioned someone
+        assert sharded.store.versions.max() > 0
+    if strat.sampler.adaptive:
+        np.testing.assert_array_equal(np.asarray(dense.store.norms),
+                                      np.asarray(sharded.store.norms))
+
+
+def test_eviction_divergence_is_the_documented_one():
+    """With a retention window SMALLER than the active cohort history the
+    sharded run diverges from the dense oracle exactly as documented:
+    evicted clients re-enter with a ZERO residual (their correction mass
+    is dropped), everything still inside the window stays bit-exact."""
+    name = "fig5"
+    # ~4-client cohorts, so each round's commit set fits retention=4 but
+    # the union of cohorts across rounds does not
+    overrides = dict(error_feedback=True,
+                     sampling=DynamicSampling(initial_rate=0.25, beta=0.0,
+                                              min_clients=2))
+    dense = _run(name, rounds=8, **overrides)
+    sh = ShardedStore(M, _template(), retention=4, track_norms=False)
+    sharded = _run(name, store=sh, rounds=8, **overrides)
+    assert sh.evictions > 0
+    dense_res = dense.store.residuals_dense()
+    shard_res = sharded.store.residuals_dense()
+    # evicted-and-not-recommitted clients hold exact zeros in the sharded
+    # store; the dense oracle still remembers their residuals
+    live = set(sh._slot_of)
+    gone = [c for c in range(M) if c not in live]
+    assert gone, "retention=4 over 5 rounds must have evicted someone"
+    for leaf in jax.tree_util.tree_leaves(shard_res):
+        np.testing.assert_array_equal(np.asarray(leaf)[gone], 0.0)
+    dense_gone = np.concatenate(
+        [np.abs(np.asarray(leaf)[gone]).ravel()
+         for leaf in jax.tree_util.tree_leaves(dense_res)])
+    assert dense_gone.max() > 0.0  # the oracle DID hold mass there
+
+
+def test_full_engine_rejects_sharded_store():
+    loss_fn, params, _, _ = _problem()
+    sh = ShardedStore(M, _template(), retention=4)
+    with pytest.raises(ValueError, match="engine='full'"):
+        FederatedServer.from_strategy(strategy.get("dense-baseline"),
+                                      loss_fn, params, M, engine="full",
+                                      store=sh)
+
+
+def test_adaptive_sampler_requires_norm_tracking():
+    loss_fn, params, _, _ = _problem()
+    sh = ShardedStore(M, _template(), retention=M, track_norms=False)
+    with pytest.raises(ValueError, match="track_norms"):
+        FederatedServer.from_strategy(strategy.get("fig3-importance"),
+                                      loss_fn, params, M, store=sh)
+
+
+def test_batch_provider_requires_sharded_store():
+    loss_fn, params, batches, n = _problem()
+    server = FederatedServer.from_strategy(strategy.get("fig5"), loss_fn,
+                                           params, M)
+    with pytest.raises(ValueError, match="provider"):
+        server.run(lambda ids: jax.tree.map(
+            lambda x: jnp.take(x, jnp.asarray(np.asarray(ids)), axis=0),
+            batches), n, 1)
+
+
+def test_batch_provider_matches_stacked_batches():
+    """A provider callable on the sharded store reproduces the stacked-
+    batches run bit for bit — gathering rows on demand changes nothing."""
+    loss_fn, params, batches, n = _problem()
+
+    def provider(ids):
+        idx = jnp.asarray(np.asarray(ids))
+        return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), batches)
+
+    outs = []
+    for client_batches in (batches, provider):
+        sh = ShardedStore(M, _template(), retention=M)
+        server = FederatedServer.from_strategy(
+            strategy.get("fig5", error_feedback=True), loss_fn, params, M,
+            store=sh)
+        server.run(client_batches, n, 3)
+        outs.append(server)
+    _tree_equal(outs[0].params, outs[1].params)
+    _tree_equal(outs[0].store.residuals_dense(),
+                outs[1].store.residuals_dense())
+
+
+# ---- checkpointing --------------------------------------------------------
+def test_sharded_checkpoint_roundtrip_bit_exact(tmp_path):
+    loss_fn, params, batches, n = _problem()
+    name = "fig3-importance"
+
+    def fresh():
+        sh = ShardedStore(M, _template(), retention=M, track_norms=True)
+        return FederatedServer.from_strategy(strategy.get(name), loss_fn,
+                                             params, M, store=sh)
+
+    oracle = fresh()
+    oracle.run(batches, n, 4)
+
+    a = fresh()
+    a.run(batches, n, 2)
+    a.save_state(str(tmp_path))
+
+    b = fresh()
+    step = b.restore_state(str(tmp_path))
+    assert step == 2
+    b.run(batches, n, 2)
+    _tree_equal(oracle.params, b.params)
+    _tree_equal(oracle.store.residuals_dense(),
+                b.store.residuals_dense())
+    np.testing.assert_array_equal(np.asarray(oracle.store.norms),
+                                  np.asarray(b.store.norms))
+    np.testing.assert_array_equal(oracle.store.versions, b.store.versions)
+
+
+def test_restore_rejects_population_mismatch(tmp_path):
+    server = _run("fig5", rounds=1)
+    server.save_state(str(tmp_path))
+    loss_fn, params, _, _ = _problem(24)
+    other = FederatedServer.from_strategy(strategy.get("fig5"), loss_fn,
+                                          params, 24)
+    with pytest.raises(ValueError, match=r"num_clients=16.*num_clients=24"):
+        other.restore_state(str(tmp_path))
+
+
+def test_restore_rejects_store_kind_mismatch(tmp_path):
+    server = _run("fig5", rounds=1)          # dense store checkpoint
+    server.save_state(str(tmp_path))
+    loss_fn, params, _, _ = _problem()
+    sh = ShardedStore(M, _template(), retention=M)
+    other = FederatedServer.from_strategy(strategy.get("fig5"), loss_fn,
+                                          params, M, store=sh)
+    with pytest.raises(ValueError, match="'dense'.*'sharded'"):
+        other.restore_state(str(tmp_path))
+
+
+# ---- cross-round staleness (async engine) ---------------------------------
+def _async_rounds(strat, store, rounds, num_clients=M, seed=0):
+    loss_fn, params, batches, n = _problem(num_clients, seed)
+    runner = AsyncRoundRunner(strat, loss_fn, num_clients, store=store)
+    residuals = None
+    if store is None or store.kind == "dense":
+        residuals = jax.tree.map(
+            lambda x: jnp.zeros((num_clients,) + x.shape), params)
+    norms = store.norms if store is not None else None
+    key = jax.random.PRNGKey(seed)
+    stats_log = []
+    for t in range(1, rounds + 1):
+        key, sub = jax.random.split(key)
+        m = strat.sampling.num_clients_host(t, num_clients)
+        bucket = strat.sampler.cohort_bucket(strat.sampling, m, num_clients)
+        params, residuals, norms, stats = runner.run_round(
+            params, residuals, norms, batches,
+            jnp.asarray(n, jnp.float32), t, sub, cohort_size=bucket,
+            flops=1e6, wire_bytes=1000)
+        stats_log.append(stats)
+    return params, stats_log
+
+
+def test_crossround_requires_store():
+    strat = strategy.get("async-crossround")
+    loss_fn, _, _, _ = _problem()
+    with pytest.raises(ValueError, match="ClientStateStore"):
+        AsyncRoundRunner(strat, loss_fn, M, store=None)
+
+
+def test_crossround_keystone_degenerates_on_ideal_fleet():
+    """With K = m_t and no deadline on the ideal fleet there is exactly
+    one flush and nothing is ever cut, so max_round_stale > 0 must change
+    NOTHING — the run is bit-identical to the legacy flush-distance mode.
+    (Under buffered flushes the two modes legitimately differ even without
+    carries: cross-round mode measures staleness in ROUND distance, so
+    same-round rows apply undiscounted where legacy applies the
+    flush-distance factor.)"""
+    base = strategy.get("async-mobile", hetero=HeteroModel(profile="ideal"),
+                        async_cfg=AsyncConfig())
+    legacy = base
+    cross = base.replace(async_cfg=dataclasses.replace(
+        base.async_cfg, max_round_stale=3))
+    p_legacy, s_legacy = _async_rounds(
+        legacy, DenseStore(M, _template()), 4)
+    p_cross, s_cross = _async_rounds(
+        cross, DenseStore(M, _template()), 4)
+    _tree_equal(p_legacy, p_cross)
+    assert all(s["carried"] == 0 and s["pending"] == 0 for s in s_cross)
+
+
+def test_crossround_carries_deadline_cut_uploads():
+    """On the mobile fleet with a harsh deadline, cross-round mode carries
+    cut uploads into later rounds: they apply with round-distance
+    staleness > 0 instead of timing out, and expired/superseded entries
+    drain from the pending set."""
+    strat = strategy.get("async-crossround")
+    _, stats = _async_rounds(strat, DenseStore(M, _template()), 10)
+    assert sum(s["carried"] for s in stats) > 0
+    assert any(s["pending"] > 0 for s in stats)
+    # carried applies happen at s >= 1, so SOME round shows mean staleness
+    assert any(s["mean_staleness"] > 0 for s in stats)
+    # legacy mode on the same fleet times those uploads out instead
+    legacy = strat.replace(async_cfg=dataclasses.replace(
+        strat.async_cfg, max_round_stale=0))
+    _, stats0 = _async_rounds(legacy, DenseStore(M, _template()), 10)
+    assert all("carried" in s and s["carried"] == 0 for s in stats0)
+    assert sum(s["timeouts"] for s in stats0) >= \
+        sum(s["timeouts"] for s in stats) - 1
+
+
+def test_crossround_dense_vs_sharded_bit_exact():
+    strat = strategy.get("async-crossround")
+    p_dense, s_dense = _async_rounds(strat, DenseStore(M, _template()), 8)
+    p_shard, s_shard = _async_rounds(
+        strat, ShardedStore(M, _template(), retention=M), 8)
+    _tree_equal(p_dense, p_shard)
+    assert [s["carried"] for s in s_dense] == \
+        [s["carried"] for s in s_shard]
+
+
+def test_async_config_validates_max_round_stale():
+    with pytest.raises(ValueError, match="max_round_stale"):
+        AsyncConfig(max_round_stale=-1)
