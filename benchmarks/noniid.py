@@ -1,49 +1,134 @@
-"""Beyond-paper ablation: the paper evaluates IID partitioning only (§5.1.2).
-Here: selective vs random masking under McMahan-style pathological non-IID
-label sharding (2 labels/client), plus error feedback — does top-k masking
-survive client drift?"""
+"""Non-IID benchmark grid: bytes-to-target-loss under Dirichlet label skew.
+
+The paper evaluates IID partitioning only (§5.1.2); this grid asks the
+beyond-paper question the LocalObjective axis (DESIGN.md §12) exists for:
+under Dirichlet(alpha) label skew, how many wire bytes does each local
+objective need to reach a target training loss, and does norm-adaptive
+client selection change that answer?
+
+  PYTHONPATH=src python -m benchmarks.noniid            # full grid
+  PYTHONPATH=src python -m benchmarks.noniid --smoke    # CI gate row
+
+Grid axes (full run):
+
+* partition   — Dirichlet alpha in {0.1, 0.5} (harsh / moderate skew),
+                ``repro.data.dirichlet_partition_images``;
+* objective   — fedavg (plain), prox (FedProx mu=0.1), dyn (FedDyn
+                alpha=0.1 with the drift tree riding the client-state
+                store) — the ``fig5`` / ``fig5-prox`` / ``fig5-dyn``
+                presets;
+* sampler     — importance | threshold (both norm-adaptive, DESIGN.md §5).
+
+Every cell runs fig5's wire operating point (dynamic c(t) beta=0.1,
+selective masking gamma=0.5, sparse COO codec) and reports
+``bytes_to_target``: cumulative EXACT wire bytes at the first round whose
+mean training loss <= TARGET_LOSS (-1 when the budgeted rounds never get
+there, with ``reached=false``).  Writes ``BENCH_noniid.json`` (or
+``BENCH_noniid.smoke.json``) in the shared envelope; CI diffs the smoke
+artifact against ``benchmarks/baselines/BENCH_noniid.smoke.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import FederatedServer, MaskingConfig, StaticSampling
-from repro.core.strategy import FedStrategy
-from repro.data import class_gaussian_images, noniid_partition_images
+from repro.core import FederatedServer, strategy
+from repro.core.sampling import ImportanceSampler, ThresholdSampler
+from repro.data import class_gaussian_images, dirichlet_partition_images
 from repro.models import (classifier_accuracy, classifier_loss, init_lenet,
                           lenet_forward)
 
 NUM_CLIENTS, IMG = 8, 12
+TARGET_LOSS = 1.0
+ROUNDS_FULL, ROUNDS_SMOKE = 16, 4
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_noniid.json")
+SMOKE_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_noniid.smoke.json")
+
+_OBJECTIVES = {"fedavg": "fig5", "prox": "fig5-prox", "dyn": "fig5-dyn"}
+_SAMPLERS = {"importance": ImportanceSampler, "threshold": ThresholdSampler}
 
 
-def _run(masking, error_feedback=False, rounds=14, seed=0):
-    data = class_gaussian_images(num_train=NUM_CLIENTS * 160, num_test=512,
-                                 image_size=IMG, noise=0.6, seed=seed)
-    xs, ys, n = noniid_partition_images(data.train_x, data.train_y,
-                                        NUM_CLIENTS, 16,
-                                        shards_per_client=2, seed=seed)
-    strat = FedStrategy.from_components(
-        "noniid", StaticSampling(initial_rate=1.0), masking,
-        learning_rate=0.05, error_feedback=error_feedback)
+def _data(alpha: float, seed: int = 0):
+    d = class_gaussian_images(num_train=NUM_CLIENTS * 160, num_test=512,
+                              image_size=IMG, noise=0.6, seed=seed)
+    xs, ys, n = dirichlet_partition_images(d.train_x, d.train_y,
+                                           NUM_CLIENTS, 16, alpha=alpha,
+                                           seed=seed)
+    return ((jnp.asarray(xs), jnp.asarray(ys)), n,
+            (jnp.asarray(d.test_x), jnp.asarray(d.test_y)))
+
+
+def run_cell(alpha: float, objective: str, sampler: str, rounds: int,
+             seed: int = 0):
+    """One grid cell: fig5's wire operating point + the named local
+    objective + the named adaptive sampler, on Dirichlet(alpha) shards."""
+    batches, n, eval_data = _data(alpha, seed)
+    strat = strategy.get(_OBJECTIVES[objective],
+                         sampler=_SAMPLERS[sampler]())
     params = init_lenet(jax.random.PRNGKey(seed), IMG)
     server = FederatedServer.from_strategy(
         strat, classifier_loss(lenet_forward), params, NUM_CLIENTS,
-        eval_fn=jax.jit(classifier_accuracy(lenet_forward)))
-    server.run((jnp.asarray(xs), jnp.asarray(ys)), n, rounds,
-               eval_every=rounds,
-               eval_data=(jnp.asarray(data.test_x), jnp.asarray(data.test_y)))
-    return server.summary()
+        eval_fn=jax.jit(classifier_accuracy(lenet_forward)), seed=seed)
+    t0 = time.time()
+    server.run(batches, n, rounds, eval_every=rounds, eval_data=eval_data)
+    wall = time.time() - t0
+    s = server.summary()
+
+    cum_bytes, bytes_to_target = 0, -1
+    for rec in server.history:
+        cum_bytes += rec.transport_bytes
+        if bytes_to_target < 0 and rec.mean_loss <= TARGET_LOSS:
+            bytes_to_target = cum_bytes
+    return {
+        "figure": "noniid_grid",
+        "alpha": alpha,
+        "objective": objective,
+        "sampler": sampler,
+        "rounds": rounds,
+        "target_loss": TARGET_LOSS,
+        "reached": bytes_to_target >= 0,
+        "bytes_to_target": bytes_to_target,
+        "final_loss": round(s["final_loss"], 4),
+        "final_eval": round(s["final_eval"], 4),
+        "transport_bytes": s["transport_bytes"],
+        "steady_wall_s": round(s["steady_wall_s"], 4),
+        "compile_s": round(s["compile_s"], 2),
+        "wall_s": round(wall, 2),
+    }
 
 
-def run():
-    rows = []
-    for name, masking, ef in [
-            ("dense", MaskingConfig(mode="none"), False),
-            ("random_g0.2", MaskingConfig(mode="random", gamma=0.2), False),
-            ("selective_g0.2", MaskingConfig(mode="selective", gamma=0.2), False),
-            ("selective_g0.2_ef", MaskingConfig(mode="selective", gamma=0.2), True)]:
-        s = _run(masking, ef)
-        rows.append({"figure": "noniid", "setting": name,
-                     "final_eval": s["final_eval"],
-                     "final_loss": s["final_loss"],
-                     "transport_units": s["transport_units"]})
-    return rows
+def run(smoke: bool = False):
+    if smoke:
+        # One representative cell per objective at moderate skew — enough
+        # to gate byte accounting and the dyn drift path without a long run.
+        cells = [(0.5, obj, "importance", ROUNDS_SMOKE)
+                 for obj in ("fedavg", "prox", "dyn")]
+    else:
+        cells = [(alpha, obj, smp, ROUNDS_FULL)
+                 for alpha in (0.1, 0.5)
+                 for obj in ("fedavg", "prox", "dyn")
+                 for smp in ("importance", "threshold")]
+    return [run_cell(*cell) for cell in cells]
+
+
+def main():
+    from benchmarks.common import fmt_rows, write_bench
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3-cell CI gate (writes BENCH_noniid.smoke.json)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    write_bench(SMOKE_PATH if args.smoke else OUT_PATH, "noniid", rows)
+    print(fmt_rows(rows))
+
+
+if __name__ == "__main__":
+    main()

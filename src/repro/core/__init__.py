@@ -20,6 +20,7 @@ from repro.core.masking import (
     MaskingConfig, random_mask, selective_mask_exact,
     selective_mask_threshold, mask_pytree,
 )
+from repro.core.objectives import LocalObjective
 from repro.core.client import (
     ClientConfig, client_update, local_sgd, stacked_client_update,
     local_update_flops,

@@ -70,7 +70,7 @@ import numpy as np
 
 from repro.core.codecs import IdentityCodec
 from repro.core.federated import (_active_attack, _resolve_policies,
-                                  _row_l2, _split_round_key,
+                                  _row_l2, _split_round_key, _wire_feedback,
                                   make_cohort_compute, make_store_compute,
                                   make_store_selection)
 from repro.core.hetero import HeteroModel, arrival_stream
@@ -202,6 +202,20 @@ class AsyncRoundRunner:
         self.schedule = strategy.sampling
         self.smp = strategy.sampler
         self.cfg = strategy.federated_config(num_clients)
+        # FedDyn drift rides the store on BOTH backends (dense included) so
+        # run_round's signature stays drift-free; commits go through
+        # store.scatter(..., tree="drift") with the applied-rows mask.
+        self._uses_drift = self.cfg.client.objective.uses_drift
+        if self._uses_drift:
+            if store is None:
+                raise ValueError(
+                    f"strategy {strategy.name!r} carries FedDyn drift "
+                    "state; the async engine needs a ClientStateStore "
+                    "built with extra_trees={'drift': ...}")
+            if "drift" not in store.trees:
+                raise ValueError(
+                    "async engine with a FedDyn objective requires the "
+                    "store to hold a 'drift' tree (extra_trees=)")
         # The clock/fault traits: an explicit fleet, or ideal (instant
         # arrivals, no drops) when the strategy has no hetero model.  The
         # ROUND KEY split still mirrors the sync engine's, which branches
@@ -326,8 +340,7 @@ class AsyncRoundRunner:
         ``payload`` — what the server actually saw."""
         if self.cfg.error_feedback:
             if self._wire_feedback:
-                new_res = jax.tree.map(
-                    lambda r, u, w: r + (u - w), new_res, uploads, wired)
+                new_res = _wire_feedback(new_res, uploads, wired)
 
             def scatter(old, new, old_cohort):
                 am = applied_c.reshape((-1,) + (1,) * (new.ndim - 1))
@@ -351,8 +364,7 @@ class AsyncRoundRunner:
         job — this just finalizes the residual candidate rows (wire-loss
         feedback folded in) and the cohort's norm-EMA rows."""
         if self.cfg.error_feedback and self._wire_feedback:
-            new_res = jax.tree.map(
-                lambda r, u, w: r + (u - w), new_res, uploads, wired)
+            new_res = _wire_feedback(new_res, uploads, wired)
         norm_upd = None
         if self.smp.adaptive:
             obs = _row_l2(payload)
@@ -401,12 +413,15 @@ class AsyncRoundRunner:
             part_dev, weights_dev, ids_dev = sel(*sel_args)
             ids_np = np.asarray(ids_dev)
             cohort_res = self.store.gather(ids_np)
+            cohort_drift = (self.store.gather(ids_np, tree="drift")
+                            if self._uses_drift else None)
             if callable(client_batches):
                 cohort_batches = client_batches(ids_np)
             else:
                 cohort_batches = jax.tree.map(
                     lambda x: jnp.take(x, ids_dev, axis=0), client_batches)
-            cargs = (params, cohort_res, cohort_batches, ids_dev, mask_key)
+            cargs = (params, cohort_res, cohort_batches, ids_dev, mask_key,
+                     cohort_drift)
             comp, dt = self._aot("store-compute", self._store_compute_fn(),
                                  cargs)
             compile_s += dt
@@ -414,8 +429,11 @@ class AsyncRoundRunner:
             out.update(part=part_dev, weights=weights_dev,
                        cohort_ids=ids_dev, cohort_res=cohort_res)
         else:
-            compute_args = (params, residuals, norms, client_batches,
-                            n_samples, t_arr, sample_key, mask_key)
+            drift_dense = (self.store.dense_view("drift")
+                           if self._uses_drift else None)
+            compute_args = (params, residuals, drift_dense, norms,
+                            client_batches, n_samples, t_arr, sample_key,
+                            mask_key)
             compute, dt = self._aot(("compute", cohort_size),
                                     self._compute_fn(cohort_size),
                                     compute_args)
@@ -527,11 +545,14 @@ class AsyncRoundRunner:
                         out["new_res"], out["uploads"], wired)
                 else:
                     res_row = jax.tree.map(lambda x: x[row], out["new_res"])
+            drift_row = None
+            if self._uses_drift:
+                drift_row = jax.tree.map(lambda x: x[row], out["new_drift"])
             return {"cid": int(cid), "w": float(base_w[row]),
                     "finite": float(finite_c[row]), "round": int(t),
                     "lateness": float(lateness),
                     "payload": jax.tree.map(lambda x: x[row], payload),
-                    "res": res_row}
+                    "res": res_row, "drift": drift_row}
 
         def do_flush():
             """Aggregate the current buffer at the current staleness:
@@ -675,6 +696,13 @@ class AsyncRoundRunner:
             compile_s += dt
             residuals, norms = close(*close_args)
 
+        if self._uses_drift:
+            # Drift commits through the store on BOTH backends: the same
+            # commit-masked where→set the sync engines run in-program, so
+            # run_round's signature stays drift-free.
+            self.store.scatter(cohort_ids, out["new_drift"], applied_rows,
+                               t, tree="drift")
+
         # Late commits for carried uploads applied this round: EF residual
         # and norm EMA advance at APPLY time.  Their owners were not
         # redispatched this round (supersession dropped those), so these
@@ -691,6 +719,11 @@ class AsyncRoundRunner:
                     residuals = jax.tree.map(
                         lambda old, r: old.at[cid].set(r),
                         residuals, e["res"])
+            if self._uses_drift and e.get("drift") is not None:
+                self.store.scatter(
+                    np.asarray([cid]),
+                    jax.tree.map(lambda x: x[None], e["drift"]),
+                    np.ones((1,), np.float32), t, tree="drift")
             if self.smp.adaptive:
                 obs = _row_l2(
                     jax.tree.map(lambda x: x[None], e["payload"]))[0]

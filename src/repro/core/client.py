@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.masking import MaskingConfig, mask_pytree
+from repro.core.objectives import LocalObjective
 
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jnp.ndarray]
@@ -42,14 +43,16 @@ __all__ = ["ClientConfig", "local_sgd", "client_update",
 @dataclasses.dataclass(frozen=True)
 class ClientConfig:
     """Per-client hyperparameters: local SGD (epochs, lr, momentum), the
-    mask policy applied to the delta, and the upload semantics
-    ("delta" | "zero"; see module docstring)."""
+    mask policy applied to the delta, the upload semantics
+    ("delta" | "zero"; see module docstring), and the local objective
+    (none / FedProx / FedDyn — ``repro.core.objectives``)."""
 
     local_epochs: int = 1
     learning_rate: float = 0.01
     momentum: float = 0.0
     masking: MaskingConfig = MaskingConfig()
     upload: str = "delta"  # delta | zero
+    objective: LocalObjective = LocalObjective()
 
 
 def local_sgd(loss_fn: LossFn, params: PyTree, batches: Any,
@@ -84,17 +87,26 @@ def local_sgd(loss_fn: LossFn, params: PyTree, batches: Any,
 def client_update(loss_fn: LossFn, global_params: PyTree, batches: Any,
                   mask_key: jax.Array, cfg: ClientConfig,
                   residual: PyTree | None = None,
-                  ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+                  drift: PyTree | None = None,
+                  ) -> Tuple[PyTree, PyTree, PyTree | None, jnp.ndarray]:
     """One full client round: local SGD -> delta -> (error feedback) -> mask.
 
-    Returns ``(upload, new_residual, mean_loss)`` where ``upload`` is the
-    masked delta ("delta" semantics) or the masked local weights ("zero").
-    ``residual`` enables beyond-paper error feedback: masked-out mass is
-    accumulated locally and re-added next round (pass None to disable, which
-    is the paper-faithful path).
+    Returns ``(upload, new_residual, new_drift, mean_loss)`` where
+    ``upload`` is the masked delta ("delta" semantics) or the masked local
+    weights ("zero").  ``residual`` enables beyond-paper error feedback:
+    masked-out mass is accumulated locally and re-added next round (pass
+    None to disable, which is the paper-faithful path).  ``drift`` is the
+    client's FedDyn ``h_k`` state (required iff
+    ``cfg.objective.uses_drift``); ``new_drift`` is the post-round
+    ``h_k − alpha·delta`` update computed on the HONEST pre-mask delta, or
+    None when the objective carries no drift.
     """
-    local_params, mean_loss = local_sgd(loss_fn, global_params, batches, cfg)
+    obj = cfg.objective
+    local_loss = obj.localize(loss_fn, global_params, drift)
+    local_params, mean_loss = local_sgd(local_loss, global_params, batches,
+                                        cfg)
     delta = jax.tree.map(lambda a, b: a - b, local_params, global_params)
+    new_drift = obj.update_drift(drift, delta)
 
     if residual is not None:
         delta = jax.tree.map(lambda d, r: d + r, delta, residual)
@@ -123,27 +135,34 @@ def client_update(loss_fn: LossFn, global_params: PyTree, batches: Any,
                 global_params, delta, keep)
     else:
         raise ValueError(f"unknown upload semantics {cfg.upload!r}")
-    return upload, new_residual, mean_loss
+    return upload, new_residual, new_drift, mean_loss
 
 
 def stacked_client_update(loss_fn: LossFn, global_params: PyTree,
                           stacked_batches: Any, mask_keys: jax.Array,
                           cfg: ClientConfig, stacked_residuals: PyTree,
                           error_feedback: bool,
-                          ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+                          stacked_drift: PyTree | None = None,
+                          ) -> Tuple[PyTree, PyTree, PyTree | None,
+                                     jnp.ndarray]:
     """``client_update`` vmapped over a leading client axis.
 
     The axis may be the full registered population (oracle round) or a
     padded cohort buffer (cohort engine, DESIGN.md §3.5) — the per-client
     math is identical, which is what the cohort/oracle equivalence tests
-    rely on.  Returns stacked ``(uploads, new_residuals, losses)``.
+    rely on.  ``stacked_drift`` carries the FedDyn per-client drift rows
+    (None unless ``cfg.objective.uses_drift``).  Returns stacked
+    ``(uploads, new_residuals, new_drift, losses)`` with ``new_drift``
+    None when the objective carries no drift.
     """
 
-    def one_client(batches, k, res):
+    def one_client(batches, k, res, dr):
         res_arg = res if error_feedback else None
-        return client_update(loss_fn, global_params, batches, k, cfg, res_arg)
+        return client_update(loss_fn, global_params, batches, k, cfg,
+                             res_arg, dr)
 
-    return jax.vmap(one_client)(stacked_batches, mask_keys, stacked_residuals)
+    return jax.vmap(one_client)(stacked_batches, mask_keys,
+                                stacked_residuals, stacked_drift)
 
 
 def local_update_flops(stacked_batches: Any, num_params: int,

@@ -28,12 +28,23 @@ This module makes the state-ownership layer a pluggable subsystem
   mass (a safe degradation for error feedback: the residual is a
   correction, not required state).
 
-Equivalence contract (property-tested in ``tests/test_client_store.py``):
-as long as no eviction occurs (``retention`` covers every client that has
-ever committed), a run on a ``ShardedStore`` is bit-identical to the same
-run on a ``DenseStore`` — params, EF residuals and norm EMAs — under
-every strategy preset in the registry.  Eviction is the documented
+Equivalence contract (property-tested in ``tests/test_client_store.py``
+and the cross-engine matrix in ``tests/test_equivalence.py``): as long as
+no eviction occurs (``retention`` covers every client that has ever
+committed), a run on a ``ShardedStore`` is bit-identical to the same run
+on a ``DenseStore`` — params, EF residuals, norm EMAs and FedDyn drift —
+under every strategy preset in the registry.  Eviction is the documented
 divergence point.
+
+**Named state trees** (DESIGN.md §12): the store holds a *dict* of
+per-client state trees sharing one layout — ``"residuals"`` always, plus
+any ``extra_trees`` (the FedDyn drift vector ``"drift"`` is the first).
+On the sharded backend every tree shares ONE slot directory: a client owns
+one slot across all trees, commits to any tree refresh the same LRU clock,
+and eviction forgets *all* of a client's trees at once (a newly assigned
+slot is zeroed across every tree before the committing tree writes), so
+evict-to-zero extends per-tree and dense-vs-sharded stays bit-exact
+tree-by-tree.
 
 The O(M) vectors are the only state that must exist for all M clients;
 :meth:`ClientStateStore.shard_over` places them (and the sharded slot
@@ -43,7 +54,7 @@ they distribute at pod scale (``launch/shardings.py`` conventions).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,12 +95,27 @@ class ClientStateStore:
     kind: str = "abstract"
 
     def __init__(self, num_clients: int, template: PyTree,
-                 track_norms: bool = False):
+                 track_norms: bool = False,
+                 extra_trees: Optional[Dict[str, PyTree]] = None):
         if num_clients < 1:
             raise ValueError(f"num_clients must be >= 1, got {num_clients}")
         self.num_clients = int(num_clients)
-        self.template = jax.tree.map(
-            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), template)
+
+        def spec(tree):
+            return jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree)
+
+        # Named per-client state trees: "residuals" always exists; extras
+        # (e.g. the FedDyn "drift" tree) share the same per-client layout
+        # discipline.  ``self.template`` stays the residuals spec for
+        # backward compatibility.
+        self.templates: Dict[str, PyTree] = {"residuals": spec(template)}
+        for name, tmpl in (extra_trees or {}).items():
+            if name == "residuals":
+                raise ValueError(
+                    "extra_trees may not shadow the 'residuals' tree")
+            self.templates[name] = spec(tmpl)
+        self.template = self.templates["residuals"]
         self._norms: Optional[jnp.ndarray] = (
             jnp.ones((num_clients,), jnp.float32) if track_norms else None)
         # Model-version vector: the round number of the Θ each client last
@@ -97,24 +123,42 @@ class ClientStateStore:
         # engine's staleness math consumes it between device dispatches.
         self.versions = np.zeros((num_clients,), np.int64)
 
-    # ---- residual rows ---------------------------------------------------
-    def gather(self, ids) -> PyTree:
-        """Stacked residual rows for ``ids`` (zeros where unknown)."""
+    # ---- named state trees -----------------------------------------------
+    @property
+    def trees(self) -> Tuple[str, ...]:
+        """Names of the per-client state trees this store holds."""
+        return tuple(self.templates)
+
+    def _check_tree(self, tree: str) -> str:
+        if tree not in self.templates:
+            raise KeyError(
+                f"store holds no state tree {tree!r}; trees: "
+                f"{', '.join(self.templates)}")
+        return tree
+
+    # ---- state rows --------------------------------------------------------
+    def gather(self, ids, tree: str = "residuals") -> PyTree:
+        """Stacked ``tree`` rows for ``ids`` (zeros where unknown)."""
         raise NotImplementedError
 
-    def scatter(self, ids, rows: PyTree, commit, round: int) -> None:
+    def scatter(self, ids, rows: PyTree, commit, round: int,
+                tree: str = "residuals") -> None:
         """Write back ``rows[i]`` for every i with ``commit[i] > 0``.
 
         Rows with ``commit[i] == 0`` are untouched (the client's upload
-        was dropped / quarantined / timed out, so its residual must stay
+        was dropped / quarantined / timed out, so its state must stay
         consistent with the model it will re-download)."""
         raise NotImplementedError
 
-    def residuals_dense(self) -> PyTree:
-        """The full ``(M, …)`` stacked residuals.  O(M × model) memory —
-        the representation this subsystem exists to avoid; kept for the
-        oracle engine, small-M tests and debugging."""
+    def dense_view(self, tree: str = "residuals") -> PyTree:
+        """The full ``(M, …)`` stacked view of one state tree.
+        O(M × model) memory — the representation this subsystem exists to
+        avoid; kept for the oracle engine, small-M tests and debugging."""
         raise NotImplementedError
+
+    def residuals_dense(self) -> PyTree:
+        """``dense_view("residuals")`` (historical name)."""
+        return self.dense_view("residuals")
 
     # ---- compact (M,) vectors --------------------------------------------
     @property
@@ -158,9 +202,10 @@ class ClientStateStore:
         raise NotImplementedError
 
     def memory_bytes(self) -> Dict[str, int]:
-        """Exact client-state footprint: residual backing, O(M) vectors,
-        and what a dense ``(M, …)`` store would cost for comparison."""
-        client = _per_client_bytes(self.template)
+        """Exact client-state footprint: state-tree backing, O(M) vectors,
+        and what a dense ``(M, …)`` store would cost for comparison.
+        All named trees are summed (residuals + drift + …)."""
+        client = sum(_per_client_bytes(t) for t in self.templates.values())
         vectors = int(self.versions.nbytes)
         if self._norms is not None:
             vectors += int(np.dtype(np.float32).itemsize * self.num_clients)
@@ -194,9 +239,9 @@ class ClientStateStore:
             return jax.device_put(v, NamedSharding(mesh, P(axes)))
 
         self._norms = put_vec(self._norms)
-        self._shard_backing(put_vec)
+        self._shard_backing(put_vec, mesh, axes, size)
 
-    def _shard_backing(self, put_vec) -> None:
+    def _shard_backing(self, put_vec, mesh, axes, size) -> None:
         """Backend hook for :meth:`shard_over` (vectors already placed)."""
 
 
@@ -214,22 +259,37 @@ class DenseStore(ClientStateStore):
     kind = "dense"
 
     def __init__(self, num_clients: int, template: PyTree,
-                 track_norms: bool = False):
-        super().__init__(num_clients, template, track_norms)
-        self.residuals = jax.tree.map(
-            lambda p: jnp.zeros((num_clients,) + tuple(p.shape), p.dtype),
-            template)
+                 track_norms: bool = False,
+                 extra_trees: Optional[Dict[str, PyTree]] = None):
+        super().__init__(num_clients, template, track_norms, extra_trees)
+        self._data: Dict[str, PyTree] = {
+            name: jax.tree.map(
+                lambda p: jnp.zeros((num_clients,) + tuple(p.shape),
+                                    p.dtype),
+                spec)
+            for name, spec in self.templates.items()}
 
-    def gather(self, ids) -> PyTree:
+    @property
+    def residuals(self) -> PyTree:
+        """The stacked residual backing (historical attribute name)."""
+        return self._data["residuals"]
+
+    @residuals.setter
+    def residuals(self, value: PyTree) -> None:
+        self._data["residuals"] = value
+
+    def gather(self, ids, tree: str = "residuals") -> PyTree:
         """``jnp.take`` of the stacked rows (exact op the engines used)."""
         idx = jnp.asarray(_ids_array(ids))
         return jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
-                            self.residuals)
+                            self._data[self._check_tree(tree)])
 
-    def scatter(self, ids, rows: PyTree, commit, round: int) -> None:
+    def scatter(self, ids, rows: PyTree, commit, round: int,
+                tree: str = "residuals") -> None:
         """Commit-masked row write-back, identical math to the in-program
         scatter of ``make_cohort_round`` (gather old rows, ``where`` on
         the commit mask, one ``.at[ids].set``)."""
+        tree = self._check_tree(tree)
         idx = jnp.asarray(_ids_array(ids))
         commit = jnp.asarray(commit, jnp.float32)
 
@@ -238,40 +298,49 @@ class DenseStore(ClientStateStore):
             old_rows = jnp.take(old, idx, axis=0)
             return old.at[idx].set(jnp.where(keep > 0, new, old_rows))
 
-        self.residuals = jax.tree.map(put, self.residuals, rows)
+        self._data[tree] = jax.tree.map(put, self._data[tree], rows)
 
-    def residuals_dense(self) -> PyTree:
+    def dense_view(self, tree: str = "residuals") -> PyTree:
         """The backing arrays themselves (no copy)."""
-        return self.residuals
+        return self._data[self._check_tree(tree)]
 
-    def set_dense(self, residuals: PyTree) -> None:
-        """Replace the whole stacked array — the dense engines' fast path
+    def set_dense(self, value: PyTree, tree: str = "residuals") -> None:
+        """Replace a whole stacked tree — the dense engines' fast path
         (their round programs already did gather/scatter in-program)."""
-        self.residuals = residuals
+        self._data[self._check_tree(tree)] = value
 
     def state(self) -> Dict[str, Any]:
-        """Checkpoint tree: stacked residuals + versions (+ norms)."""
+        """Checkpoint tree: stacked residuals + versions (+ norms); extra
+        state trees checkpoint under their own name (e.g. ``"drift"``)."""
         tree: Dict[str, Any] = {
-            "residuals": self.residuals,
+            "residuals": self._data["residuals"],
             "versions": jnp.asarray(self.versions),
         }
+        for name in self.templates:
+            if name != "residuals":
+                tree[name] = self._data[name]
         if self._norms is not None:
             tree["norms"] = self._norms
         return tree
 
     def load_state(self, tree: Dict[str, Any]) -> None:
         """Restore the checkpoint tree written by :meth:`state`."""
-        self.residuals = tree["residuals"]
+        self._data["residuals"] = tree["residuals"]
+        for name in self.templates:
+            if name != "residuals":
+                self._data[name] = tree[name]
         self.versions = np.asarray(tree["versions"], np.int64).copy()
         if self._norms is not None:
             self._norms = jnp.asarray(tree["norms"], jnp.float32)
 
     def _residual_backing_bytes(self) -> int:
-        return int(sum(leaf.nbytes for leaf in
-                       jax.tree_util.tree_leaves(self.residuals)))
+        return int(sum(leaf.nbytes
+                       for data in self._data.values()
+                       for leaf in jax.tree_util.tree_leaves(data)))
 
-    def _shard_backing(self, put_vec) -> None:
-        self.residuals = jax.tree.map(put_vec, self.residuals)
+    def _shard_backing(self, put_vec, mesh, axes, size) -> None:
+        self._data = {name: jax.tree.map(put_vec, data)
+                      for name, data in self._data.items()}
 
 
 class ShardedStore(ClientStateStore):
@@ -300,23 +369,38 @@ class ShardedStore(ClientStateStore):
     kind = "sharded"
 
     def __init__(self, num_clients: int, template: PyTree,
-                 retention: int, track_norms: bool = False):
-        super().__init__(num_clients, template, track_norms)
+                 retention: int, track_norms: bool = False,
+                 extra_trees: Optional[Dict[str, PyTree]] = None):
+        super().__init__(num_clients, template, track_norms, extra_trees)
         if not 0 < retention <= num_clients:
             raise ValueError(
                 f"retention must be in (0, num_clients={num_clients}], "
                 f"got {retention}")
         self.retention = int(retention)
-        self.slots = jax.tree.map(
-            lambda p: jnp.zeros((self.retention + 1,) + tuple(p.shape),
-                                p.dtype),
-            template)
-        # Host-side slot directory: owner id per slot (-1 = free), the
-        # round its owner last committed (LRU key), and the id -> slot map.
+        self._pools: Dict[str, PyTree] = {
+            name: jax.tree.map(
+                lambda p: jnp.zeros((self.retention + 1,) + tuple(p.shape),
+                                    p.dtype),
+                spec)
+            for name, spec in self.templates.items()}
+        # Host-side slot directory — SHARED across every state tree: a
+        # client owns one slot for all its trees, so eviction forgets a
+        # client's residuals and drift together.  Owner id per slot
+        # (-1 = free), the round its owner last committed (LRU key), and
+        # the id -> slot map.
         self._slot_ids = np.full((self.retention,), -1, np.int64)
         self._slot_round = np.zeros((self.retention,), np.int64)
         self._slot_of: Dict[int, int] = {}
         self.evictions = 0
+
+    @property
+    def slots(self) -> PyTree:
+        """The residual slot pool (historical attribute name)."""
+        return self._pools["residuals"]
+
+    @slots.setter
+    def slots(self, value: PyTree) -> None:
+        self._pools["residuals"] = value
 
     # ---- slot bookkeeping -------------------------------------------------
     def _slot_index(self, ids: np.ndarray) -> np.ndarray:
@@ -324,9 +408,15 @@ class ShardedStore(ClientStateStore):
         return np.asarray([self._slot_of.get(int(i), self.retention)
                            for i in ids], np.int64)
 
-    def _assign_slots(self, cids: np.ndarray, round: int) -> np.ndarray:
+    def _assign_slots(self, cids: np.ndarray,
+                      round: int) -> Tuple[np.ndarray, np.ndarray]:
         """Slots for this round's committing clients, evicting LRU owners
-        as needed.  Raises if the commit set exceeds the window."""
+        as needed.  Raises if the commit set exceeds the window.  Returns
+        ``(assigned, fresh)``: the slot per client, and the subset of
+        slots newly taken over this call (free or evicted) — those must be
+        zeroed across EVERY state tree before any tree writes, or a
+        reassigned slot's other-tree rows would leak the evicted client's
+        state."""
         if len(cids) > self.retention:
             raise ValueError(
                 f"round {round} commits {len(cids)} clients but the "
@@ -342,6 +432,7 @@ class ShardedStore(ClientStateStore):
                 pinned.add(slot)
             else:
                 misses.append(i)
+        fresh = []
         if misses:
             free = [s for s in range(self.retention)
                     if self._slot_ids[s] < 0]
@@ -359,41 +450,53 @@ class ShardedStore(ClientStateStore):
                     self.evictions += 1
                 assigned[i] = slot
                 pinned.add(slot)
+                fresh.append(slot)
         for i, cid in enumerate(cids):
             slot = int(assigned[i])
             self._slot_of[int(cid)] = slot
             self._slot_ids[slot] = int(cid)
             self._slot_round[slot] = int(round)
-        return assigned
+        return assigned, np.asarray(fresh, np.int64)
 
     # ---- ClientStateStore API ---------------------------------------------
-    def gather(self, ids) -> PyTree:
+    def gather(self, ids, tree: str = "residuals") -> PyTree:
         """One ``jnp.take`` per leaf; misses read the zero sentinel row."""
         idx = jnp.asarray(self._slot_index(_ids_array(ids)))
-        return jax.tree.map(lambda s: jnp.take(s, idx, axis=0), self.slots)
+        return jax.tree.map(lambda s: jnp.take(s, idx, axis=0),
+                            self._pools[self._check_tree(tree)])
 
-    def scatter(self, ids, rows: PyTree, commit, round: int) -> None:
+    def scatter(self, ids, rows: PyTree, commit, round: int,
+                tree: str = "residuals") -> None:
         """Write committed rows into their (possibly newly-evicted) slots.
 
         Only the ``commit > 0`` subset touches the pool: uncommitted rows
         neither allocate slots nor refresh the LRU clock, so a client that
         was merely *sampled* (dropped, quarantined, padded) costs no
-        retention."""
+        retention.  A newly assigned slot (free or evicted) is first
+        zeroed across EVERY state tree — evict-to-zero must forget all of
+        the previous owner's trees, not just the one committing now."""
+        tree = self._check_tree(tree)
         ids = _ids_array(ids)
         commit = np.asarray(commit)
         pos = np.flatnonzero(commit > 0)
         if pos.size == 0:
             return
-        slot_idx = self._assign_slots(ids[pos], round)
+        slot_idx, fresh = self._assign_slots(ids[pos], round)
+        if fresh.size:
+            fresh_dev = jnp.asarray(fresh)
+            for name, pool in self._pools.items():
+                self._pools[name] = jax.tree.map(
+                    lambda s: s.at[fresh_dev].set(0), pool)
         pos_dev = jnp.asarray(pos)
         slot_dev = jnp.asarray(slot_idx)
-        self.slots = jax.tree.map(
+        self._pools[tree] = jax.tree.map(
             lambda s, r: s.at[slot_dev].set(jnp.take(r, pos_dev, axis=0)),
-            self.slots, rows)
+            self._pools[tree], rows)
 
-    def residuals_dense(self) -> PyTree:
+    def dense_view(self, tree: str = "residuals") -> PyTree:
         """Materialize the full ``(M, …)`` view — zeros except occupied
         slots.  O(M × model): test/debug only, never on the hot path."""
+        tree = self._check_tree(tree)
         occupied = np.flatnonzero(self._slot_ids >= 0)
         owner = jnp.asarray(self._slot_ids[occupied])
         slot = jnp.asarray(occupied)
@@ -405,25 +508,34 @@ class ShardedStore(ClientStateStore):
                 return out
             return out.at[owner].set(jnp.take(s, slot, axis=0))
 
-        return jax.tree.map(densify, self.slots, self.template)
+        return jax.tree.map(densify, self._pools[tree],
+                            self.templates[tree])
 
     def state(self) -> Dict[str, Any]:
-        """Checkpoint tree: slot pool + slot directory + versions (+
+        """Checkpoint tree: slot pools + slot directory + versions (+
         norms) — all static shapes, so the checkpoint layer's structure
-        validation works unchanged."""
+        validation works unchanged.  The residual pool keeps its
+        historical ``"slots"`` key; extra trees checkpoint under
+        ``"slots_<name>"`` (e.g. ``"slots_drift"``)."""
         tree: Dict[str, Any] = {
-            "slots": self.slots,
+            "slots": self._pools["residuals"],
             "slot_ids": jnp.asarray(self._slot_ids),
             "slot_round": jnp.asarray(self._slot_round),
             "versions": jnp.asarray(self.versions),
         }
+        for name in self.templates:
+            if name != "residuals":
+                tree[f"slots_{name}"] = self._pools[name]
         if self._norms is not None:
             tree["norms"] = self._norms
         return tree
 
     def load_state(self, tree: Dict[str, Any]) -> None:
         """Restore :meth:`state` and rebuild the host slot directory."""
-        self.slots = tree["slots"]
+        self._pools["residuals"] = tree["slots"]
+        for name in self.templates:
+            if name != "residuals":
+                self._pools[name] = tree[f"slots_{name}"]
         self._slot_ids = np.asarray(tree["slot_ids"], np.int64).copy()
         self._slot_round = np.asarray(tree["slot_round"], np.int64).copy()
         self.versions = np.asarray(tree["versions"], np.int64).copy()
@@ -442,38 +554,55 @@ class ShardedStore(ClientStateStore):
         return out
 
     def _residual_backing_bytes(self) -> int:
-        return int(sum(leaf.nbytes for leaf in
-                       jax.tree_util.tree_leaves(self.slots)))
+        return int(sum(leaf.nbytes
+                       for pool in self._pools.values()
+                       for leaf in jax.tree_util.tree_leaves(pool)))
 
-    def _shard_backing(self, put_vec) -> None:
+    def _shard_backing(self, put_vec, mesh, axes, size) -> None:
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        # The slot axis is the sharded store's "client" axis; reuse the
-        # same divisibility-or-replicate rule via a leading-dim put.
-        def put_slots(s):
-            probe = put_vec(jnp.zeros((s.shape[0],), jnp.float32))
-            sharding = getattr(probe, "sharding", None)
-            if sharding is None or not isinstance(sharding, NamedSharding):
-                return s
-            spec = sharding.spec
-            return jax.device_put(
-                s, NamedSharding(sharding.mesh,
-                                 P(spec[0], *([None] * (s.ndim - 1)))))
+        # The slot axis is the sharded store's "client" axis.  The pool has
+        # ``retention + 1`` rows (the zero sentinel), which almost never
+        # divides the data-axis product, so instead of the
+        # divisibility-or-replicate fallback the pool is zero-padded up to
+        # the next multiple of the axis size and the PADDED row axis is
+        # sharded.  The pad rows sit beyond the sentinel index and are
+        # never addressed by gather/scatter/dense_view; a checkpoint taken
+        # after ``shard_over`` carries the padded pool shape.
+        if size <= 1 or not axes:
+            return
+        rows = self.retention + 1
+        padded = -(-rows // size) * size
 
-        self.slots = jax.tree.map(put_slots, self.slots)
+        def put_slots(s):
+            if padded != rows:
+                pad = jnp.zeros((padded - rows,) + tuple(s.shape[1:]),
+                                s.dtype)
+                s = jnp.concatenate([s, pad], axis=0)
+            return jax.device_put(
+                s, NamedSharding(mesh, P(axes, *([None] * (s.ndim - 1)))))
+
+        self._pools = {name: jax.tree.map(put_slots, pool)
+                       for name, pool in self._pools.items()}
 
 
 def make_store(kind: str, num_clients: int, template: PyTree, *,
                retention: int | None = None,
-               track_norms: bool = False) -> ClientStateStore:
+               track_norms: bool = False,
+               extra_trees: Optional[Dict[str, PyTree]] = None,
+               ) -> ClientStateStore:
     """Build a store backend by name: ``"dense"`` (the oracle) or
-    ``"sharded"`` (requires ``retention``, the client-slot window)."""
+    ``"sharded"`` (requires ``retention``, the client-slot window).
+    ``extra_trees`` adds named per-client state trees next to the
+    residuals (e.g. ``{"drift": params_template}`` for FedDyn)."""
     if kind == "dense":
-        return DenseStore(num_clients, template, track_norms=track_norms)
+        return DenseStore(num_clients, template, track_norms=track_norms,
+                          extra_trees=extra_trees)
     if kind == "sharded":
         if retention is None:
             raise ValueError("sharded store requires retention= (the "
                              "client-slot window)")
         return ShardedStore(num_clients, template, retention,
-                            track_norms=track_norms)
+                            track_norms=track_norms,
+                            extra_trees=extra_trees)
     raise ValueError(f"unknown store kind {kind!r}; use 'dense' | 'sharded'")

@@ -331,7 +331,14 @@ def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
     x = _as_array(x, "quantize_int8 input")
     if not jnp.issubdtype(x.dtype, jnp.floating):
         raise ValueError(f"quantize_int8 expects a float tensor, got {x.dtype}")
-    scale = jnp.max(jnp.abs(x)) / 127.0
+    # Explicit multiply-by-reciprocal, NOT ``/ 127.0``: XLA strength-reduces
+    # constant divisions to reciprocal multiplies in some program shapes but
+    # not others, and the ±1 ulp wobble in ``scale`` breaks the cross-engine
+    # bit-exactness contract (tests/test_equivalence.py).  Writing the
+    # multiply ourselves makes every compiled form — and the Pallas wire
+    # kernel (repro/kernels/ops.py), which mirrors this constant — compute
+    # the same bits.
+    scale = jnp.max(jnp.abs(x)) * jnp.float32(1.0 / 127.0)
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return {"q": q, "scale": scale.astype(jnp.float32)}

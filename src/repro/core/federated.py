@@ -243,6 +243,85 @@ def _apply_dropout(part, weights, drop, drop_key, normalize):
     return arrived, weights * arrived / jnp.maximum(1.0 - drop, 1e-6)
 
 
+def _commit_rows(old: PyTree, new: PyTree, commit: jnp.ndarray) -> PyTree:
+    """Per-row state commit: keep ``new[i]`` where ``commit[i] > 0``, else
+    the round-entry ``old[i]`` — the same ``where`` every engine's EF
+    scatter runs, shared so the drift tree commits identically."""
+    return jax.tree.map(
+        lambda o, n: jnp.where(
+            commit.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o),
+        old, new)
+
+
+def _wire_feedback(new_res: PyTree, uploads: PyTree, wired: PyTree) -> PyTree:
+    """EF wire-loss feedback ``r + (u − w)``, identical bits on EVERY
+    execution form.
+
+    ``wired`` is pinned through a float->int->float bitcast round-trip
+    first: without it the backend may contract a lossy codec's
+    dequantisation multiply into the subtraction (an FMA computing
+    ``u − q·scale`` in one rounding) in one compiled program but not
+    another, and the resulting ±1 ulp wobble breaks the cross-engine
+    bit-exactness contract (caught by the store-form body in
+    tests/test_equivalence.py).  A bitcast is used rather than
+    ``jax.lax.optimization_barrier`` because XLA:CPU deletes barriers
+    during optimization; contraction cannot cross an integer bitcast."""
+    def pin(w):
+        if not jnp.issubdtype(w.dtype, jnp.floating):
+            return w
+        bits = jnp.dtype(w.dtype).itemsize * 8
+        return jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(w, jnp.dtype(f"uint{bits}")),
+            w.dtype)
+
+    wired = jax.tree.map(pin, wired)
+    return jax.tree.map(lambda r, u, w: r + (u - w), new_res, uploads, wired)
+
+
+def _wrap_plain(round_impl, uses_drift: bool):
+    """Adapt the plain round body ``(params, residuals, drift, batches,
+    n_samples, t, key) -> (p, r, d, metrics)`` to its public signature:
+    the drift slot appears (after ``residuals``) only when the objective
+    carries drift state."""
+    if uses_drift:
+        return round_impl
+
+    def round_fn(params, residuals, client_batches, n_samples, t, key):
+        p, r, _, m = round_impl(params, residuals, None, client_batches,
+                                n_samples, t, key)
+        return p, r, m
+
+    return round_fn
+
+
+def _wrap_round(round_impl, uses_drift: bool, adaptive: bool):
+    """Adapt the fully-general round body ``(params, residuals, drift,
+    norms, batches, n_samples, t, key) -> (p, r, d, n, metrics)`` to the
+    public signature for this (uses_drift, adaptive) combination.
+    Optional state slots sit between ``residuals`` and the batch args,
+    drift first — the convention every engine and the scan carry share."""
+    if uses_drift and adaptive:
+        return round_impl
+    if uses_drift:
+        def round_fn(params, residuals, drift, client_batches, n_samples,
+                     t, key):
+            p, r, d, _, m = round_impl(params, residuals, drift, None,
+                                       client_batches, n_samples, t, key)
+            return p, r, d, m
+    elif adaptive:
+        def round_fn(params, residuals, norms, client_batches, n_samples,
+                     t, key):
+            p, r, _, n, m = round_impl(params, residuals, None, norms,
+                                       client_batches, n_samples, t, key)
+            return p, r, n, m
+    else:
+        def round_fn(params, residuals, client_batches, n_samples, t, key):
+            p, r, _, _, m = round_impl(params, residuals, None, None,
+                                       client_batches, n_samples, t, key)
+            return p, r, m
+    return round_fn
+
+
 def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                          cfg: FederatedConfig, *, codec=None, aggregator=None,
                          sampler=None, hetero=None, attack=None):
@@ -252,7 +331,12 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
     -> (params, residuals, metrics)`` — or, when ``sampler.adaptive``,
     ``round_fn(params, residuals, norms, client_batches, n_samples, t, key)
     -> (params, residuals, norms, metrics)`` with ``norms`` the (M,)
-    per-client update-norm tracker the sampler feeds on.
+    per-client update-norm tracker the sampler feeds on.  When the
+    strategy's :class:`~repro.core.objectives.LocalObjective` carries
+    drift state (``cfg.client.objective.uses_drift``, i.e. FedDyn), a
+    stacked ``drift`` argument/result is inserted between ``residuals``
+    and ``norms`` — the full state convention is
+    ``(params, residuals[, drift][, norms], …)``.
 
     ``client_batches``: pytree with leading (num_clients, num_batches, B, ...)
     axes.  ``n_samples``: (num_clients,) float per-client dataset sizes for
@@ -273,17 +357,19 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
     zeroed out instead of poisoning Θ, matching the async engine's gate.
     """
     attack = _active_attack(attack)
+    uses_drift = cfg.client.objective.uses_drift
     if _is_plain(sampler, hetero, attack):
         apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
-        def round_fn(params, residuals, client_batches, n_samples, t, key):
+        def plain_impl(params, residuals, drift, client_batches, n_samples,
+                       t, key):
             sample_key, mask_key = jax.random.split(key)
             part = participation_mask(sample_key, schedule, t, cfg.num_clients)
             mask_keys = jax.random.split(mask_key, cfg.num_clients)
 
-            uploads, new_residuals, losses = stacked_client_update(
+            uploads, new_residuals, new_drift, losses = stacked_client_update(
                 loss_fn, params, client_batches, mask_keys, cfg.client,
-                residuals, cfg.error_feedback)
+                residuals, cfg.error_feedback, drift)
 
             wired = apply_wire(uploads)
             finite = _finite_rows(wired)
@@ -296,21 +382,24 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                     # masked-out mass: feed it back like any other residual so
                     # error feedback compensates for the codec too.  Exact
                     # no-op for bit-exact wires (u - w == 0).
-                    new_residuals = jax.tree.map(
-                        lambda r, u, w: r + (u - w), new_residuals, uploads,
-                        wired)
+                    new_residuals = _wire_feedback(new_residuals, uploads,
+                                                   wired)
                 # Non-participants did not really run this round: keep their
                 # old residual; participants reset to the post-mask remainder.
                 # Quarantined rows count as non-participants (their whole
                 # update was discarded at the server).
-                commit = part * finite
-                new_residuals = jax.tree.map(
-                    lambda old, new: jnp.where(
-                        commit.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
-                        new, old),
-                    residuals, new_residuals)
+                new_residuals = _commit_rows(residuals, new_residuals,
+                                             part * finite)
             else:
                 new_residuals = residuals
+
+            if uses_drift:
+                # Drift advances under the same gate as the residuals (the
+                # upload applied), but independent of error_feedback: h_k
+                # tracks the honest local trajectory, not the wire.
+                new_drift = _commit_rows(drift, new_drift, part * finite)
+            else:
+                new_drift = drift
 
             metrics = {
                 "mean_loss": jnp.sum(losses * part)
@@ -318,9 +407,9 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                 "num_sampled": jnp.sum(part),
                 "quarantined": jnp.sum(part * (1.0 - finite)),
             }
-            return new_params, new_residuals, metrics
+            return new_params, new_residuals, new_drift, metrics
 
-        return round_fn
+        return _wrap_plain(plain_impl, uses_drift)
 
     smp, drop = _round_extras(sampler, hetero, cfg)
     apply_wire, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
@@ -329,8 +418,8 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
         adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
                           jnp.float32)
 
-    def round_impl(params, residuals, norms, client_batches, n_samples, t,
-                   key):
+    def round_impl(params, residuals, drift, norms, client_batches,
+                   n_samples, t, key):
         M = cfg.num_clients
         sample_key, mask_key, drop_key = _split_round_key(
             key, drop is not None)
@@ -338,9 +427,9 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                                    norms)
         mask_keys = jax.random.split(mask_key, M)
 
-        uploads, new_residuals, losses = stacked_client_update(
+        uploads, new_residuals, new_drift, losses = stacked_client_update(
             loss_fn, params, client_batches, mask_keys, cfg.client,
-            residuals, cfg.error_feedback)
+            residuals, cfg.error_feedback, drift)
 
         wired = apply_wire(uploads)
         # What the server decodes: adversary rows perturbed, then the
@@ -356,21 +445,23 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
                             cfg.client.upload)
         if cfg.error_feedback:
             if wired is not uploads:
-                new_residuals = jax.tree.map(
-                    lambda r, u, w: r + (u - w), new_residuals, uploads,
-                    wired)
+                new_residuals = _wire_feedback(new_residuals, uploads,
+                                               wired)
             # Residuals advance only for clients whose upload ARRIVED (and
             # survived quarantine): a dropped upload discards the whole
             # local update, so its residual must stay consistent with the
             # global model the client re-downloads next round.
-            commit = arrived * finite
-            new_residuals = jax.tree.map(
-                lambda old, new: jnp.where(
-                    commit.reshape((-1,) + (1,) * (new.ndim - 1)) > 0,
-                    new, old),
-                residuals, new_residuals)
+            new_residuals = _commit_rows(residuals, new_residuals,
+                                         arrived * finite)
         else:
             new_residuals = residuals
+
+        if uses_drift:
+            # Same arrival gate as the residuals; independent of
+            # error_feedback (drift tracks the honest local trajectory).
+            new_drift = _commit_rows(drift, new_drift, arrived * finite)
+        else:
+            new_drift = drift
 
         new_norms = norms
         if smp.adaptive:
@@ -399,20 +490,9 @@ def make_federated_round(loss_fn: Callable, schedule: SamplingSchedule,
             metrics["part_mask"] = part
             metrics["arrived_mask"] = arrived
             metrics["num_arrived"] = jnp.sum(arrived)
-        return new_params, new_residuals, new_norms, metrics
+        return new_params, new_residuals, new_drift, new_norms, metrics
 
-    if smp.adaptive:
-        def round_fn(params, residuals, norms, client_batches, n_samples, t,
-                     key):
-            return round_impl(params, residuals, norms, client_batches,
-                              n_samples, t, key)
-    else:
-        def round_fn(params, residuals, client_batches, n_samples, t, key):
-            p, r, _, m = round_impl(params, residuals, None, client_batches,
-                                    n_samples, t, key)
-            return p, r, m
-
-    return round_fn
+    return _wrap_round(round_impl, uses_drift, smp.adaptive)
 
 
 # ---------------------------------------------------------------------------
@@ -466,17 +546,18 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
     the identical uploads because the whole sweep is a pure function of
     ``(params, residuals, norms, t, sample_key, mask_key)``.
 
-    Returns ``compute(params, residuals, norms, client_batches, n_samples,
-    t, sample_key, mask_key) -> dict`` with keys ``part`` / ``weights``
-    (full ``(M,)`` selection mask and pre-dropout aggregation weights),
-    ``cohort_ids`` (sorted ascending, padded with the lowest-id
-    non-participants), ``cohort_res`` (round-entry residuals, gathered),
-    ``uploads`` / ``wired`` (pre-/post-wire stacked uploads), ``attacked``
-    (the payload the server decodes: ``wired`` with adversary rows
-    perturbed — the same object when no attack is active), ``new_res``
-    (post-mask residual candidates) and ``losses`` — everything a barrier
-    or a buffer needs to finish the round.  Pass ``norms=None`` for
-    non-adaptive samplers.
+    Returns ``compute(params, residuals, drift, norms, client_batches,
+    n_samples, t, sample_key, mask_key) -> dict`` with keys ``part`` /
+    ``weights`` (full ``(M,)`` selection mask and pre-dropout aggregation
+    weights), ``cohort_ids`` (sorted ascending, padded with the lowest-id
+    non-participants), ``cohort_res`` / ``cohort_drift`` (round-entry
+    state rows, gathered), ``uploads`` / ``wired`` (pre-/post-wire stacked
+    uploads), ``attacked`` (the payload the server decodes: ``wired`` with
+    adversary rows perturbed — the same object when no attack is active),
+    ``new_res`` / ``new_drift`` (post-round state candidates) and
+    ``losses`` — everything a barrier or a buffer needs to finish the
+    round.  Pass ``norms=None`` for non-adaptive samplers and
+    ``drift=None`` unless ``cfg.client.objective.uses_drift``.
     """
     if not (0 < cohort_size <= cfg.num_clients):
         raise ValueError(
@@ -488,8 +569,8 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
         adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
                           jnp.float32)
 
-    def compute(params, residuals, norms, client_batches, n_samples, t,
-                sample_key, mask_key):
+    def compute(params, residuals, drift, norms, client_batches, n_samples,
+                t, sample_key, mask_key):
         M = cfg.num_clients
         # Selection runs on the full (M,) arrays — identical ops to the
         # oracle — then the cohort buffer gathers the sampler's ids.
@@ -504,12 +585,13 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
 
         cohort_batches = jax.tree.map(gather, client_batches)
         cohort_res = jax.tree.map(gather, residuals)
+        cohort_drift = jax.tree.map(gather, drift)  # None stays None
         mask_keys = jnp.take(
             jax.random.split(mask_key, M), cohort_ids, axis=0)
 
-        uploads, new_res, losses = stacked_client_update(
+        uploads, new_res, new_drift, losses = stacked_client_update(
             loss_fn, params, cohort_batches, mask_keys, cfg.client,
-            cohort_res, cfg.error_feedback)
+            cohort_res, cfg.error_feedback, cohort_drift)
 
         wired = roundtrip_stacked(codec, uploads)
         attacked = _attack_payload(attack, wired, adv, mask_key, M,
@@ -519,8 +601,10 @@ def make_cohort_compute(loss_fn: Callable, schedule: SamplingSchedule,
             "weights": weights,
             "cohort_ids": cohort_ids,
             "cohort_res": cohort_res,
+            "cohort_drift": cohort_drift,
             "uploads": uploads,
             "new_res": new_res,
+            "new_drift": new_drift,
             "losses": losses,
             "wired": wired,
             "attacked": attacked,
@@ -551,11 +635,13 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
     attack = _active_attack(attack)
+    uses_drift = cfg.client.objective.uses_drift
 
     if _is_plain(sampler, hetero, attack):
         apply_wire, agg_fn = _resolve_policies(codec, aggregator)
 
-        def round_fn(params, residuals, client_batches, n_samples, t, key):
+        def plain_impl(params, residuals, drift, client_batches, n_samples,
+                       t, key):
             sample_key, mask_key = jax.random.split(key)
             cohort_ids, valid = cohort_select(
                 sample_key, schedule, t, cfg.num_clients, cohort_size)
@@ -565,36 +651,44 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
 
             cohort_batches = jax.tree.map(gather, client_batches)
             cohort_res = jax.tree.map(gather, residuals)
+            cohort_drift = jax.tree.map(gather, drift)
             mask_keys = jnp.take(
                 jax.random.split(mask_key, cfg.num_clients), cohort_ids,
                 axis=0)
 
-            uploads, new_res, losses = stacked_client_update(
+            uploads, new_res, new_drift, losses = stacked_client_update(
                 loss_fn, params, cohort_batches, mask_keys, cfg.client,
-                cohort_res, cfg.error_feedback)
+                cohort_res, cfg.error_feedback, cohort_drift)
 
             wired = apply_wire(uploads)
             finite = _finite_rows(wired)
             weights = valid * jnp.take(n_samples, cohort_ids) * finite
             new_params = agg_fn(params, _zero_rows(wired, finite), weights,
                                 cfg.client.upload)
-            if cfg.error_feedback:
-                if wired is not uploads:
-                    # Same wire-loss feedback as the oracle round (bit-exact
-                    # equivalence holds: both engines adjust identically).
-                    new_res = jax.tree.map(
-                        lambda r, u, w: r + (u - w), new_res, uploads, wired)
 
-                commit = valid * finite
+            def scatter_back(full_old, rows, cohort_old, commit):
                 def scatter(old, new, old_cohort):
                     vm = commit.reshape((-1,) + (1,) * (new.ndim - 1))
                     kept = jnp.where(vm > 0, new, old_cohort)
                     return old.at[cohort_ids].set(kept)
 
-                new_residuals = jax.tree.map(
-                    scatter, residuals, new_res, cohort_res)
+                return jax.tree.map(scatter, full_old, rows, cohort_old)
+
+            if cfg.error_feedback:
+                if wired is not uploads:
+                    # Same wire-loss feedback as the oracle round (bit-exact
+                    # equivalence holds: both engines adjust identically).
+                    new_res = _wire_feedback(new_res, uploads, wired)
+                new_residuals = scatter_back(residuals, new_res, cohort_res,
+                                             valid * finite)
             else:
                 new_residuals = residuals
+
+            if uses_drift:
+                new_drift = scatter_back(drift, new_drift, cohort_drift,
+                                         valid * finite)
+            else:
+                new_drift = drift
 
             metrics = {
                 "mean_loss": jnp.sum(losses * valid)
@@ -602,9 +696,9 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
                 "num_sampled": jnp.sum(valid),
                 "quarantined": jnp.sum(valid * (1.0 - finite)),
             }
-            return new_params, new_residuals, metrics
+            return new_params, new_residuals, new_drift, metrics
 
-        return round_fn
+        return _wrap_plain(plain_impl, uses_drift)
 
     smp, drop = _round_extras(sampler, hetero, cfg)
     _, agg_fn = _resolve_policies(codec, aggregator, smp.normalize)
@@ -615,16 +709,16 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
         adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
                           jnp.float32)
 
-    def round_impl(params, residuals, norms, client_batches, n_samples, t,
-                   key):
+    def round_impl(params, residuals, drift, norms, client_batches,
+                   n_samples, t, key):
         sample_key, mask_key, drop_key = _split_round_key(
             key, drop is not None)
         # The client-side sweep (selection → gather → updates → wire →
         # adversary injection) is the engine-shared compute; everything
         # below is this engine's barrier: dropout draw, quarantine gate,
         # one-shot aggregation, state commit.
-        c = compute(params, residuals, norms, client_batches, n_samples, t,
-                    sample_key, mask_key)
+        c = compute(params, residuals, drift, norms, client_batches,
+                    n_samples, t, sample_key, mask_key)
         part, cohort_ids = c["part"], c["cohort_ids"]
         uploads, new_res, wired = c["uploads"], c["new_res"], c["wired"]
         losses, payload = c["losses"], c["attacked"]
@@ -640,23 +734,30 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
         w_c = gather(weights) * finite
         new_params = agg_fn(params, _zero_rows(payload, finite), w_c,
                             cfg.client.upload)
-        if cfg.error_feedback:
-            # EF feedback stays on the HONEST (uploads, wired) pair — see
-            # the oracle body.
-            if wired is not uploads:
-                new_res = jax.tree.map(
-                    lambda r, u, w: r + (u - w), new_res, uploads, wired)
 
-            commit = arr_c * finite
+        def scatter_back(full_old, rows, cohort_old, commit):
             def scatter(old, new, old_cohort):
                 am = commit.reshape((-1,) + (1,) * (new.ndim - 1))
                 kept = jnp.where(am > 0, new, old_cohort)
                 return old.at[cohort_ids].set(kept)
 
-            new_residuals = jax.tree.map(
-                scatter, residuals, new_res, c["cohort_res"])
+            return jax.tree.map(scatter, full_old, rows, cohort_old)
+
+        if cfg.error_feedback:
+            # EF feedback stays on the HONEST (uploads, wired) pair — see
+            # the oracle body.
+            if wired is not uploads:
+                new_res = _wire_feedback(new_res, uploads, wired)
+            new_residuals = scatter_back(residuals, new_res, c["cohort_res"],
+                                         arr_c * finite)
         else:
             new_residuals = residuals
+
+        if uses_drift:
+            new_drift = scatter_back(drift, c["new_drift"],
+                                     c["cohort_drift"], arr_c * finite)
+        else:
+            new_drift = drift
 
         new_norms = norms
         if smp.adaptive:
@@ -682,20 +783,9 @@ def make_cohort_round(loss_fn: Callable, schedule: SamplingSchedule,
             metrics["part_mask"] = part
             metrics["arrived_mask"] = arrived
             metrics["num_arrived"] = jnp.sum(arrived)
-        return new_params, new_residuals, new_norms, metrics
+        return new_params, new_residuals, new_drift, new_norms, metrics
 
-    if smp.adaptive:
-        def round_fn(params, residuals, norms, client_batches, n_samples, t,
-                     key):
-            return round_impl(params, residuals, norms, client_batches,
-                              n_samples, t, key)
-    else:
-        def round_fn(params, residuals, client_batches, n_samples, t, key):
-            p, r, _, m = round_impl(params, residuals, None, client_batches,
-                                    n_samples, t, key)
-            return p, r, m
-
-    return round_fn
+    return _wrap_round(round_impl, uses_drift, smp.adaptive)
 
 
 def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
@@ -708,10 +798,12 @@ def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
     Returns ``scan_fn(params, residuals, client_batches, n_samples, ts,
     keys) -> (params, residuals, metrics)`` where ``ts``/``keys`` carry a
     leading segment-length axis and ``metrics`` leaves are stacked per
-    round (adaptive samplers add a ``norms`` state argument/result after
-    ``residuals``, threaded through the scan carry).  Bit-identical to
-    calling the single-round function in a Python loop (same round body,
-    scan just removes per-round dispatch)."""
+    round.  Optional state (FedDyn ``drift``, then the adaptive samplers'
+    ``norms``) extends the argument/result lists after ``residuals`` in
+    the engine-wide ``(params, residuals[, drift][, norms], …)``
+    convention, threaded through the scan carry.  Bit-identical to calling
+    the single-round function in a Python loop (same round body, scan just
+    removes per-round dispatch)."""
     if not (0 < cohort_size <= cfg.num_clients):
         raise ValueError(
             f"cohort_size {cohort_size} not in (0, {cfg.num_clients}]")
@@ -724,31 +816,20 @@ def make_cohort_scan(loss_fn: Callable, schedule: SamplingSchedule,
                                      **kw)
 
     adaptive = sampler is not None and sampler.adaptive
-    if adaptive:
-        def scan_fn(params, residuals, norms, client_batches, n_samples, ts,
-                    keys):
-            def body(carry, tk):
-                p, r, nm = carry
-                t, k = tk
-                p, r, nm, metrics = round_fn(p, r, nm, client_batches,
-                                             n_samples, t, k)
-                return (p, r, nm), metrics
+    uses_drift = cfg.client.objective.uses_drift
+    n_state = 2 + int(uses_drift) + int(adaptive)
 
-            (params, residuals, norms), metrics = jax.lax.scan(
-                body, (params, residuals, norms), (ts, keys))
-            return params, residuals, norms, metrics
-    else:
-        def scan_fn(params, residuals, client_batches, n_samples, ts, keys):
-            def body(carry, tk):
-                p, r = carry
-                t, k = tk
-                p, r, metrics = round_fn(p, r, client_batches, n_samples, t,
-                                         k)
-                return (p, r), metrics
+    def scan_fn(*args):
+        state = tuple(args[:n_state])
+        client_batches, n_samples, ts, keys = args[n_state:]
 
-            (params, residuals), metrics = jax.lax.scan(
-                body, (params, residuals), (ts, keys))
-            return params, residuals, metrics
+        def body(carry, tk):
+            t, k = tk
+            out = round_fn(*carry, client_batches, n_samples, t, k)
+            return tuple(out[:-1]), out[-1]
+
+        state, metrics = jax.lax.scan(body, state, (ts, keys))
+        return (*state, metrics)
 
     return scan_fn
 
@@ -821,9 +902,11 @@ def make_store_compute(loss_fn: Callable, cfg: FederatedConfig, *,
     the residual gather already happened outside the program, so this is
     the pure sweep — local updates → wire round-trip → adversary
     injection.  Returns ``compute(params, cohort_res, cohort_batches,
-    cohort_ids, mask_key) -> dict`` with keys ``uploads`` / ``wired`` /
-    ``attacked`` / ``new_res`` / ``losses`` (same meanings as
-    :func:`make_cohort_compute`'s).  Per-client mask keys are row i of
+    cohort_ids, mask_key, cohort_drift=None) -> dict`` with keys
+    ``uploads`` / ``wired`` / ``attacked`` / ``new_res`` / ``new_drift`` /
+    ``losses`` (same meanings as :func:`make_cohort_compute`'s;
+    ``cohort_drift`` carries the pre-gathered FedDyn drift rows when the
+    objective uses them).  Per-client mask keys are row i of
     ``split(mask_key, M)`` exactly as in every other engine, so client i's
     masking draw does not depend on which execution form ran it.
     """
@@ -833,19 +916,21 @@ def make_store_compute(loss_fn: Callable, cfg: FederatedConfig, *,
         adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
                           jnp.float32)
 
-    def compute(params, cohort_res, cohort_batches, cohort_ids, mask_key):
+    def compute(params, cohort_res, cohort_batches, cohort_ids, mask_key,
+                cohort_drift=None):
         M = cfg.num_clients
         mask_keys = jnp.take(
             jax.random.split(mask_key, M), cohort_ids, axis=0)
-        uploads, new_res, losses = stacked_client_update(
+        uploads, new_res, new_drift, losses = stacked_client_update(
             loss_fn, params, cohort_batches, mask_keys, cfg.client,
-            cohort_res, cfg.error_feedback)
+            cohort_res, cfg.error_feedback, cohort_drift)
         wired = roundtrip_stacked(codec, uploads)
         attacked = _attack_payload(attack, wired, adv, mask_key, M,
                                    cohort_ids=cohort_ids)
         return {
             "uploads": uploads,
             "new_res": new_res,
+            "new_drift": new_drift,
             "losses": losses,
             "wired": wired,
             "attacked": attacked,
@@ -867,7 +952,8 @@ class StoreRound:
     body: Callable     # cohort-shaped barrier; see make_store_round
     adaptive: bool     # body consumes/updates the (M,) norm EMA
     with_drop: bool    # round key splits 3 ways (hetero dropout draw)
-    error_feedback: bool  # new_rows/commit are meaningful (scatter needed)
+    error_feedback: bool  # residual rows need scattering back
+    uses_drift: bool = False  # body consumes/emits FedDyn drift rows
 
 
 def make_store_round(loss_fn: Callable, schedule: SamplingSchedule,
@@ -876,15 +962,19 @@ def make_store_round(loss_fn: Callable, schedule: SamplingSchedule,
                      attack=None) -> StoreRound:
     """Store-form sibling of :func:`make_cohort_round`.
 
-    Same math as the generalized cohort body, but residual gather/scatter
-    are OUTSIDE the program: ``body(params, cohort_res, cohort_batches,
-    cohort_ids, part, weights, norms, mask_key, drop_key) -> (new_params,
-    new_rows, commit, norm_upd, metrics)`` where ``new_rows`` are the
-    finalized post-round residual candidates (wire-loss feedback already
-    folded in), ``commit`` is the per-cohort-row "this upload applied"
-    mask the store's scatter gates on, and ``norm_upd`` is the cohort's
-    updated norm-EMA rows (None for non-adaptive samplers; rows with no
-    arrival carry the old value, so setting them back is a no-op).
+    Same math as the generalized cohort body, but state gather/scatter
+    are OUTSIDE the program: ``body(params, cohort_res, cohort_drift,
+    cohort_batches, cohort_ids, part, weights, norms, mask_key, drop_key)
+    -> (new_params, new_rows, drift_rows, commit, norm_upd, metrics)``
+    where ``new_rows`` are the finalized post-round residual candidates
+    (wire-loss feedback already folded in), ``drift_rows`` the post-round
+    FedDyn drift candidates (None unless the objective uses drift),
+    ``commit`` is the per-cohort-row "this upload applied" mask
+    (``arrived × finite`` — ALWAYS computed; the driver gates the residual
+    scatter on ``error_feedback`` and the drift scatter on ``uses_drift``),
+    and ``norm_upd`` is the cohort's updated norm-EMA rows (None for
+    non-adaptive samplers; rows with no arrival carry the old value, so
+    setting them back is a no-op).
 
     Unlike the in-program engines there is no separate plain path: the
     generalized body IS bit-exact for plain rounds too — the uniform
@@ -906,11 +996,13 @@ def make_store_round(loss_fn: Callable, schedule: SamplingSchedule,
         adv = jnp.asarray(attack.adversary_mask(cfg.num_clients),
                           jnp.float32)
 
-    def body(params, cohort_res, cohort_batches, cohort_ids, part, weights,
-             norms, mask_key, drop_key):
-        c = compute(params, cohort_res, cohort_batches, cohort_ids, mask_key)
+    def body(params, cohort_res, cohort_drift, cohort_batches, cohort_ids,
+             part, weights, norms, mask_key, drop_key):
+        c = compute(params, cohort_res, cohort_batches, cohort_ids, mask_key,
+                    cohort_drift)
         uploads, new_res, wired = c["uploads"], c["new_res"], c["wired"]
         losses, payload = c["losses"], c["attacked"]
+        drift_rows = c["new_drift"]
         finite = _finite_rows(payload)
         arrived, weights = _apply_dropout(part, weights, drop, drop_key,
                                           smp.normalize)
@@ -923,14 +1015,12 @@ def make_store_round(loss_fn: Callable, schedule: SamplingSchedule,
         w_c = gather(weights) * finite
         new_params = agg_fn(params, _zero_rows(payload, finite), w_c,
                             cfg.client.upload)
-        commit = jnp.zeros_like(valid)
+        commit = arr_c * finite
         if cfg.error_feedback:
             # EF feedback on the HONEST (uploads, wired) pair, exactly as
             # in the in-program engines.
             if wired is not uploads:
-                new_res = jax.tree.map(
-                    lambda r, u, w: r + (u - w), new_res, uploads, wired)
-            commit = arr_c * finite
+                new_res = _wire_feedback(new_res, uploads, wired)
 
         norm_upd = None
         if smp.adaptive:
@@ -955,8 +1045,9 @@ def make_store_round(loss_fn: Callable, schedule: SamplingSchedule,
             metrics["part_mask"] = part
             metrics["arrived_mask"] = arrived
             metrics["num_arrived"] = jnp.sum(arrived)
-        return new_params, new_res, commit, norm_upd, metrics
+        return new_params, new_res, drift_rows, commit, norm_upd, metrics
 
     return StoreRound(select=select, body=body, adaptive=smp.adaptive,
                       with_drop=drop is not None,
-                      error_feedback=cfg.error_feedback)
+                      error_feedback=cfg.error_feedback,
+                      uses_drift=cfg.client.objective.uses_drift)

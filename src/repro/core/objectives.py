@@ -1,0 +1,158 @@
+"""Local objectives: what each client minimizes besides the task loss.
+
+Under non-IID fleets the paper's two levers (dynamic sampling, selective
+masking) cut bytes-per-round but *client drift* degrades bytes-to-target-
+loss: each client's local optimum pulls Θ away from the population optimum,
+so sparse rounds buy less progress.  This module adds the standard drift
+corrections as a third strategy axis, ``FedStrategy.objective``:
+
+* ``none``    — plain FedAvg local loss, **bit-identical to the historical
+  path**: an inactive objective returns the caller's ``loss_fn`` object
+  itself, so the traced program is literally unchanged (no ``+ 0·x`` term
+  that could flip signed zeros through autodiff).
+* ``prox(mu)`` — FedProx (Li et al.): local loss ``L(w) + (mu/2)·‖w − Θ_t‖²``.
+  Stateless; pulls every local trajectory back toward the round's global
+  model.
+* ``dyn(alpha)`` — FedDyn (Acar et al.), client-side dynamic regularizer:
+  local loss ``L(w) − ⟨h_k, w⟩ + (alpha/2)·‖w − Θ_t‖²`` with a **per-client
+  drift vector** ``h_k`` updated after local training as
+  ``h_k ← h_k − alpha·(θ_k − Θ_t)``.  The drift state is a second
+  O(M × model) per-client array and rides the client-state store
+  (``repro.core.client_store``) next to the EF residuals — same slot
+  directory, same evict-to-zero semantics (DESIGN.md §12).
+
+Degeneration contract (property-tested in tests/test_equivalence.py):
+``prox(0.0)`` and ``dyn(0.0)`` are *inactive* — :meth:`localize` is a
+Python-level identity and :attr:`uses_drift` is False, so they produce
+bit-identical programs to ``none`` on every engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["LocalObjective"]
+
+
+def _sq_dist(params: PyTree, anchor: PyTree) -> jnp.ndarray:
+    """‖params − anchor‖² summed over every leaf (float32 accumulate)."""
+    return sum(jnp.sum(jnp.square((p - a).astype(jnp.float32)))
+               for p, a in zip(jax.tree_util.tree_leaves(params),
+                               jax.tree_util.tree_leaves(anchor)))
+
+
+def _inner(a: PyTree, b: PyTree) -> jnp.ndarray:
+    """⟨a, b⟩ summed over every leaf (float32 accumulate)."""
+    return sum(jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalObjective:
+    """The client-side objective axis (see module docstring).
+
+    ``kind`` ∈ {"none", "prox", "dyn"}; ``mu`` is FedProx's proximal
+    strength, ``alpha`` FedDyn's regularizer strength.  A zero strength
+    makes the objective inactive — statically, at Python level — so the
+    μ=0 / α=0 degenerations are bit-identical to ``none``.
+    """
+
+    kind: str = "none"          # none | prox | dyn
+    mu: float = 0.0             # FedProx proximal strength
+    alpha: float = 0.0          # FedDyn regularizer strength
+
+    def __post_init__(self):
+        if self.kind not in ("none", "prox", "dyn"):
+            raise ValueError(f"unknown objective kind {self.kind!r}")
+        if self.mu < 0.0:
+            raise ValueError(f"mu must be >= 0, got {self.mu}")
+        if self.alpha < 0.0:
+            raise ValueError(f"alpha must be >= 0, got {self.alpha}")
+
+    # ---- constructors ----------------------------------------------------
+    @classmethod
+    def none(cls) -> "LocalObjective":
+        """Plain FedAvg local loss (the default)."""
+        return cls()
+
+    @classmethod
+    def prox(cls, mu: float) -> "LocalObjective":
+        """FedProx: ``L(w) + (mu/2)·‖w − Θ_t‖²``."""
+        return cls(kind="prox", mu=mu)
+
+    @classmethod
+    def dyn(cls, alpha: float) -> "LocalObjective":
+        """FedDyn (client-side): ``L(w) − ⟨h_k, w⟩ + (alpha/2)·‖w − Θ_t‖²``
+        with per-client drift state ``h_k ← h_k − alpha·delta_k``."""
+        return cls(kind="dyn", alpha=alpha)
+
+    # ---- static properties ----------------------------------------------
+    @property
+    def active(self) -> bool:
+        """True when the objective changes the local loss at all.  A zero
+        strength is *inactive*: the degeneration contract requires the
+        unmodified loss object, not a ``+ 0·x`` term."""
+        if self.kind == "prox":
+            return self.mu > 0.0
+        if self.kind == "dyn":
+            return self.alpha > 0.0
+        return False
+
+    @property
+    def uses_drift(self) -> bool:
+        """True when the objective carries per-client drift state the
+        engines must thread (and the store must hold)."""
+        return self.kind == "dyn" and self.alpha > 0.0
+
+    # ---- the math --------------------------------------------------------
+    def localize(self, loss_fn: Callable, global_params: PyTree,
+                 drift: Optional[PyTree] = None) -> Callable:
+        """The loss the client actually minimizes this round.
+
+        Inactive objectives return ``loss_fn`` ITSELF (the same Python
+        object), so the traced program is bit-identical to the plain path.
+        ``drift`` is the client's ``h_k`` tree (required iff
+        :attr:`uses_drift`).
+        """
+        if not self.active:
+            return loss_fn
+        if self.kind == "prox":
+            mu = self.mu
+
+            def prox_loss(params, batch):
+                return (loss_fn(params, batch)
+                        + 0.5 * mu * _sq_dist(params, global_params))
+
+            return prox_loss
+
+        if drift is None:
+            raise ValueError(
+                "dyn objective requires the client's drift state; thread "
+                "it through stacked_client_update(stacked_drift=...)")
+        alpha = self.alpha
+
+        def dyn_loss(params, batch):
+            return (loss_fn(params, batch)
+                    - _inner(drift, params)
+                    + 0.5 * alpha * _sq_dist(params, global_params))
+
+        return dyn_loss
+
+    def update_drift(self, drift: Optional[PyTree],
+                     delta: PyTree) -> Optional[PyTree]:
+        """Post-round drift update ``h ← h − alpha·delta`` where ``delta``
+        is the client's HONEST pre-mask local delta (``θ_k − Θ_t``).
+        Returns None when the objective carries no drift."""
+        if not self.uses_drift:
+            return None
+        alpha = self.alpha
+        return jax.tree.map(
+            lambda h, d: (h - alpha * d.astype(h.dtype)).astype(h.dtype),
+            drift, delta)

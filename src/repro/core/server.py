@@ -179,9 +179,14 @@ class FederatedServer:
         # sharded store holds residuals only inside its retention window
         # and routes sync rounds through _run_store.
         self._adaptive = strategy.sampler.adaptive
+        # FedDyn's per-client drift vector is a SECOND O(M × model) state
+        # tree riding the same store as the residuals (DESIGN.md §12).
+        self._uses_drift = self.cfg.client.objective.uses_drift
         if store is None:
+            extra = {"drift": init_params} if self._uses_drift else None
             store = DenseStore(num_clients, init_params,
-                               track_norms=self._adaptive)
+                               track_norms=self._adaptive,
+                               extra_trees=extra)
         if store.num_clients != num_clients:
             raise ValueError(
                 f"store was built for {store.num_clients} clients but the "
@@ -190,6 +195,10 @@ class FederatedServer:
             raise ValueError(
                 f"strategy {strategy.name!r} uses an adaptive sampler; "
                 "build the store with track_norms=True")
+        if self._uses_drift and "drift" not in store.trees:
+            raise ValueError(
+                f"strategy {strategy.name!r} carries FedDyn drift state; "
+                "build the store with extra_trees={'drift': init_params}")
         if engine == "full" and store.kind != "dense":
             raise ValueError(
                 "engine='full' materializes every client's state per round "
@@ -242,6 +251,16 @@ class FederatedServer:
     @_residuals.setter
     def _residuals(self, value: PyTree) -> None:
         self.store.set_dense(value)
+
+    @property
+    def _drift(self) -> PyTree:
+        """Dense ``(M, …)`` view of the FedDyn drift tree (same caveats
+        as :attr:`_residuals`)."""
+        return self.store.dense_view("drift")
+
+    @_drift.setter
+    def _drift(self, value: PyTree) -> None:
+        self.store.set_dense(value, tree="drift")
 
     @property
     def _norms(self) -> Optional[jnp.ndarray]:
@@ -374,19 +393,27 @@ class FederatedServer:
             else:
                 t_arg = jnp.asarray(ts[0], jnp.float32)
                 key_arg = subs[0]
+            # Engine-wide state convention: (params, residuals[, drift]
+            # [, norms]) — optional slots appear only when the strategy
+            # carries that state, so historical programs are unchanged.
+            state = [self.params, self._residuals]
+            if self._uses_drift:
+                state.append(self._drift)
             if self._adaptive:
-                args = (self.params, self._residuals, self._norms,
-                        client_batches, n_samples, t_arg, key_arg)
-            else:
-                args = (self.params, self._residuals, client_batches,
-                        n_samples, t_arg, key_arg)
+                state.append(self._norms)
+            args = (*state, client_batches, n_samples, t_arg, key_arg)
             compiled, compile_s = self._get_compiled(bucket, seg_len, args)
             t0 = time.perf_counter()
+            out = compiled(*args)
+            self.params, self._residuals = out[0], out[1]
+            i = 2
+            if self._uses_drift:
+                self._drift = out[i]
+                i += 1
             if self._adaptive:
-                (self.params, self._residuals, self._norms,
-                 metrics) = compiled(*args)
-            else:
-                self.params, self._residuals, metrics = compiled(*args)
+                self._norms = out[i]
+                i += 1
+            metrics = out[i]
             jax.block_until_ready(self.params)
             wall = time.perf_counter() - t0
 
@@ -549,6 +576,8 @@ class FederatedServer:
             part, weights, cohort_ids = sel_fn(*sel_args)
             ids_np = np.asarray(cohort_ids)
             cohort_res = store.gather(ids_np)
+            cohort_drift = (store.gather(ids_np, tree="drift")
+                            if prog.uses_drift else None)
             if provider is not None:
                 cohort_batches = provider(ids_np)
             else:
@@ -557,13 +586,14 @@ class FederatedServer:
                     client_batches)
             gather_s = time.perf_counter() - t0
 
-            body_args = (self.params, cohort_res, cohort_batches, cohort_ids,
-                         part, weights, norms, mask_key, drop_key)
+            body_args = (self.params, cohort_res, cohort_drift,
+                         cohort_batches, cohort_ids, part, weights, norms,
+                         mask_key, drop_key)
             body_fn, body_compile_s = self._aot("store-body", bucket,
                                                 prog.body, body_args)
             compile_s += body_compile_s
             t0 = time.perf_counter()
-            (self.params, new_rows, commit, norm_upd,
+            (self.params, new_rows, drift_rows, commit, norm_upd,
              metrics) = body_fn(*body_args)
             jax.block_until_ready(self.params)
             wall = gather_s + (time.perf_counter() - t0)
@@ -572,8 +602,11 @@ class FederatedServer:
             # Θ_t went out to the true participants this round — the
             # version state cross-round staleness measures against.
             store.mark_dispatched(ids_np[part_np[ids_np] > 0], t)
+            commit_np = np.asarray(commit)
             if prog.error_feedback:
-                store.scatter(ids_np, new_rows, np.asarray(commit), t)
+                store.scatter(ids_np, new_rows, commit_np, t)
+            if prog.uses_drift:
+                store.scatter(ids_np, drift_rows, commit_np, t, tree="drift")
             if prog.adaptive:
                 store.update_norms(ids_np, norm_upd)
 

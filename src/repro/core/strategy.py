@@ -65,6 +65,7 @@ from repro.core.federated import (FederatedConfig, fedavg_aggregate,
                                   make_federated_round, make_store_round)
 from repro.core.hetero import HeteroModel
 from repro.core.masking import MaskingConfig
+from repro.core.objectives import LocalObjective
 from repro.core.sampling import (ClientSampler, DynamicSampling,
                                  ImportanceSampler, SamplingSchedule,
                                  StaticSampling, UniformSampler)
@@ -290,6 +291,7 @@ class FedStrategy:
     momentum: float = 0.0
     upload: str = "delta"       # delta | zero (Alg. 4 literal)
     error_feedback: bool = False
+    objective: LocalObjective = LocalObjective()
 
     # ---- derived configs -------------------------------------------------
     def client_config(self) -> ClientConfig:
@@ -298,7 +300,8 @@ class FedStrategy:
                             learning_rate=self.learning_rate,
                             momentum=self.momentum,
                             masking=self.masking.masking_config(),
-                            upload=self.upload)
+                            upload=self.upload,
+                            objective=self.objective)
 
     def federated_config(self, num_clients: int) -> FederatedConfig:
         """The population-level round config for ``num_clients`` clients."""
@@ -557,6 +560,30 @@ register(FedStrategy(
     async_cfg=AsyncConfig(buffer_frac=0.5, staleness_beta=0.5,
                           deadline_quantile=0.75, max_retries=3,
                           backoff_s=0.5, jitter_sigma=0.25)))
+
+# ---- local-objective presets (DESIGN.md §12) ------------------------------
+# "fig5-prox": fig5's operating point with the FedProx proximal term
+# (mu = 0.1): local loss L(w) + (mu/2)·||w − Θ_t||², damping client drift
+# under heterogeneous data while leaving the wire path untouched.
+register(get("fig5").replace(
+    name="fig5-prox",
+    objective=LocalObjective.prox(0.1)))
+
+# "fig5-dyn": fig5 under FedDyn (alpha = 0.1): local loss
+# L(w) − ⟨h_k, w⟩ + (alpha/2)·||w − Θ_t||² with the per-client drift
+# vector h_k ← h_k − alpha·delta living in the client-state store
+# (extra tree "drift"; DESIGN.md §12), updated on the HONEST pre-mask
+# delta so masking never corrupts the drift dynamics.
+register(get("fig5").replace(
+    name="fig5-dyn",
+    objective=LocalObjective.dyn(0.1)))
+
+# "noniid-dyn": the non-IID flagship — fig5-dyn with importance-sampled
+# client selection (norm-tracked, Horvitz-Thompson reweighted), the
+# operating point benchmarks/noniid.py sweeps over Dirichlet partitions.
+register(get("fig5-dyn").replace(
+    name="noniid-dyn",
+    sampler=ImportanceSampler()))
 
 # ---- Byzantine-robustness presets (DESIGN.md §9) --------------------------
 # All three run fig5's sparse operating point (beta = 0.1, gamma = 0.5, COO

@@ -4,6 +4,7 @@ from repro.data.synthetic import (
     ImageDataset, TextDataset, class_gaussian_images, markov_text,
 )
 from repro.data.partition import (
-    iid_partition_images, noniid_partition_images, partition_text,
+    iid_partition_images, noniid_partition_images,
+    dirichlet_partition_images, partition_text,
 )
 from repro.data.loader import tokens_for_training, batched_stream

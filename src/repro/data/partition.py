@@ -16,7 +16,8 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["iid_partition_images", "noniid_partition_images", "partition_text"]
+__all__ = ["iid_partition_images", "noniid_partition_images",
+           "dirichlet_partition_images", "partition_text"]
 
 
 def _batch_clients(x: np.ndarray, y: np.ndarray, num_clients: int,
@@ -57,6 +58,55 @@ def noniid_partition_images(x: np.ndarray, y: np.ndarray, num_clients: int,
         perm = rng.permutation(cx.shape[0])
         xs.append(cx[perm])
         ys.append(cy[perm])
+    x = np.stack(xs).reshape((-1,) + x.shape[1:])
+    y = np.stack(ys).reshape(-1)
+    return _batch_clients(x, y, num_clients, batch_size)
+
+
+def dirichlet_partition_images(x: np.ndarray, y: np.ndarray, num_clients: int,
+                               batch_size: int, alpha: float = 0.5,
+                               seed: int = 0):
+    """Dirichlet label-skew non-IID (Hsu et al. 2019): each client draws a
+    label distribution p_c ~ Dir(alpha) and fills its shard by sampling
+    class counts ~ Multinomial(per_client, p_c) from class-sorted pools.
+
+    ``alpha`` tunes the skew continuously — alpha -> inf recovers IID,
+    alpha -> 0 approaches one-class-per-client — which is what the
+    non-IID benchmark grid (benchmarks/noniid.py) sweeps.  Pools cycle on
+    exhaustion so every client still gets exactly ``per_client`` samples
+    (the stacked-leaf layout needs equal shard sizes).
+    """
+    if alpha <= 0.0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y)
+    pools = {c: rng.permutation(np.flatnonzero(y == c)) for c in classes}
+    cursor = {c: 0 for c in classes}
+    per_client = (x.shape[0] // num_clients // batch_size) * batch_size
+    if per_client == 0:
+        raise ValueError("not enough samples per client for one batch")
+
+    def take(c, n):
+        pool = pools[c]
+        out = np.empty((n,), np.int64)
+        filled = 0
+        while filled < n:
+            start = cursor[c]
+            grab = min(n - filled, pool.shape[0] - start)
+            out[filled:filled + grab] = pool[start:start + grab]
+            cursor[c] = (start + grab) % pool.shape[0]
+            filled += grab
+        return out
+
+    xs, ys = [], []
+    for _ in range(num_clients):
+        p = rng.dirichlet(np.full(classes.shape[0], alpha))
+        counts = rng.multinomial(per_client, p)
+        idx = np.concatenate([take(c, n)
+                              for c, n in zip(classes, counts) if n > 0])
+        idx = idx[rng.permutation(idx.shape[0])]
+        xs.append(x[idx])
+        ys.append(y[idx])
     x = np.stack(xs).reshape((-1,) + x.shape[1:])
     y = np.stack(ys).reshape(-1)
     return _batch_clients(x, y, num_clients, batch_size)

@@ -319,7 +319,8 @@ def topk_encode_pytree(tree: PyTree, gamma: float, *,
             _, amax = seg.segmented_stats(x2d, seg_ids, S,
                                           interpret=interpret,
                                           slab_rows=slab_rows)
-            scales = jnp.maximum(amax[:, 0] / 127.0, 1e-12)
+            scales = jnp.maximum(amax[:, 0] * jnp.float32(1.0 / 127.0),
+                                 1e-12)
     else:
         k = jnp.asarray([max(1, int(round(gamma * ls.size)))
                          for ls in spec.leaves], jnp.int32)
@@ -336,7 +337,8 @@ def topk_encode_pytree(tree: PyTree, gamma: float, *,
                 lo, hi, cnt_lo, cnt_hi, cand, counts, k)
         tau = jnp.where(cnt_hi >= 1, hi, lo)
         if quantize:
-            scales = jnp.maximum(amax[:, 0] / 127.0, 1e-12)
+            scales = jnp.maximum(amax[:, 0] * jnp.float32(1.0 / 127.0),
+                                 1e-12)
 
     out2d, bm2d, _kept = seg.segmented_encode(
         x2d, seg_ids, tau, scales, interpret=interpret, slab_rows=slab_rows)

@@ -128,7 +128,12 @@ def test_async_degenerates_to_sync_bit_exact(case):
     """Ideal fleet, default AsyncConfig (K = m_t, no deadline, no faults):
     every round is dispatch + ONE flush of everyone at staleness zero, and
     the run is bit-identical to the sync cohort engine — including the
-    adaptive samplers' norm trackers and the EF residual state."""
+    adaptive samplers' norm trackers and the EF residual state.
+
+    The systematic version of this keystone lives in
+    tests/test_equivalence.py (preset x engine x store vs the full/dense
+    oracle); this test is kept for the hand-picked codec/sampler cases
+    it compares engine-to-engine rather than against the oracle."""
     M = 10
     loss_fn, params, batches, n = _problem(M)
     st = KEYSTONE_CASES[case]().replace(async_cfg=AsyncConfig())

@@ -150,16 +150,27 @@ def test_dense_vs_sharded_bit_exact(preset):
     """With retention covering every client, the sharded store reproduces
     the dense engines bit for bit — params, EF residuals, norm EMAs and
     version vectors — on every registry preset, under whichever engine the
-    preset targets (async presets run the async engine)."""
+    preset targets (async presets run the async engine).
+
+    The systematic version of this keystone lives in
+    tests/test_equivalence.py (preset x engine x store vs the full/dense
+    oracle); this test is kept because it runs each preset AS CONFIGURED
+    (hetero fleet, async schedule and all) rather than normalized to the
+    deterministic common ground, and checks the version vectors too."""
     strat = strategy.get(preset)
+    extra = ({"drift": _template()} if strat.objective.uses_drift else None)
     dense = _run(preset)
     sh = ShardedStore(M, _template(), retention=M,
-                      track_norms=strat.sampler.adaptive)
+                      track_norms=strat.sampler.adaptive,
+                      extra_trees=extra)
     sharded = _run(preset, store=sh)
     assert sh.evictions == 0
     _tree_equal(dense.params, sharded.params)
     _tree_equal(dense.store.residuals_dense(),
                 sharded.store.residuals_dense())
+    if strat.objective.uses_drift:
+        _tree_equal(dense.store.dense_view("drift"),
+                    sharded.store.dense_view("drift"))
     if strat.async_cfg is not None:
         # both backends share the async runner, which versions dispatches
         np.testing.assert_array_equal(dense.store.versions,
@@ -387,3 +398,92 @@ def test_crossround_dense_vs_sharded_bit_exact():
 def test_async_config_validates_max_round_stale():
     with pytest.raises(ValueError, match="max_round_stale"):
         AsyncConfig(max_round_stale=-1)
+
+
+# ---------------------------------------------------------------------------
+# shard_over on a REAL 8-device mesh (subprocess; forced host devices)
+# ---------------------------------------------------------------------------
+STORE_SHARD_CHECK = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+import jax.numpy as jnp
+import numpy as np
+from repro.core import FederatedServer, strategy
+from repro.core.client_store import DenseStore, ShardedStore
+
+M, NB, B, D = 32, 2, 4, 320
+key = jax.random.PRNGKey(0)
+xs = jax.random.normal(key, (M, NB, B, D))
+w_true = jnp.arange(1.0, D + 1.0)
+ys = jnp.einsum("mnbd,d->mnb", xs, w_true)
+params = {"w": jnp.zeros((D,)), "b": jnp.zeros(())}
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+batches = {"x": xs, "y": ys}
+n = np.full((M,), NB * B, np.float64)
+template = {"w": jnp.zeros((D,)), "b": jnp.zeros(())}
+
+def run(store):
+    strat = strategy.get("fig5-dyn", hetero=None, async_cfg=None,
+                         error_feedback=True, learning_rate=0.05)
+    s = FederatedServer.from_strategy(strat, loss_fn, params, M, seed=0,
+                                      engine="cohort", store=store)
+    s.run(batches, n, 3)
+    return s
+
+dense = run(DenseStore(M, template,
+                       extra_trees={"drift": template}))
+mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("data",))
+store = ShardedStore(M, template, retention=M,
+                     extra_trees={"drift": template})
+store.shard_over(mesh)
+# capture placement NOW: round scatters rebuild the pool arrays from jit
+# outputs, so shard_over's placement is a round-entry property
+pool_devs = {len(getattr(leaf.sharding, "device_set", set()))
+             for pool in store._pools.values()
+             for leaf in jax.tree_util.tree_leaves(pool)}
+sharded = run(store)
+
+def dmax(a, b):
+    return max(float(np.abs(np.asarray(x, np.float64)
+                            - np.asarray(y, np.float64)).max())
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+print(json.dumps({
+    "dparams": dmax(dense.params, sharded.params),
+    "dres": dmax(dense.store.dense_view("residuals"),
+                 sharded.store.dense_view("residuals")),
+    "ddrift": dmax(dense.store.dense_view("drift"),
+                   sharded.store.dense_view("drift")),
+    "evictions": store.evictions,
+    "pool_devices": sorted(pool_devs),
+}))
+"""
+
+
+def test_sharded_store_shard_over_8dev_subprocess():
+    """``ShardedStore.shard_over(mesh)`` on 8 forced host devices: the slot
+    pools (residuals AND the FedDyn drift tree) distribute their client
+    axis over the mesh, and 3 cohort rounds of fig5-dyn — gather, compute,
+    commit crossing a REAL device boundary each round — stay bit-identical
+    to the unsharded DenseStore run."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", STORE_SHARD_CHECK], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    # EVERY pool leaf (residuals and drift alike) spans all 8 devices
+    assert rec["pool_devices"] == [8], rec
+    assert rec["evictions"] == 0, rec
+    assert rec["dparams"] == 0.0, rec
+    assert rec["dres"] == 0.0, rec
+    assert rec["ddrift"] == 0.0, rec

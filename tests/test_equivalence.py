@@ -1,0 +1,261 @@
+"""The unified cross-engine equivalence matrix (DESIGN.md §3.5/§12).
+
+Every registry preset, normalized to the deterministic ideal fleet, must
+produce BIT-identical run state — params, EF residuals, adaptive-sampler
+norm EMAs and FedDyn drift — whichever engine executes it (full-population
+oracle / cohort / async-degenerate) and whichever store backend holds the
+client state (dense / sharded with retention covering the fleet).
+
+This consolidates the per-engine keystones that grew one PR at a time —
+cohort == oracle (tests/test_cohort.py), async-degenerate == sync
+(tests/test_async.py), dense == sharded (tests/test_client_store.py) —
+into ONE (preset × engine × store) matrix anchored at the (full, dense)
+oracle, so a new preset or a new engine axis is covered by adding one
+parametrize value, not a new ad-hoc test.
+
+Plus the LocalObjective degeneration/conservation properties:
+
+* ``prox(0)`` / ``dyn(0)`` are bit-identical to plain fedavg on every
+  engine (the objectives module's static-inactivity contract);
+* FedDyn drift obeys the same dropout conservation law as EF residuals
+  (test_hetero.py): a dropped client's drift row is untouched.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+from repro.core import FederatedServer, LocalObjective, strategy
+from repro.core.async_engine import AsyncConfig
+from repro.core.client_store import ShardedStore
+from repro.core.codecs import ChainCodec, FusedSparseCodec, Int8Codec
+from repro.core.hetero import HeteroModel
+from repro.core.sampling import StaticSampling
+from repro.core.strategy import build_round
+
+# D exceeds the presets' masking/codec min_leaf_size (256) so selective
+# masking binds and EF residuals / drift rows carry real mass; with a
+# smaller leaf every state comparison would be vacuously 0 == 0.
+M, NB, B, D = 16, 2, 4, 320
+ROUNDS = 3
+
+
+def _problem(num_clients=M, seed=0):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (num_clients, NB, B, D))
+    w_true = jnp.arange(1.0, D + 1.0)
+    ys = jnp.einsum("mnbd,d->mnb", xs, w_true)
+    params = {"w": jnp.zeros((D,)), "b": jnp.zeros(())}
+
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"] + p["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    return loss_fn, params, {"x": xs, "y": ys}, np.full(
+        (num_clients,), NB * B, np.float64)
+
+
+def _template():
+    return {"w": jnp.zeros((D,)), "b": jnp.zeros(())}
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _tree_close(a, b, **tol):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **tol)
+
+
+def _lossy_wire(codec):
+    """True when the preset's wire loses bits (int8 quantisation).
+
+    Lossless wires (identity / COO / bitmap under the mask contract) decode
+    to the EXACT upload bits, so ``u - w == 0`` in every compiled program
+    and the cross-engine contract is bitwise.  Lossy wires dequantise
+    ``q * scale``, and XLA:CPU — which deletes ``optimization_barrier``
+    during optimization — is free to contract/rearrange that chain
+    differently per program shape, so the EF wire-loss term can wobble by
+    ~1 ulp between the in-program engines and the store-form body.  Those
+    presets get a tight tolerance instead (see DESIGN.md §12)."""
+    if isinstance(codec, Int8Codec):
+        return True
+    if isinstance(codec, ChainCodec):
+        return any(_lossy_wire(s) for s in codec.stages)
+    if isinstance(codec, FusedSparseCodec):
+        return codec.quantized
+    return False
+
+
+def _normalize(name):
+    """A preset pinned to the deterministic common ground every engine
+    shares: ideal fleet (no hetero clock/drops), sync schedule (the async
+    axis is added back per-combo as the DEGENERATE AsyncConfig), error
+    feedback on so residual state is live, one fixed lr."""
+    return strategy.get(name, hetero=None, async_cfg=None,
+                        error_feedback=True, learning_rate=0.05)
+
+
+# (engine, store) combos measured against the (full, dense) anchor.  The
+# full oracle engine closes over dense (M, …) state by construction, so
+# (full, sharded) is rejected by the server and is not a matrix cell.
+COMBOS = [("full", "dense"), ("cohort", "dense"), ("cohort", "sharded"),
+          ("async", "dense"), ("async", "sharded")]
+
+
+def _run_cell(name, engine, store_kind, seed=0):
+    loss_fn, params, batches, n = _problem()
+    strat = _normalize(name)
+    if engine == "async":
+        # K = m_t, no deadline, no faults: dispatch + one flush of
+        # everyone at staleness zero — the degenerate async round.
+        strat = strat.replace(async_cfg=AsyncConfig())
+    store = None
+    if store_kind == "sharded":
+        extra = ({"drift": _template()}
+                 if strat.objective.uses_drift else None)
+        store = ShardedStore(M, _template(), retention=M,
+                             track_norms=strat.sampler.adaptive,
+                             extra_trees=extra)
+    server = FederatedServer.from_strategy(
+        strat, loss_fn, params, M, seed=seed, engine=engine, store=store)
+    server.run(batches, n, ROUNDS)
+    if store is not None:
+        assert store.evictions == 0
+    return server
+
+
+@functools.lru_cache(maxsize=None)
+def _anchor(name):
+    return _run_cell(name, "full", "dense")
+
+
+@pytest.mark.parametrize("engine,store_kind", COMBOS[1:],
+                         ids=[f"{e}-{s}" for e, s in COMBOS[1:]])
+@pytest.mark.parametrize("preset", strategy.names())
+def test_matrix_bit_exact_vs_full_dense_oracle(preset, engine, store_kind):
+    ref = _anchor(preset)
+    got = _run_cell(preset, engine, store_kind)
+    strat = _normalize(preset)
+    if _lossy_wire(strat.codec):
+        eq = functools.partial(_tree_close, rtol=1e-4, atol=1e-4)
+    else:
+        eq = _tree_equal
+    eq(ref.params, got.params)
+    eq(ref._residuals, got._residuals)
+    if strat.sampler.adaptive:
+        eq(np.asarray(ref._norms), np.asarray(got._norms))
+    if strat.objective.uses_drift:
+        eq(ref.store.dense_view("drift"),
+           got.store.dense_view("drift"))
+    ref_loss = [r.mean_loss for r in ref.history]
+    got_loss = [r.mean_loss for r in got.history]
+    if engine == "async" or _lossy_wire(strat.codec):
+        # async meters loss host-side per flush; lossy wires carry the
+        # per-program dequantisation wobble: close, not bitwise
+        np.testing.assert_allclose(got_loss, ref_loss, rtol=1e-5,
+                                   atol=1e-7, equal_nan=True)
+    else:
+        np.testing.assert_array_equal(got_loss, ref_loss)
+
+
+# ---------------------------------------------------------------------------
+# degeneration: mu = 0 / alpha = 0 ARE plain fedavg, on every engine
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=6)
+@given(st.sampled_from(["prox", "dyn"]),
+       st.sampled_from([e for e, _ in COMBOS]))
+def test_zero_strength_objective_is_bitwise_fedavg(kind, engine):
+    """``prox(0.0)`` / ``dyn(0.0)`` must run the IDENTICAL program as
+    ``none``: localize() returns the caller's loss object and no drift
+    state exists, so every engine reproduces plain fedavg to the bit."""
+    zero = (LocalObjective.prox(0.0) if kind == "prox"
+            else LocalObjective.dyn(0.0))
+    assert not zero.active and not zero.uses_drift
+
+    def run(objective):
+        loss_fn, params, batches, n = _problem()
+        strat = _normalize("fig5").replace(objective=objective)
+        if engine == "async":
+            strat = strat.replace(async_cfg=AsyncConfig())
+        s = FederatedServer.from_strategy(strat, loss_fn, params, M,
+                                          seed=0, engine=engine)
+        s.run(batches, n, ROUNDS)
+        return s
+
+    plain = run(LocalObjective.none())
+    zeroed = run(zero)
+    _tree_equal(plain.params, zeroed.params)
+    _tree_equal(plain._residuals, zeroed._residuals)
+    assert "drift" not in zeroed.store.trees
+
+
+@settings(deadline=None, max_examples=4)
+@given(st.sampled_from([0.05, 0.3]), st.booleans())
+def test_active_objective_changes_the_math(strength, use_dyn):
+    """The complement of the degeneration contract: a NONZERO strength
+    must actually alter the trained params (the regularizer is live)."""
+    obj = (LocalObjective.dyn(strength) if use_dyn
+           else LocalObjective.prox(strength))
+    loss_fn, params, batches, n = _problem()
+
+    def run(objective):
+        strat = _normalize("fig5").replace(objective=objective)
+        s = FederatedServer.from_strategy(strat, loss_fn, params, M,
+                                          seed=0, engine="cohort")
+        s.run(batches, n, ROUNDS)
+        return s
+
+    plain = run(LocalObjective.none())
+    reg = run(obj)
+    diff = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+               for a, b in zip(jax.tree_util.tree_leaves(plain.params),
+                               jax.tree_util.tree_leaves(reg.params)))
+    assert diff > 0.0
+
+
+# ---------------------------------------------------------------------------
+# conservation: dropped clients keep their drift rows EXACTLY
+# ---------------------------------------------------------------------------
+def test_dropout_never_corrupts_drift_state():
+    """FedDyn mirror of test_hetero.py's EF-residual invariant: a
+    participant whose upload is dropped lost its whole local update, so
+    its drift row h_k must stay bit-identical — otherwise the dynamic
+    regularizer would remember an update the server never saw."""
+    loss_fn, params, batches, n = _problem(M)
+    st_ = strategy.get("fig5-dyn",
+                       sampling=StaticSampling(initial_rate=1.0),
+                       hetero=HeteroModel(profile="mobile", dropout=0.5),
+                       error_feedback=True, learning_rate=0.1)
+    residuals = jax.tree.map(
+        lambda p: 0.01 * jnp.ones((M,) + p.shape, p.dtype), params)
+    drift = jax.tree.map(
+        lambda p: 0.02 * jnp.ones((M,) + p.shape, p.dtype), params)
+    round_fn = jax.jit(build_round(st_, loss_fn, M, form="full"))
+    nj = jnp.asarray(n)
+
+    saw_drop = False
+    for seed in range(6):
+        _, new_res, new_drift, metrics = round_fn(
+            params, residuals, drift, batches, nj, jnp.float32(1.0),
+            jax.random.PRNGKey(seed))
+        part = np.asarray(metrics["part_mask"])
+        arrived = np.asarray(metrics["arrived_mask"])
+        dropped = (part > 0) & (arrived == 0)
+        saw_drop = saw_drop or dropped.any()
+        for trees in ((residuals, new_res), (drift, new_drift)):
+            for old, new in zip(jax.tree_util.tree_leaves(trees[0]),
+                                jax.tree_util.tree_leaves(trees[1])):
+                old, new = np.asarray(old), np.asarray(new)
+                np.testing.assert_array_equal(new[dropped], old[dropped])
+                # arrived clients DID advance the state
+                assert np.abs(new[arrived > 0] - old[arrived > 0]).max() > 0
+    assert saw_drop, "dropout=0.5 never dropped in 6 rounds?"

@@ -124,7 +124,7 @@ def test_upload_semantics_delta_equals_zero_when_unmasked():
     for upload in ("delta", "zero"):
         cfg = ClientConfig(local_epochs=1, learning_rate=0.05,
                            masking=MaskingConfig(mode="none"), upload=upload)
-        up, _, _ = client_update(
+        up, _, _, _ = client_update(
             loss_fn, params, jax.tree.map(lambda b: b[0], batches), key, cfg)
         agg = fedavg_aggregate(params, jax.tree.map(lambda u: u[None], up),
                                jnp.ones((1,)), upload)
